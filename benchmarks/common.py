@@ -1,0 +1,62 @@
+"""Shared benchmark fixtures: corpus, queries, ground truth, recall/QPS."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_estimator, exact_knn
+from repro.data.pipeline import synthetic_queries, synthetic_vectors
+
+CORPUS_N = 20000
+DIM = 96
+NQ = 64
+K = 10
+
+
+_cache: dict = {}
+
+
+def fixture():
+    if "corpus" not in _cache:
+        corpus = synthetic_vectors(CORPUS_N, DIM, seed=0, decay=0.06)
+        queries = synthetic_queries(NQ, DIM, corpus, seed=1)
+        gt_d, gt_i = exact_knn(jnp.asarray(queries), jnp.asarray(corpus), K)
+        _cache.update(corpus=corpus, queries=queries, gt=np.asarray(gt_i))
+    return _cache["corpus"], _cache["queries"], _cache["gt"]
+
+
+def recall(ids, gt) -> float:
+    ids = np.asarray(ids)
+    return float(np.mean([
+        len(set(ids[i].tolist()) & set(gt[i].tolist())) / gt.shape[1]
+        for i in range(len(gt))
+    ]))
+
+
+def estimator(method: str, corpus, **kw):
+    key = (method, tuple(sorted(kw.items())))
+    if key not in _cache:
+        _cache[key] = build_estimator(
+            method, corpus, jax.random.PRNGKey(7), **kw)
+    return _cache[key]
+
+
+def host_tables(est):
+    t = est.table
+    return (np.asarray(t.dims), np.asarray(t.eps), np.asarray(t.scale))
+
+
+def qps(fn, n_queries: int, *, repeats: int = 1) -> float:
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    dt = (time.perf_counter() - t0) / repeats
+    return n_queries / dt
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,31 @@
+"""Fig. 1: variance concentration (left) + eps_d curves (right), PCA vs ROP."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, fixture
+from repro.core.calibration import calibrate
+from repro.core.transforms import fit_pca, fit_random_orthogonal
+
+
+def main():
+    corpus, _, _ = fixture()
+    x = jnp.asarray(corpus)
+    t_pca = fit_pca(x)
+    t_rop = fit_random_orthogonal(jax.random.PRNGKey(0), x)
+    d = corpus.shape[1]
+    for frac in (0.1, 0.25, 0.5):
+        dd = max(1, int(d * frac))
+        v_pca = float(t_pca.cum_variances[dd - 1] / t_pca.cum_variances[-1])
+        v_rop = float(t_rop.cum_variances[dd - 1] / t_rop.cum_variances[-1])
+        emit(f"fig1.varfrac@{frac}", 0.0,
+             f"pca={v_pca:.3f};rop={v_rop:.3f};ratio={v_pca/max(v_rop,1e-9):.2f}")
+    e_pca = calibrate(t_pca, x, jax.random.PRNGKey(1), p_s=0.1, delta_d=8)
+    e_rop = calibrate(t_rop, x, jax.random.PRNGKey(1), p_s=0.1, delta_d=8)
+    for s in (1, 3, 6):
+        emit(f"fig1.eps@d{int(e_pca.dims[s])}", 0.0,
+             f"pca={float(e_pca.eps[s]):.3f};rop={float(e_rop.eps[s]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

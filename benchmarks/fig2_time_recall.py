@@ -1,0 +1,79 @@
+"""Fig. 2: QPS-recall tradeoff — IVF x {FDScanning, ADSampling, DADE}
+(host engine = honest CPU wall clock with real work-skipping) and the graph
+index on a subset.  Mirrors the paper's IVF/IVF+/IVF* and HNSW rows."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, estimator, fixture, host_tables, qps, recall
+from repro.core.dco_host import knn_search_host
+from repro.core import exact_knn
+from repro.index.graph import build_graph, search_graph
+from repro.index.ivf import build_ivf, search_ivf
+
+
+def ivf_host_search(corpus_rot, centroids, bucket_rows, bucket_ids, q_rot,
+                    n_probe, k, tables):
+    dims, eps, scale = tables
+    cd = ((q_rot[None, :] - centroids) ** 2).sum(1)
+    probe = np.argpartition(cd, n_probe)[:n_probe]
+    probe = probe[np.argsort(cd[probe])]
+    cand_rows = np.concatenate([bucket_rows[c] for c in probe], 0)
+    cand_ids = np.concatenate([bucket_ids[c] for c in probe], 0)
+    ids, dists, stats = knn_search_host(q_rot, cand_rows, k, dims, eps, scale,
+                                        wave=256)
+    valid = ids >= 0
+    return cand_ids[np.clip(ids, 0, len(cand_ids) - 1)], stats
+
+
+def main():
+    corpus, queries, gt = fixture()
+    k = gt.shape[1]
+    # IVF variants (cluster once per method)
+    for method in ("fdscanning", "adsampling", "dade"):
+        est = estimator(method, corpus, delta_d=32)
+        idx = build_ivf(corpus, estimator=est, n_clusters=128)
+        q_rot = np.asarray(est.rotate(jnp.asarray(queries)))
+        c_np = np.asarray(idx.centroids)
+        sizes = np.asarray(idx.bucket_sizes)
+        rows = [np.asarray(idx.buckets[c])[: sizes[c]] for c in range(len(sizes))]
+        ids = [np.asarray(idx.bucket_ids[c])[: sizes[c]] for c in range(len(sizes))]
+        tables = host_tables(est)
+        for n_probe in (4, 16, 48):
+            got = []
+            import time
+            t0 = time.perf_counter()
+            dims_frac = []
+            for qi in range(len(queries)):
+                out, stats = ivf_host_search(
+                    np.asarray(idx.buckets), c_np, rows, ids, q_rot[qi],
+                    n_probe, k, tables)
+                got.append(out)
+                dims_frac.append(stats["dims_fraction"])
+            dt = time.perf_counter() - t0
+            r = recall(np.stack(got), gt)
+            emit(f"fig2.ivf.{method}@probe{n_probe}", dt / len(queries) * 1e6,
+                 f"recall={r:.3f};qps={len(queries)/dt:.0f};"
+                 f"dims_frac={np.mean(dims_frac):.3f}")
+    # graph index (smaller corpus:host build is O(N^2-ish))
+    sub = corpus[:4000]
+    gt_d, gt_i = exact_knn(jnp.asarray(queries), jnp.asarray(sub), k)
+    import time
+    for method in ("adsampling", "dade"):
+        g = build_graph(sub, method=method, m=12, ef_construction=64, delta_d=32)
+        for ef in (32, 96):
+            qj = jnp.asarray(queries)
+            d_, i_, avg = search_graph(g, qj, k=k, ef=ef)  # compile
+            jax.block_until_ready(d_)
+            t0 = time.perf_counter()
+            d_, i_, avg = search_graph(g, qj, k=k, ef=ef)
+            jax.block_until_ready(d_)
+            dt = time.perf_counter() - t0
+            r = recall(np.asarray(i_), np.asarray(gt_i))
+            emit(f"fig2.graph.{method}@ef{ef}", dt / len(queries) * 1e6,
+                 f"recall={r:.3f};qps={len(queries)/dt:.0f};"
+                 f"avg_dims={float(np.mean(np.asarray(avg))):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Fig. 5: sensitivity of DADE to the expansion step size delta_d."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, estimator, fixture, host_tables, recall
+from repro.core.dco_host import knn_search_host
+
+
+def main():
+    corpus, queries, gt = fixture()
+    k = gt.shape[1]
+    for dd in (4, 16, 32, 64):
+        est = estimator("dade", corpus, delta_d=dd)
+        q_rot = np.asarray(est.rotate(jnp.asarray(queries)))
+        c_rot = np.asarray(est.rotate(jnp.asarray(corpus)))
+        dims, eps, scale = host_tables(est)
+        got, fracs = [], []
+        t0 = time.perf_counter()
+        for qi in range(len(queries)):
+            ids, _, stats = knn_search_host(q_rot[qi], c_rot, k, dims, eps,
+                                            scale, wave=2048)
+            got.append(ids)
+            fracs.append(stats["dims_fraction"])
+        dt = time.perf_counter() - t0
+        emit(f"fig5.dade@dd={dd}", dt / len(queries) * 1e6,
+             f"recall={recall(np.stack(got), gt):.3f};"
+             f"qps={len(queries)/dt:.0f};dims_frac={np.mean(fracs):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Pallas-kernel-level benchmark: tile-skip efficiency of the block screen.
+
+No TPU on this host, so instead of wall-clock we report the quantity the
+kernel's @pl.when early-exit converts into saved MXU cycles: the fraction of
+(candidate-tile x dim-block) work units skipped, at tile granularities the
+kernel actually uses.  Derived from the interpret-mode kernel's dims_used
+(bit-identical to TPU semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, estimator, fixture
+from repro.core import exact_knn
+from repro.kernels.ops import dco_screen_kernel
+
+
+def main():
+    corpus, queries, gt = fixture()
+    est = estimator("dade", corpus, delta_d=32)
+    q_rot = est.rotate(jnp.asarray(queries[:16]))
+    c_rot = est.rotate(jnp.asarray(corpus[:8192]))
+    gt_d, _ = exact_knn(jnp.asarray(queries[:16]), jnp.asarray(corpus), 10)
+    r_sq = jnp.asarray(np.asarray(gt_d)[:16, -1] ** 2)
+
+    for tile_c, block_d in ((128, 32), (128, 64), (256, 32)):
+        est_sq, passed, dims = dco_screen_kernel(
+            est, q_rot, c_rot, r_sq, interpret=True,
+            block_q=16, block_c=tile_c, block_d=block_d)
+        d_pad = int(np.ceil(corpus.shape[1] / block_d)) * block_d
+        s_count = d_pad // block_d
+        dims_np = np.asarray(dims)  # (Q, N)
+        # a tile processes block s iff ANY row in it is still active
+        n_tiles = c_rot.shape[0] // tile_c
+        tiles = dims_np.reshape(dims_np.shape[0], n_tiles, tile_c)
+        tile_blocks = np.ceil(tiles.max(axis=2) / block_d)  # blocks touched
+        frac_done = tile_blocks.sum() / (tile_blocks.size * s_count)
+        row_frac = dims_np.mean() / d_pad
+        emit(f"kernel.tileskip@c{tile_c}b{block_d}", 0.0,
+             f"tile_work_frac={frac_done:.3f};row_dims_frac={row_frac:.3f};"
+             f"pass_rate={float(jnp.mean(passed.astype(jnp.float32))):.4f};"
+             f"speedup_vs_fds_kernel={1.0/frac_done:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call is 0.0 for
+analysis-only rows).  Run: PYTHONPATH=src python -m benchmarks.run
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        fig1_variance, fig2_time_recall, fig3_feasibility,
+        fig4_ps_sensitivity, fig5_delta_d, kernel_bench,
+    )
+    mods = [fig1_variance, fig3_feasibility, fig4_ps_sensitivity,
+            fig5_delta_d, kernel_bench, fig2_time_recall]
+    print("name,us_per_call,derived")
+    for m in mods:
+        t0 = time.time()
+        m.main()
+        print(f"# {m.__name__} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

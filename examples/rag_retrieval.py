@@ -1,0 +1,57 @@
+"""Example 3: DADE as the retrieval stage of an LM serving stack.
+
+A (reduced) LM embeds a corpus of token sequences (mean-pooled hidden
+states); DADE screens the embedding index for each query sequence — the
+paper's technique as a first-class serving feature next to the model.
+
+    PYTHONPATH=src python examples/rag_retrieval.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core import build_estimator, exact_knn, knn_search_waves
+from repro.models.model import build_model
+
+
+def embed(model, params, tokens):
+    """Mean-pooled final hidden states as sequence embeddings."""
+    h, _, _ = model._backbone(params, {"tokens": tokens}, collect=False)
+    return jnp.mean(h.astype(jnp.float32), axis=1)
+
+
+def main():
+    cfg = reduced_config("codeqwen1.5-7b")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    key = jax.random.PRNGKey(1)
+    corpus_tokens = jax.random.randint(key, (2048, 32), 0, cfg.vocab_size)
+    emb = np.asarray(jax.jit(lambda t: embed(model, params, t))(corpus_tokens))
+    print(f"[embed] corpus embeddings {emb.shape}")
+
+    # queries = perturbed corpus rows (nearby in token space)
+    qidx = np.arange(0, 2048, 64)
+    q_tokens = np.asarray(corpus_tokens)[qidx].copy()
+    q_tokens[:, ::7] = (q_tokens[:, ::7] + 1) % cfg.vocab_size
+    q_emb = np.asarray(jax.jit(lambda t: embed(model, params, t))(
+        jnp.asarray(q_tokens)))
+
+    est = build_estimator("dade", emb, jax.random.PRNGKey(2), delta_d=8)
+    res = knn_search_waves(
+        est.rotate(jnp.asarray(q_emb)), est.rotate(jnp.asarray(emb)),
+        est.table, k=5, wave=1024)
+    _, gt = exact_knn(jnp.asarray(q_emb), jnp.asarray(emb), 5)
+    recall = np.mean([
+        len(set(np.asarray(res.ids)[i].tolist())
+            & set(np.asarray(gt)[i].tolist())) / 5
+        for i in range(len(qidx))])
+    self_hit = np.mean([qidx[i] in np.asarray(res.ids)[i] for i in range(len(qidx))])
+    print(f"[retrieve] recall@5 vs exact = {recall:.3f}; "
+          f"perturbed-self hit rate = {self_hit:.3f}; "
+          f"avg dims = {float(res.avg_dims):.1f}/{emb.shape[1]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Example 2: fault-tolerant LM training with an injected mid-run failure.
+
+Runs a reduced mamba2 config for 60 steps, kills step 35 once, and shows the
+runner restoring from the latest checkpoint and converging anyway.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import subprocess
+import sys
+
+cmd = [
+    sys.executable, "-m", "repro.launch.train",
+    "--arch", "mamba2-130m", "--reduced",
+    "--steps", "60", "--batch", "8", "--seq", "64",
+    "--ckpt-dir", "/tmp/repro_train_example", "--ckpt-every", "10",
+    "--fail-at", "35",
+]
+raise SystemExit(subprocess.call(cmd, env={"PYTHONPATH": "src", **__import__("os").environ}))

@@ -1,0 +1,169 @@
+"""Sharding-aware checkpointing (orbax is not installed; built from scratch).
+
+Layout per step:
+    <dir>/step_000123.tmp/            (written, fsync'd)
+        tree.msgpack                  (treedef + leaf metadata + sha256s)
+        leaf_00000.npy ...            (one file per leaf, host-gathered)
+    <dir>/step_000123/                (atomic rename — crash-safe commit)
+
+Features required at 1000-node scale, simulated faithfully at process scale:
+  * atomic commit (rename) — a dying writer never corrupts the latest ckpt
+  * async save — a background thread serializes while training continues
+    (the arrays are snapshotted with jax.device_get before handoff)
+  * integrity digests per leaf, verified on restore
+  * elastic restore — leaves are re-placed under *new* shardings
+    (``restore(..., shardings=...)``), so a job restarted on a smaller or
+    larger mesh re-shards transparently
+  * retention policy (keep last N)
+"""
+
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _tree_paths(tree: Any) -> list[str]:
+    paths, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return ["/".join(str(k) for k in kp) for kp, _ in paths]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: queue.Queue | None = None
+        self._worker: threading.Thread | None = None
+        self._errors: list[Exception] = []
+        if async_save:
+            self._q = queue.Queue(maxsize=2)
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    # ---- save ------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self._q is None or blocking:
+            self._write(step, host_tree)
+        else:
+            self._q.put((step, host_tree))
+
+    def wait(self) -> None:
+        if self._q is not None:
+            self._q.join()
+        if self._errors:
+            raise self._errors[0]
+
+    def _drain(self) -> None:
+        assert self._q is not None
+        while True:
+            step, tree = self._q.get()
+            try:
+                self._write(step, tree)
+            except Exception as e:  # surfaced on wait()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, host_tree: Any) -> None:
+        name = f"step_{step:09d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+
+        leaves, treedef = jax.tree.flatten(host_tree)
+        meta = {
+            "step": step,
+            "paths": _tree_paths(host_tree),
+            "leaves": [],
+        }
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            fn = os.path.join(tmp, f"leaf_{i:05d}.npy")
+            with open(fn, "wb") as f:
+                np.save(f, arr)
+                f.flush()
+                os.fsync(f.fileno())
+            meta["leaves"].append({
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
+            })
+        with open(os.path.join(tmp, "tree.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+
+    # ---- restore ---------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for fn in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", fn)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, *, shardings: Any | None = None,
+                verify: bool = True) -> Any:
+        """Restore into the structure of ``like``.
+
+        ``shardings`` (a parallel tree of jax.sharding.Sharding, or None)
+        controls placement — pass shardings built for the *current* mesh to
+        re-shard elastically.
+        """
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "tree.json")) as f:
+            meta = json.load(f)
+        like_leaves, treedef = jax.tree.flatten(like)
+        if len(like_leaves) != len(meta["leaves"]):
+            raise ValueError(
+                f"checkpoint has {len(meta['leaves'])} leaves, "
+                f"template has {len(like_leaves)}"
+            )
+        shard_leaves = (
+            jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
+            if shardings is not None else [None] * len(like_leaves)
+        )
+        out = []
+        for i, (tmpl, lm) in enumerate(zip(like_leaves, meta["leaves"])):
+            arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+            if verify:
+                digest = hashlib.sha256(arr.tobytes()).hexdigest()
+                if digest != lm["sha256"]:
+                    raise IOError(f"leaf {i} digest mismatch (corrupt checkpoint)")
+            if list(arr.shape) != list(np.shape(tmpl)):
+                raise ValueError(
+                    f"leaf {i}: ckpt shape {arr.shape} != template {np.shape(tmpl)}")
+            sh = shard_leaves[i]
+            out.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
+        return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,28 @@
+"""The paper's own serving workload: a pod-scale DADE-screened IVF/flat
+vector search service (corpus sharded over every mesh device)."""
+from __future__ import annotations
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    arch_id: str = "dade-ivf"
+    corpus_per_device: int = 1 << 20   # 1M vectors per chip (512M @ 2 pods)
+    dim: int = 256                     # DEEP dimensionality (paper Table 1)
+    query_batch: int = 1024            # global queries per search_step
+    k: int = 100
+    delta_d: int = 64                  # kernel block width = Δd on TPU (4 checkpoints)
+    wave: int = 8192
+    p_s: float = 0.02  # serving default: tighter than the paper's 0.1 because
+    # the two-phase distributed seed makes r final-tight from wave 0 (see
+    # EXPERIMENTS.md §Dry-run notes); 0.02 keeps recall ~0.99 at 1M/dev.
+    dtype: str = "bfloat16"  # §Perf A1: halves corpus + score traffic
+
+
+CONFIG = ServiceConfig()
+
+
+def reduced() -> ServiceConfig:
+    return dataclasses.replace(
+        CONFIG, corpus_per_device=4096, query_batch=16, k=10, wave=1024,
+        delta_d=32)

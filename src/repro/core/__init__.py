@@ -1,0 +1,43 @@
+"""DADE core — the paper's contribution as composable JAX modules.
+
+Layers:
+  transforms   — PCA (data-aware, Lemma 4) / random orthogonal / identity.
+  calibration  — empirical eps_d tables (hypothesis testing, Eq. 14).
+  estimators   — FDScanning / ADSampling / DADE bundles.
+  dco          — batched block-incremental DCO screen (Algorithm 1, TPU form).
+  dco_host     — numpy compaction engine for honest CPU wall-clock QPS.
+  topk         — wave-synchronous K-NN refinement (heap replacement).
+"""
+
+from repro.core.calibration import EpsilonTable, adsampling_table, calibrate, expansion_schedule
+from repro.core.dco import DCOResult, dco_screen, dco_screen_batch
+from repro.core.estimators import Estimator, build_estimator
+from repro.core.topk import KnnResult, exact_knn, knn_search_waves, merge_topk
+from repro.core.transforms import (
+    OrthogonalTransform,
+    fit_pca,
+    fit_random_orthogonal,
+    identity_transform,
+    random_orthogonal,
+)
+
+__all__ = [
+    "EpsilonTable",
+    "adsampling_table",
+    "calibrate",
+    "expansion_schedule",
+    "DCOResult",
+    "dco_screen",
+    "dco_screen_batch",
+    "Estimator",
+    "build_estimator",
+    "KnnResult",
+    "exact_knn",
+    "knn_search_waves",
+    "merge_topk",
+    "OrthogonalTransform",
+    "fit_pca",
+    "fit_random_orthogonal",
+    "identity_transform",
+    "random_orthogonal",
+]

@@ -1,0 +1,143 @@
+"""Hypothesis-testing calibration for DADE (paper §3.3, Eq. 14).
+
+The significance test needs, for every candidate dimension count ``d`` in the
+expansion schedule, the smallest ``eps_d`` with
+
+    P( dis'_d / dis - 1 > eps_d ) = P_s                       (Eq. 14)
+
+where ``dis'_d`` is the scaled d-dim estimate and ``dis`` the exact distance.
+The data distribution has no closed form, so ``eps_d`` is the empirical
+(1 - P_s)-quantile of ``dis'_d/dis - 1`` over uniformly sampled object pairs.
+
+ADSampling instead uses the data-oblivious bound ``eps_d = eps0 / sqrt(d)``
+(its Lemma: JL-type concentration for random projections); we expose both so
+the DCO engine is agnostic to which estimator produced its tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transforms import OrthogonalTransform
+
+__all__ = ["EpsilonTable", "calibrate", "adsampling_table", "expansion_schedule"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EpsilonTable:
+    """Per-checkpoint thresholds for the incremental DCO loop.
+
+    Attributes:
+      dims: (S,) int32 — the dimension checkpoints d_1 < d_2 < ... <= D.
+      eps: (S,) float32 — upper-tail eps_d at each checkpoint (last entry is
+        0: at d=D the estimate is exact so the test degenerates to dis <= r).
+      scale: (S,) float32 — unbiased estimation scale sigma^2(1,D)/sigma^2(1,d)
+        applied to the *squared* partial distance at each checkpoint.
+      eps_lo: (S,) float32 — lower-tail quantile:
+        P(dis'/dis - 1 < -eps_lo) = P_s (paper Fig. 1, bottom curves).  Used
+        to inflate threshold *seeds* safely (an undershooting estimate must
+        not produce a too-tight r).
+    """
+
+    dims: jax.Array
+    eps: jax.Array
+    scale: jax.Array
+    eps_lo: jax.Array
+
+    @property
+    def num_steps(self) -> int:
+        return self.dims.shape[0]
+
+    def tree_flatten(self):
+        return (self.dims, self.eps, self.scale, self.eps_lo), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def expansion_schedule(dim: int, delta_d: int) -> jnp.ndarray:
+    """Checkpoints Δd, 2Δd, ..., D (always terminating exactly at D)."""
+    if delta_d <= 0:
+        raise ValueError(f"delta_d must be positive, got {delta_d}")
+    steps = list(range(delta_d, dim, delta_d)) + [dim]
+    return jnp.asarray(steps, jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("delta_d", "num_pairs"))
+def calibrate(
+    transform: OrthogonalTransform,
+    data: jax.Array,
+    key: jax.Array,
+    *,
+    p_s: float | jax.Array = 0.1,
+    delta_d: int = 32,
+    num_pairs: int = 4096,
+) -> EpsilonTable:
+    """Empirically estimate eps_d from uniformly sampled object pairs.
+
+    For each checkpoint d: ratio = dis'_d / dis - 1 over pairs (x1, x2);
+    eps_d = quantile_{1-P_s}(ratio).  Vectorized over all checkpoints at once
+    via a cumulative-sum trick on the squared per-dimension differences.
+    """
+    dim = transform.dim
+    dims = expansion_schedule(dim, delta_d)
+
+    k1, k2 = jax.random.split(key)
+    n = data.shape[0]
+    i = jax.random.randint(k1, (num_pairs,), 0, n)
+    j = jax.random.randint(k2, (num_pairs,), 0, n)
+    # Avoid degenerate zero-distance self pairs.
+    j = jnp.where(i == j, (j + 1) % n, j)
+
+    x1 = jnp.take(data, i, axis=0).astype(jnp.float32)
+    x2 = jnp.take(data, j, axis=0).astype(jnp.float32)
+    delta = transform.apply(x1 - x2)  # (P, D) rotated differences
+    sq = delta * delta
+    csq = jnp.cumsum(sq, axis=1)  # (P, D): ||W_d^T dx||^2 for every d
+
+    partial_sq = csq[:, dims - 1]  # (P, S)
+    scale = transform.scale(dims)  # (S,)
+    exact = jnp.sqrt(jnp.maximum(csq[:, -1], 1e-30))  # (P,)
+    est = jnp.sqrt(jnp.maximum(partial_sq * scale[None, :], 0.0))
+    ratio = est / exact[:, None] - 1.0  # (P, S)
+
+    eps = jnp.quantile(ratio, 1.0 - jnp.asarray(p_s, jnp.float32), axis=0)
+    eps = jnp.maximum(eps, 0.0)
+    eps_lo = jnp.maximum(-jnp.quantile(ratio, jnp.asarray(p_s, jnp.float32), axis=0), 0.0)
+    # Final checkpoint (d == D) is exact: eps = 0, scale = 1.
+    eps = eps.at[-1].set(0.0)
+    eps_lo = eps_lo.at[-1].set(0.0)
+    scale = scale.at[-1].set(1.0)
+    return EpsilonTable(dims=dims, eps=eps.astype(jnp.float32),
+                        scale=scale.astype(jnp.float32),
+                        eps_lo=eps_lo.astype(jnp.float32))
+
+
+def adsampling_table(
+    transform: OrthogonalTransform,
+    *,
+    eps0: float = 2.1,
+    delta_d: int = 32,
+) -> EpsilonTable:
+    """ADSampling's data-oblivious thresholds: eps_d = eps0/sqrt(d), scale D/d.
+
+    The random-orthogonal estimator is dis'^2 = (D/d)·||W_d^T dx||^2; its
+    concentration bound (Gao & Long 2023, Lemma 3) yields a per-d error
+    multiplier eps0/sqrt(d) with failure probability O(e^{-c·eps0^2}).
+    """
+    dim = transform.dim
+    dims = expansion_schedule(dim, delta_d)
+    d_f = dims.astype(jnp.float32)
+    eps = eps0 / jnp.sqrt(d_f)
+    scale = dim / d_f
+    eps = eps.at[-1].set(0.0)
+    scale = scale.at[-1].set(1.0)
+    # JL-type bounds are symmetric: reuse eps for the lower tail.
+    return EpsilonTable(dims=dims, eps=eps, scale=scale, eps_lo=eps)

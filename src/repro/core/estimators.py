@@ -1,0 +1,126 @@
+"""Distance estimators: FDScanning, ADSampling, DADE (paper §3, §4.1).
+
+An :class:`Estimator` bundles everything the DCO engine needs:
+the orthogonal transform (how the corpus/queries were rotated), the epsilon
+table (when to prune), and the scale table (how to unbias the partial
+distance).  The engine itself (``repro.core.dco``) is method-agnostic — the
+three methods differ only in their tables:
+
+  FDScanning  — identity transform, single checkpoint at d=D (no pruning).
+  ADSampling  — random orthogonal transform, eps_d = eps0/sqrt(d), scale D/d.
+  DADE        — PCA transform, empirical quantile eps_d, scale Σλ/Σλ_d.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibration as calib
+from repro.core import transforms as tf
+
+__all__ = ["Estimator", "build_estimator"]
+
+MethodName = Literal["fdscanning", "adsampling", "dade", "pca_fixed", "rp_fixed"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Estimator:
+    method: str  # static aux
+    transform: tf.OrthogonalTransform
+    table: calib.EpsilonTable
+
+    def rotate(self, x: jax.Array) -> jax.Array:
+        return self.transform.apply(x)
+
+    def tree_flatten(self):
+        return (self.transform, self.table), self.method
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux, *children)
+
+
+def _single_checkpoint_table(dim: int) -> calib.EpsilonTable:
+    return calib.EpsilonTable(
+        dims=jnp.asarray([dim], jnp.int32),
+        eps=jnp.zeros((1,), jnp.float32),
+        scale=jnp.ones((1,), jnp.float32),
+        eps_lo=jnp.zeros((1,), jnp.float32),
+    )
+
+
+def _fixed_dim_table(transform: tf.OrthogonalTransform, d: int, unbiased: bool) -> calib.EpsilonTable:
+    """Equal-dimension projection baselines of Fig. 3 (PCA / random proj).
+
+    One checkpoint at d with eps=+inf disabled pruning?  No: fixed-dim methods
+    *always* estimate with exactly d dims and never fall back to exact — model
+    that as a single checkpoint whose estimate is final (eps irrelevant; the
+    engine treats the last checkpoint as terminal).
+    """
+    scale = transform.scale(jnp.asarray([d], jnp.int32)) if unbiased else jnp.asarray(
+        [transform.dim / d], jnp.float32
+    )
+    return calib.EpsilonTable(
+        dims=jnp.asarray([d], jnp.int32),
+        eps=jnp.zeros((1,), jnp.float32),
+        scale=scale.astype(jnp.float32),
+        eps_lo=jnp.zeros((1,), jnp.float32),
+    )
+
+
+def build_estimator(
+    method: MethodName,
+    data: jax.Array,
+    key: jax.Array | None = None,
+    *,
+    p_s: float = 0.1,
+    delta_d: int = 32,
+    eps0: float = 2.1,
+    fixed_dim: int | None = None,
+    num_pairs: int = 4096,
+) -> Estimator:
+    """Fit an estimator on a corpus sample.
+
+    Args:
+      method: one of fdscanning | adsampling | dade | pca_fixed | rp_fixed.
+      data: (N, D) corpus sample used to fit the transform and calibrate.
+      key: PRNG key (needed for adsampling / rp_fixed / dade calibration).
+      p_s: DADE significance level (paper default 0.1).
+      delta_d: expansion step size (paper default 32).
+      eps0: ADSampling's error parameter (paper default 2.1).
+      fixed_dim: projection dim for the fixed-d baselines.
+    """
+    data = jnp.asarray(data, jnp.float32)
+    dim = data.shape[1]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    if method == "fdscanning":
+        transform = tf.identity_transform(data)
+        table = _single_checkpoint_table(dim)
+    elif method == "adsampling":
+        transform = tf.fit_random_orthogonal(key, data)
+        table = calib.adsampling_table(transform, eps0=eps0, delta_d=delta_d)
+    elif method == "dade":
+        transform = tf.fit_pca(data)
+        table = calib.calibrate(
+            transform, data, key, p_s=p_s, delta_d=delta_d, num_pairs=num_pairs
+        )
+    elif method == "pca_fixed":
+        if fixed_dim is None:
+            raise ValueError("pca_fixed requires fixed_dim")
+        transform = tf.fit_pca(data)
+        table = _fixed_dim_table(transform, fixed_dim, unbiased=True)
+    elif method == "rp_fixed":
+        if fixed_dim is None:
+            raise ValueError("rp_fixed requires fixed_dim")
+        transform = tf.fit_random_orthogonal(key, data)
+        table = _fixed_dim_table(transform, fixed_dim, unbiased=False)
+    else:
+        raise ValueError(f"unknown DCO method: {method}")
+    return Estimator(method=method, transform=transform, table=table)

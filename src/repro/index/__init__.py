@@ -1,0 +1,13 @@
+"""Vector indexes with pluggable DCO methods (IVF / graph / flat)."""
+
+from repro.index.flat import FlatIndex, build_flat, search_flat
+from repro.index.graph import GraphIndex, build_graph, search_graph
+from repro.index.ivf import IVFIndex, build_ivf, search_ivf
+from repro.index.kmeans import assign, kmeans
+
+__all__ = [
+    "FlatIndex", "build_flat", "search_flat",
+    "GraphIndex", "build_graph", "search_graph",
+    "IVFIndex", "build_ivf", "search_ivf",
+    "assign", "kmeans",
+]

@@ -1,0 +1,66 @@
+"""Flat (linear scan) index — the paper's Fig. 3 workload and the recall
+ground-truth provider.  Thin stateful wrapper over core.topk."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimators import Estimator, build_estimator
+from repro.core.topk import KnnResult, exact_knn, knn_search_waves
+
+__all__ = ["FlatIndex", "build_flat", "search_flat"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FlatIndex:
+    estimator: Estimator
+    corpus_rot: jax.Array  # (N, D)
+    corpus: jax.Array  # (N, D) original space (for exact ground truth)
+
+    def tree_flatten(self):
+        return ((self.estimator, self.corpus_rot, self.corpus), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def build_flat(
+    data,
+    *,
+    method: str = "dade",
+    key: jax.Array | None = None,
+    estimator: Estimator | None = None,
+    **est_kwargs,
+) -> FlatIndex:
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    data = jnp.asarray(data, jnp.float32)
+    if estimator is None:
+        estimator = build_estimator(method, data, key, **est_kwargs)
+    return FlatIndex(estimator=estimator, corpus_rot=estimator.rotate(data), corpus=data)
+
+
+@partial(jax.jit, static_argnames=("k", "wave", "two_phase"))
+def search_flat(
+    index: FlatIndex,
+    queries: jax.Array,
+    *,
+    k: int = 10,
+    wave: int = 4096,
+    two_phase: bool = False,
+) -> KnnResult:
+    q_rot = index.estimator.rotate(queries.astype(jnp.float32))
+    return knn_search_waves(
+        q_rot, index.corpus_rot, index.estimator.table, k=k, wave=wave, two_phase=two_phase
+    )
+
+
+def ground_truth(index: FlatIndex, queries: jax.Array, k: int):
+    return exact_knn(jnp.asarray(queries, jnp.float32), index.corpus, k)

@@ -1,0 +1,284 @@
+"""NSW-flavored proximity-graph index with DCO-screened beam search.
+
+Build (offline, numpy): incremental NSW insertion — each point beam-searches
+the current graph for its ``ef_construction`` nearest, connects to the best
+``M`` bidirectionally, trims over-full adjacency by distance.  This matches
+the layer-0 structure of HNSW (hnswlib defaults M=16, efC=500); the upper
+hierarchy layers only accelerate entry-point selection and are replaced by a
+medoid entry (noted deviation — recall behaviour at layer 0 is what the
+paper's DCO experiments exercise).
+
+Query (JAX): fixed-shape greedy beam search (lax.while_loop) — the paper's
+Section 3.4 description: search set S (beam), result set R of size ef whose
+worst distance is the DCO threshold r.  ``decoupled=True`` reproduces the
+HNSW++ optimization of [20]: the DCO threshold comes from a K-sized result
+set instead of the ef-sized beam (tighter r, more pruning), with estimated
+distances ordering the beam.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dco import dco_screen
+from repro.core.estimators import Estimator, build_estimator
+
+__all__ = ["GraphIndex", "build_graph", "search_graph"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GraphIndex:
+    estimator: Estimator
+    corpus_rot: jax.Array  # (N, D)
+    neighbors: jax.Array  # (N, M) int32, -1 padded
+    entry: jax.Array  # () int32 medoid entry point
+
+    @property
+    def degree(self) -> int:
+        return self.neighbors.shape[1]
+
+    def tree_flatten(self):
+        return ((self.estimator, self.corpus_rot, self.neighbors, self.entry), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def _greedy_search_np(rot, adj, entry, q, ef):
+    """Host beam search used during construction (exact distances)."""
+    n = rot.shape[0]
+    visited = np.zeros(n, bool)
+    d0 = float(np.sum((rot[entry] - q) ** 2))
+    visited[entry] = True
+    cand_ids = [entry]
+    cand_d = [d0]
+    result_ids = [entry]
+    result_d = [d0]
+    while cand_ids:
+        i = int(np.argmin(cand_d))
+        cid, cd = cand_ids.pop(i), cand_d.pop(i)
+        worst = max(result_d) if len(result_d) >= ef else np.inf
+        if cd > worst:
+            break
+        nbrs = adj[cid]
+        nbrs = nbrs[(nbrs >= 0) & ~visited[nbrs]]
+        if nbrs.size == 0:
+            continue
+        visited[nbrs] = True
+        diff = rot[nbrs] - q[None, :]
+        nd = np.einsum("nd,nd->n", diff, diff)
+        for dist, node in zip(nd, nbrs):
+            if len(result_d) < ef or dist < max(result_d):
+                result_ids.append(int(node))
+                result_d.append(float(dist))
+                cand_ids.append(int(node))
+                cand_d.append(float(dist))
+                if len(result_d) > ef:
+                    j = int(np.argmax(result_d))
+                    result_ids.pop(j)
+                    result_d.pop(j)
+    order = np.argsort(result_d)
+    return [result_ids[i] for i in order]
+
+
+def build_graph(
+    data,
+    *,
+    method: str = "dade",
+    m: int = 16,
+    ef_construction: int = 100,
+    key: jax.Array | None = None,
+    estimator: Estimator | None = None,
+    **est_kwargs,
+) -> GraphIndex:
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    data = jnp.asarray(data, jnp.float32)
+    if estimator is None:
+        estimator = build_estimator(method, data, key, **est_kwargs)
+    rot = np.asarray(estimator.rotate(data))
+    n = rot.shape[0]
+
+    adj = np.full((n, 2 * m), -1, np.int64)  # over-provision, trim at the end
+    deg = np.zeros(n, np.int64)
+
+    def select_heuristic(a, cand, mmax):
+        """hnswlib's diversity heuristic: keep c unless some already-selected
+        s is closer to c than c is to a (preserves long-range bridges —
+        distance-only trimming fragments clustered corpora)."""
+        cand = np.unique(cand[cand >= 0])
+        cand = cand[cand != a]
+        if cand.size == 0:
+            return cand
+        d_a = np.einsum("nd,nd->n", rot[cand] - rot[a], rot[cand] - rot[a])
+        order = np.argsort(d_a)
+        selected: list[int] = []
+        rest: list[int] = []
+        for i in order:
+            c, dc = cand[i], d_a[i]
+            if len(selected) >= mmax:
+                break
+            dsel = [
+                float(np.dot(rot[c] - rot[s], rot[c] - rot[s]))
+                for s in selected
+            ]
+            if all(ds > dc for ds in dsel):
+                selected.append(int(c))
+            else:
+                rest.append(int(c))
+        # keepPrunedConnections: fill remaining slots with nearest pruned
+        for c in rest:
+            if len(selected) >= mmax:
+                break
+            selected.append(c)
+        return np.asarray(selected, np.int64)
+
+    def connect(a, b):
+        if deg[a] < adj.shape[1]:
+            adj[a, deg[a]] = b
+            deg[a] += 1
+        else:  # re-select with the diversity heuristic
+            keep = select_heuristic(a, np.concatenate([adj[a, : deg[a]], [b]]), m)
+            adj[a, : len(keep)] = keep
+            adj[a, len(keep):] = -1
+            deg[a] = len(keep)
+
+    for v in range(1, n):
+        entry = 0
+        found = _greedy_search_np(rot[:v], adj[:v], entry, rot[v], ef_construction)
+        targets = select_heuristic(v, np.asarray(found[: 2 * m]), m)
+        for u in targets:
+            connect(v, u)
+            connect(u, v)
+
+    # Trim to M (diversity-aware) and pick the medoid entry.
+    final = np.full((n, m), -1, np.int64)
+    for v in range(n):
+        nbrs = adj[v, : deg[v]]
+        if nbrs.size > m:
+            nbrs = select_heuristic(v, nbrs, m)
+        final[v, : nbrs.size] = nbrs
+    entry = int(np.argmin(np.einsum("nd,nd->n", rot - rot.mean(0), rot - rot.mean(0))))
+    return GraphIndex(
+        estimator=estimator,
+        corpus_rot=jnp.asarray(rot),
+        neighbors=jnp.asarray(final, jnp.int32),
+        entry=jnp.asarray(entry, jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("k", "ef", "max_steps", "decoupled"))
+def search_graph(
+    index: GraphIndex,
+    queries: jax.Array,  # (Q, D) original space
+    *,
+    k: int = 10,
+    ef: int = 64,
+    max_steps: int = 512,
+    decoupled: bool = True,
+):
+    """Batched (vmapped) DCO beam search.
+
+    Returns (dists (Q,K), ids (Q,K), avg_dims (Q,) mean dims per screened
+    candidate).  ``decoupled`` selects the HNSW++-style threshold (r from the
+    K-sized result set) vs HNSW+ (r from the ef-sized beam).
+    """
+    q_rot = index.estimator.rotate(queries.astype(jnp.float32))
+    table = index.estimator.table
+    n = index.corpus_rot.shape[0]
+    m = index.degree
+
+    c_max = 2 * ef  # frontier capacity (hnswlib bounds C by worst(W) instead)
+
+    def one(qv):
+        # W: ef-sized result window ordered by ESTIMATED distance (the
+        #    greedy walk's notion of progress — hnswlib's dynamic list).
+        # C: frontier of unexpanded nodes ordered by estimate.
+        # R: K exact results gated by the DCO (the paper's decoupled set).
+        w_sq = jnp.full((ef,), jnp.inf)
+        c_sq = jnp.full((c_max,), jnp.inf)
+        c_ids = jnp.full((c_max,), -1, jnp.int32)
+        top_sq = jnp.full((k,), jnp.inf)
+        top_ids = jnp.full((k,), -1, jnp.int32)
+        visited = jnp.zeros((n,), bool)
+
+        e = index.entry
+        d_entry = jnp.sum((index.corpus_rot[e] - qv) ** 2)
+        w_sq = w_sq.at[0].set(d_entry)
+        c_sq = c_sq.at[0].set(d_entry)
+        c_ids = c_ids.at[0].set(e)
+        top_sq = top_sq.at[0].set(d_entry)
+        top_ids = top_ids.at[0].set(e)
+        visited = visited.at[e].set(True)
+
+        def cond(state):
+            w_sq, c_sq, c_ids, top_sq, top_ids, visited, steps, da, ra = state
+            nearest = jnp.min(c_sq)
+            # stop when the frontier cannot improve the ef-window
+            return jnp.logical_and(
+                jnp.logical_and(jnp.isfinite(nearest), steps < max_steps),
+                nearest <= w_sq[-1],
+            )
+
+        def body(state):
+            w_sq, c_sq, c_ids, top_sq, top_ids, visited, steps, dims_acc, rows_acc = state
+            slot = jnp.argmin(c_sq)
+            node = c_ids[slot]
+            c_sq = c_sq.at[slot].set(jnp.inf)  # pop
+
+            nbrs = index.neighbors[node]  # (M,)
+            fresh = (nbrs >= 0) & ~visited[jnp.maximum(nbrs, 0)]
+            # scatter-or (max) — safe under duplicate indices from -1 padding
+            visited = visited.at[jnp.maximum(nbrs, 0)].max(nbrs >= 0)
+            cands = index.corpus_rot[jnp.maximum(nbrs, 0)]  # (M, D)
+
+            r_sq = top_sq[-1] if decoupled else w_sq[-1]
+            r_sq = jnp.where(jnp.isfinite(r_sq), r_sq, 1e18)
+            res = dco_screen(qv, cands, table, r_sq)
+            est_sq = jnp.where(fresh, res.est_sq, jnp.inf)
+            passed = res.passed & fresh
+            dims_acc = dims_acc + jnp.sum(jnp.where(fresh, res.dims_used, 0))
+            rows_acc = rows_acc + jnp.sum(fresh)
+
+            # R: survivors carry exact distances (they reached d=D).
+            all_sq = jnp.concatenate([top_sq, jnp.where(passed, est_sq, jnp.inf)])
+            all_ids = jnp.concatenate([top_ids, nbrs])
+            neg, idx = jax.lax.top_k(-all_sq, k)
+            top_sq, top_ids = -neg, all_ids[idx]
+
+            # W: estimates advance the window regardless of DCO outcome
+            # (the ++ decoupling — pruning only gates R).
+            neg_w, _ = jax.lax.top_k(-jnp.concatenate([w_sq, est_sq]), ef)
+            w_sq = -neg_w
+
+            # C: only neighbors that could still improve the window enter.
+            enter = est_sq <= w_sq[-1]
+            cand_sq = jnp.where(enter, est_sq, jnp.inf)
+            neg_c, idx_c = jax.lax.top_k(
+                -jnp.concatenate([c_sq, cand_sq]), c_max)
+            c_sq = -neg_c
+            c_ids = jnp.concatenate([c_ids, nbrs])[idx_c]
+
+            return (w_sq, c_sq, c_ids, top_sq, top_ids, visited,
+                    steps + 1, dims_acc, rows_acc)
+
+        state = (
+            w_sq, c_sq, c_ids, top_sq, top_ids, visited,
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32),
+        )
+        state = jax.lax.while_loop(cond, body, state)
+        w_sq, c_sq, c_ids, top_sq, top_ids, visited, steps, dims_acc, rows_acc = state
+        avg = dims_acc.astype(jnp.float32) / jnp.maximum(
+            rows_acc.astype(jnp.float32), 1.0)
+        return jnp.sqrt(jnp.maximum(top_sq, 0.0)), top_ids, avg
+
+    return jax.vmap(one)(q_rot)

@@ -1,0 +1,76 @@
+"""Mini-batch-free Lloyd k-means in JAX — the IVF coarse quantizer substrate.
+
+Faiss-style: sample init (k-means++ seeding on a subsample), fixed iteration
+count, empty-cluster re-seeding to the farthest points.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["kmeans", "assign"]
+
+
+def _sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
+    return (
+        jnp.sum(x * x, axis=1)[:, None]
+        + jnp.sum(c * c, axis=1)[None, :]
+        - 2.0 * x @ c.T
+    )
+
+
+@partial(jax.jit, static_argnames=())
+def assign(data: jax.Array, centroids: jax.Array) -> jax.Array:
+    """(N,) nearest-centroid ids."""
+    return jnp.argmin(_sq_dists(data.astype(jnp.float32), centroids), axis=1)
+
+
+def _plus_plus_init(key: jax.Array, data: jax.Array, k: int) -> jax.Array:
+    """k-means++ seeding (on the full sample; callers pre-subsample)."""
+    n = data.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    cents = jnp.zeros((k, data.shape[1]), data.dtype).at[0].set(data[first])
+
+    def body(i, carry):
+        cents, key = carry
+        key, sub = jax.random.split(key)
+        d = _sq_dists(data, cents)  # (N, k)
+        live = jnp.arange(k) < i
+        dmin = jnp.min(jnp.where(live[None, :], d, jnp.inf), axis=1)
+        dmin = jnp.maximum(dmin, 0.0)
+        probs = dmin / jnp.maximum(jnp.sum(dmin), 1e-30)
+        nxt = jax.random.choice(sub, n, p=probs)
+        return cents.at[i].set(data[nxt]), key
+
+    cents, _ = jax.lax.fori_loop(1, k, body, (cents, key))
+    return cents
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(
+    key: jax.Array, data: jax.Array, k: int, iters: int = 20
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (centroids (k, D), assignments (N,))."""
+    data = data.astype(jnp.float32)
+    n = data.shape[0]
+    cents = _plus_plus_init(key, data, k)
+
+    def step(_, cents):
+        a = assign(data, cents)
+        one_hot = jax.nn.one_hot(a, k, dtype=jnp.float32)  # (N, k)
+        counts = jnp.sum(one_hot, axis=0)  # (k,)
+        sums = one_hot.T @ data  # (k, D)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # Re-seed empties to the points farthest from their centroid.
+        d = _sq_dists(data, cents)
+        far = jnp.argsort(jnp.min(d, axis=1))[::-1][:k]  # (k,) farthest rows
+        empty = counts == 0
+        new = jnp.where(empty[:, None], data[far], new)
+        return new
+
+    cents = jax.lax.fori_loop(0, iters, step, cents)
+    return cents, assign(data, cents)

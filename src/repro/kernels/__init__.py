@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the DCO hot-spot the paper optimizes.
+
+dade_dco.py -- blocked partial-distance screen (the paper's Algorithm 1 as a
+tile-granular VMEM-resident kernel); ops.py -- jit'd public wrappers with
+padding + CPU interpret fallback; ref.py -- pure-jnp oracle.
+"""
+
+from repro.kernels.ops import block_table, dco_screen_kernel, on_tpu
+from repro.kernels.ref import dade_dco_ref
+
+__all__ = ["block_table", "dco_screen_kernel", "on_tpu", "dade_dco_ref"]

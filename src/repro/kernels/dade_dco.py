@@ -1,0 +1,185 @@
+"""Pallas TPU kernel for the DADE block-incremental DCO screen.
+
+TPU adaptation of Algorithm 1 (see DESIGN.md §3): the per-candidate early-
+exit loop becomes a tile-granular screen.  Grid = (q_tiles, c_tiles, S) with
+the dimension-block axis S innermost ("arbitrary" semantics — sequential per
+candidate tile).  VMEM scratch carries, across the S loop:
+
+    psum   (QT, CT) f32   — partial squared distance (cumulative over blocks)
+    active (QT, CT) f32   — 1.0 while H0 not yet rejected
+    oest   (QT, CT) f32   — estimate at retirement
+    odims  (QT, CT) f32   — dims consumed at retirement
+    alive  (1, 1) SMEM    — per-tile active count for the early exit
+
+Per block s the partial distance is computed with the MXU-friendly
+``||q-o||² = ||q||² + ||o||² - 2 q·oᵀ`` decomposition, f32 accumulation.
+When every (q, c) pair in the tile has retired, ``@pl.when(alive > 0)``
+skips the remaining blocks' compute — the tile-granular realization of the
+paper's FLOP savings (HBM prefetch of skipped blocks still occurs under the
+automatic pipeline; see DESIGN.md §8.3).
+
+The checkpoint schedule is tied to the block width: checkpoint s tests at
+d = (s+1)·DB dims, so the epsilon/scale tables must be built with
+``delta_d = DB`` (``repro.kernels.ops`` enforces this).  DB defaults to 128
+(lane width); the paper's Δd=32 is swept in the jnp/host engines instead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["dade_dco_kernel_call"]
+
+
+def _kernel(
+    # inputs
+    q_ref,  # (QT, DB) query block
+    c_ref,  # (CT, DB) candidate block
+    eps_ref,  # (1, S) f32
+    scale_ref,  # (1, S) f32
+    rsq_ref,  # (QT, 1) f32 per-query squared threshold
+    # outputs
+    est_ref,  # (QT, CT) f32
+    passed_ref,  # (QT, CT) i32
+    dims_ref,  # (QT, CT) i32
+    # scratch
+    psum,  # (QT, CT) f32
+    active,  # (QT, CT) f32
+    oest,  # (QT, CT) f32
+    odims,  # (QT, CT) f32
+    alive,  # (1, 1) i32 SMEM
+    *,
+    num_blocks: int,
+    block_d: int,
+):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        psum[...] = jnp.zeros_like(psum)
+        active[...] = jnp.ones_like(active)
+        oest[...] = jnp.zeros_like(oest)
+        odims[...] = jnp.zeros_like(odims)
+        alive[0, 0] = psum.shape[0] * psum.shape[1]
+
+    @pl.when(alive[0, 0] > 0)
+    def _block():
+        q = q_ref[...].astype(jnp.float32)  # (QT, DB)
+        c = c_ref[...].astype(jnp.float32)  # (CT, DB)
+        dot = jax.lax.dot_general(
+            q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (QT, CT)
+        qn = jnp.sum(q * q, axis=1, keepdims=True)  # (QT, 1)
+        cn = jnp.sum(c * c, axis=1, keepdims=True).T  # (1, CT)
+        block_sq = jnp.maximum(qn + cn - 2.0 * dot, 0.0)
+        new_psum = psum[...] + block_sq
+        psum[...] = new_psum
+
+        eps_s = eps_ref[0, s]
+        scale_s = scale_ref[0, s]
+        est = new_psum * scale_s
+        thresh = (1.0 + eps_s) ** 2 * rsq_ref[...]  # (QT, 1) -> bcast
+        is_active = active[...] > 0.0
+        is_last = s == num_blocks - 1
+        reject = jnp.logical_and(is_active, est > thresh)
+        # On the last block nothing is "rejected"; all survivors retire with
+        # the exact distance (scale_s == 1 by table construction).
+        reject = jnp.where(is_last, jnp.zeros_like(reject), reject)
+        retire = jnp.logical_or(reject, jnp.logical_and(is_active, is_last))
+
+        d_now = (s + 1).astype(jnp.float32) * block_d
+        oest[...] = jnp.where(retire, est, oest[...])
+        odims[...] = jnp.where(retire, d_now, odims[...])
+        new_active = jnp.logical_and(is_active, jnp.logical_not(retire))
+        active[...] = new_active.astype(jnp.float32)
+        alive[0, 0] = jnp.sum(new_active.astype(jnp.int32))
+
+    @pl.when(s == num_blocks - 1)
+    def _finalize():
+        est_ref[...] = oest[...]
+        dims_ref[...] = odims[...].astype(jnp.int32)
+        # Passed: retired at the final block (never rejected) AND est <= r².
+        survived = odims[...] >= jnp.float32(num_blocks * block_d)
+        ok = jnp.logical_and(survived, oest[...] <= rsq_ref[...])
+        passed_ref[...] = ok.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_c", "block_d", "interpret"),
+)
+def dade_dco_kernel_call(
+    q_rot: jax.Array,  # (Q, D)
+    cands_rot: jax.Array,  # (N, D)
+    eps: jax.Array,  # (S,) f32 — thresholds at d=(s+1)*block_d
+    scale: jax.Array,  # (S,) f32 — unbiasing scales (scale[-1] == 1)
+    r_sq: jax.Array,  # (Q,) f32
+    *,
+    block_q: int = 128,
+    block_c: int = 128,
+    block_d: int = 128,
+    interpret: bool = False,
+):
+    """Launch the DCO screen. Shapes must be pre-padded: Q % block_q == 0,
+    N % block_c == 0, D % block_d == 0, S == D // block_d.
+
+    Returns (est_sq (Q,N) f32, passed (Q,N) i32, dims_used (Q,N) i32).
+    """
+    qn, dim = q_rot.shape
+    n = cands_rot.shape[0]
+    if qn % block_q or n % block_c or dim % block_d:
+        raise ValueError(
+            f"shapes must be padded: Q={qn}%{block_q}, N={n}%{block_c}, "
+            f"D={dim}%{block_d}"
+        )
+    num_blocks = dim // block_d
+    if eps.shape[0] != num_blocks:
+        raise ValueError(f"table has {eps.shape[0]} steps, need {num_blocks}")
+
+    grid = (qn // block_q, n // block_c, num_blocks)
+    kernel = functools.partial(_kernel, num_blocks=num_blocks, block_d=block_d)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((qn, n), jnp.float32),
+        jax.ShapeDtypeStruct((qn, n), jnp.int32),
+        jax.ShapeDtypeStruct((qn, n), jnp.int32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_d), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_c, block_d), lambda i, j, s: (j, s)),
+            pl.BlockSpec((1, eps.shape[0]), lambda i, j, s: (0, 0)),
+            pl.BlockSpec((1, scale.shape[0]), lambda i, j, s: (0, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j, s: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_q, block_c), lambda i, j, s: (i, j)),
+            pl.BlockSpec((block_q, block_c), lambda i, j, s: (i, j)),
+            pl.BlockSpec((block_q, block_c), lambda i, j, s: (i, j)),
+        ),
+        out_shape=out_shapes,
+        scratch_shapes=[
+            pltpu.VMEM((block_q, block_c), jnp.float32),
+            pltpu.VMEM((block_q, block_c), jnp.float32),
+            pltpu.VMEM((block_q, block_c), jnp.float32),
+            pltpu.VMEM((block_q, block_c), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        q_rot,
+        cands_rot,
+        eps.reshape(1, -1).astype(jnp.float32),
+        scale.reshape(1, -1).astype(jnp.float32),
+        r_sq.reshape(-1, 1).astype(jnp.float32),
+    )

@@ -1,0 +1,73 @@
+"""Pallas baseline kernel: plain full-D blocked L2 scan (FDScanning).
+
+The control for the DADE kernel's tile-skip: identical tiling, identical
+MXU decomposition, NO screening — every (candidate tile × dim block) is
+computed.  The §Perf kernel-level comparison is dade_dco vs this kernel at
+equal recall; the expected TPU speedup equals the measured tile_work_frac
+(benchmarks/kernel_bench.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["l2_scan_kernel_call"]
+
+
+def _kernel(q_ref, c_ref, out_ref, acc, *, num_blocks: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    dot = jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    qn = jnp.sum(q * q, axis=1, keepdims=True)
+    cn = jnp.sum(c * c, axis=1, keepdims=True).T
+    acc[...] = acc[...] + jnp.maximum(qn + cn - 2.0 * dot, 0.0)
+
+    @pl.when(s == num_blocks - 1)
+    def _done():
+        out_ref[...] = acc[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_c", "block_d", "interpret"))
+def l2_scan_kernel_call(
+    q_rot: jax.Array,  # (Q, D), Q % block_q == 0
+    cands_rot: jax.Array,  # (N, D), N % block_c == 0, D % block_d == 0
+    *,
+    block_q: int = 128,
+    block_c: int = 128,
+    block_d: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Exact squared L2 distances (Q, N) — full-D, no screening."""
+    qn, dim = q_rot.shape
+    n = cands_rot.shape[0]
+    if qn % block_q or n % block_c or dim % block_d:
+        raise ValueError(f"unpadded shapes: {q_rot.shape} x {cands_rot.shape}")
+    num_blocks = dim // block_d
+    grid = (qn // block_q, n // block_c, num_blocks)
+    return pl.pallas_call(
+        functools.partial(_kernel, num_blocks=num_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_d), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_c, block_d), lambda i, j, s: (j, s)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_c), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qn, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_q, block_c), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q_rot, cands_rot)

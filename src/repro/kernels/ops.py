@@ -1,0 +1,126 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to tile boundaries, table resampling to the kernel's
+block-checkpoint schedule, and the CPU fallback (interpret mode) so the same
+call-site code runs in tests/benchmarks on this host and compiles for TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import EpsilonTable
+from repro.core.estimators import Estimator
+from repro.kernels import dade_dco as _dade
+from repro.kernels import ref as _ref
+
+__all__ = ["dco_screen_kernel", "block_table", "on_tpu"]
+
+_PAD_SENTINEL = 1e18  # huge-but-finite: pad rows prune at the first block
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def block_table(table: EpsilonTable, dim: int, block_d: int):
+    """Resample an EpsilonTable onto the kernel's block grid.
+
+    The kernel checkpoints at d = DB, 2DB, ..., D_pad.  For each checkpoint we
+    take the table entry at the largest calibrated dim <= checkpoint (so the
+    test applied is one the calibration actually covered; conservative).
+    Checkpoints beyond the true D (zero-padded dims) reuse the final exact
+    entry (eps=0, scale=1) — padded dims add zero to the distance.
+    """
+    dims = np.asarray(table.dims)
+    eps = np.asarray(table.eps)
+    eps_lo = np.asarray(table.eps_lo)
+    scale = np.asarray(table.scale)
+    d_pad = ((dim + block_d - 1) // block_d) * block_d
+    s_count = d_pad // block_d
+    out_eps, out_scale, out_lo = [], [], []
+    for s in range(s_count):
+        cp = min((s + 1) * block_d, dim)
+        i = int(np.searchsorted(dims, cp, side="right")) - 1
+        i = max(i, 0)
+        if cp >= dim:
+            out_eps.append(0.0)
+            out_scale.append(1.0)
+            out_lo.append(0.0)
+        else:
+            out_eps.append(float(eps[i]))
+            out_scale.append(float(scale[i]))
+            out_lo.append(float(eps_lo[i]))
+    return (
+        jnp.asarray(out_eps, jnp.float32),
+        jnp.asarray(out_scale, jnp.float32),
+        d_pad,
+        jnp.asarray(out_lo, jnp.float32),
+    )
+
+
+def _pad_axis(x: jax.Array, axis: int, to: int, value: float) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % to
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_c", "block_d", "interpret", "use_ref"),
+)
+def _call(q, c, eps, scale, r_sq, block_q, block_c, block_d, interpret, use_ref):
+    if use_ref:
+        return _ref.dade_dco_ref(q, c, eps, scale, r_sq, block_d=block_d)
+    return _dade.dade_dco_kernel_call(
+        q, c, eps, scale, r_sq,
+        block_q=block_q, block_c=block_c, block_d=block_d, interpret=interpret,
+    )
+
+
+def dco_screen_kernel(
+    estimator: Estimator,
+    q_rot: jax.Array,  # (Q, D) rotated queries
+    cands_rot: jax.Array,  # (N, D) rotated candidates
+    r_sq: jax.Array,  # (Q,)
+    *,
+    block_q: int = 128,
+    block_c: int = 128,
+    block_d: int = 128,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+):
+    """Public entry: pads, resamples the table, launches the kernel.
+
+    ``interpret=None`` auto-selects: real lowering on TPU, interpret on CPU.
+    Returns (est_sq (Q,N) f32, passed (Q,N) bool, dims_used (Q,N) i32),
+    cropped back to the caller's shapes.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    qn, dim = q_rot.shape
+    n = cands_rot.shape[0]
+
+    eps, scale, d_pad, _ = block_table(estimator.table, dim, block_d)
+    q = _pad_axis(q_rot.astype(jnp.float32), 1, block_d, 0.0)
+    c = _pad_axis(cands_rot.astype(jnp.float32), 1, block_d, 0.0)
+    q = _pad_axis(q, 0, block_q, 0.0)
+    c = _pad_axis(c, 0, block_c, _PAD_SENTINEL)
+    r = _pad_axis(r_sq.astype(jnp.float32), 0, block_q, 0.0)
+
+    est_sq, passed, dims_used = _call(
+        q, c, eps, scale, r, block_q, block_c, block_d, interpret, use_ref
+    )
+    return (
+        est_sq[:qn, :n],
+        passed[:qn, :n].astype(bool),
+        dims_used[:qn, :n],
+    )

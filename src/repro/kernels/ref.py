@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-level semantics match).
+
+``dade_dco_ref`` mirrors ``dade_dco.dade_dco_kernel_call`` exactly: same
+block-checkpoint schedule (d = (s+1)·DB), same MXU decomposition
+(qn + cn - 2q·oᵀ with a max(·, 0) clamp), same retire/passed rules — so
+tests can assert elementwise equality, not just statistical agreement.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dade_dco_ref"]
+
+
+@partial(jax.jit, static_argnames=("block_d",))
+def dade_dco_ref(
+    q_rot: jax.Array,  # (Q, D)
+    cands_rot: jax.Array,  # (N, D)
+    eps: jax.Array,  # (S,)
+    scale: jax.Array,  # (S,)
+    r_sq: jax.Array,  # (Q,)
+    *,
+    block_d: int = 128,
+):
+    qn, dim = q_rot.shape
+    n = cands_rot.shape[0]
+    s_count = dim // block_d
+    assert s_count * block_d == dim and eps.shape[0] == s_count
+
+    q = q_rot.astype(jnp.float32).reshape(qn, s_count, block_d)
+    c = cands_rot.astype(jnp.float32).reshape(n, s_count, block_d)
+    dot = jnp.einsum("qsd,csd->sqc", q, c, preferred_element_type=jnp.float32)
+    qnorm = jnp.sum(q * q, axis=2).T[:, :, None]  # (S, Q, 1)
+    cnorm = jnp.sum(c * c, axis=2).T[:, None, :]  # (S, 1, C)
+    block_sq = jnp.maximum(qnorm + cnorm - 2.0 * dot, 0.0)  # (S, Q, C)
+    psum = jnp.cumsum(block_sq, axis=0)  # (S, Q, C)
+
+    est_all = psum * scale[:, None, None]
+    thresh = (1.0 + eps[:, None, None]) ** 2 * r_sq[None, :, None]
+    reject = est_all > thresh
+    # Last block never "rejects" — survivors retire exact there.
+    reject = reject.at[-1].set(False)
+
+    s_idx = jnp.arange(s_count)
+    first_reject = jnp.min(
+        jnp.where(reject, s_idx[:, None, None], s_count), axis=0
+    )  # (Q, C)
+    never = first_reject == s_count
+    retire_s = jnp.where(never, s_count - 1, first_reject)
+
+    est_sq = jnp.take_along_axis(
+        jnp.moveaxis(est_all, 0, -1), retire_s[..., None], axis=-1
+    )[..., 0]
+    dims_used = ((retire_s + 1) * block_d).astype(jnp.int32)
+    passed = jnp.logical_and(never, est_sq <= r_sq[:, None])
+    return est_sq, passed.astype(jnp.int32), dims_used

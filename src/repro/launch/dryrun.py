@@ -1,0 +1,196 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile EVERY (architecture × input shape)
+cell on the production meshes, record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun            # all cells, both meshes
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multipod-only
+
+Results stream into results/dryrun/<mesh>/<arch>__<shape>.json so the run is
+resumable and the roofline analysis (repro.launch.roofline) reads from disk.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import LM_ARCHS, get_config  # noqa: E402
+from repro.configs.dade_ivf import CONFIG as SVC_CONFIG  # noqa: E402
+from repro.launch import annservice  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import SHAPES  # noqa: E402
+from repro.launch.steps import build_cell  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[-a-z]*\b[^=]*?=\s*([a-z0-9]+)\[([0-9,]*)\]"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-operand bytes of every collective op in the HLO."""
+    per_kind: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for m in re.finditer(
+        r"^\s*(?:\S+\s*=\s*)?((?:\(.*?\)|\S+))\s*(all-gather|all-reduce|"
+        r"reduce-scatter|all-to-all|collective-permute)",
+        hlo_text, re.M,
+    ):
+        shapes_str, kind = m.group(1), m.group(2)
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        per_kind[kind] = per_kind.get(kind, 0) + total
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes_by_kind": per_kind, "count_by_kind": count,
+            "total_bytes": sum(per_kind.values())}
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str) -> dict:
+    t0 = time.time()
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                 "devices": int(mesh.devices.size)}
+    if arch == "dade-ivf":
+        step = annservice.build_search_step(SVC_CONFIG, mesh)
+        args, shardings = annservice.search_input_specs(SVC_CONFIG, mesh)
+        jitted = jax.jit(step, in_shardings=shardings)
+        rec["kind"] = "search"
+    else:
+        from repro.launch.specs import cell_is_runnable
+        ok, why = cell_is_runnable(get_config(arch), shape)
+        if not ok:
+            rec["status"] = "skipped"
+            rec["reason"] = why
+            return rec
+        cell = build_cell(arch, shape, mesh)
+        rec["kind"] = cell.kind
+        # Donation: train steps alias (params, opt_state); decode steps alias
+        # the KV/SSM caches — the same aliasing a real serving/training loop
+        # uses, and required to fit the big decode caches in HBM.
+        donate = {"train": (0, 1), "decode": (2,), "prefill": ()}[cell.kind]
+        kw = {}
+        if getattr(cell, "out_shardings", None) is not None:
+            kw["out_shardings"] = cell.out_shardings
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                         donate_argnums=donate, **kw)
+        args = cell.args
+
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    from repro.launch.hlo_census import census
+    try:
+        cen = census(hlo)
+    except Exception as e:  # census is best-effort; raw numbers remain
+        cen = {"error": f"{type(e).__name__}: {e}"}
+    rec.update({
+        "status": "ok",
+        "compile_s": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "collectives": collective_bytes(hlo),
+        "census": cen,  # trip-count-corrected (see hlo_census.py)
+        "hlo_bytes": len(hlo),
+    })
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--single-only", action="store_true")
+    ap.add_argument("--multipod-only", action="store_true")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    args = ap.parse_args()
+
+    meshes = []
+    if not args.multipod_only:
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if not args.single_only:
+        meshes.append(("pod2x16x16", make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else LM_ARCHS + ["dade-ivf"]
+    failures = []
+    for mesh_name, mesh in meshes:
+        outdir = os.path.join(RESULTS, mesh_name)
+        os.makedirs(outdir, exist_ok=True)
+        for arch in archs:
+            shapes = (
+                [args.shape] if args.shape
+                else (list(SHAPES) if arch != "dade-ivf" else ["search_1m"])
+            )
+            for shape in shapes:
+                out = os.path.join(outdir, f"{arch}__{shape}.json")
+                if os.path.exists(out) and not args.force:
+                    print(f"[cached] {mesh_name} {arch} {shape}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mesh, mesh_name)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures.append((mesh_name, arch, shape, str(e)[:120]))
+                with open(out, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    gb = rec["memory"]["argument_bytes"] / 2**30
+                    extra = (f" args={gb:.2f}GiB temp="
+                             f"{rec['memory']['temp_bytes']/2**30:.2f}GiB "
+                             f"flops={rec['cost']['flops']:.3g} "
+                             f"coll={rec['collectives']['total_bytes']:.3g}B "
+                             f"({rec['compile_s']}s)")
+                elif status == "skipped":
+                    extra = f" ({rec['reason']})"
+                else:
+                    extra = f" {rec.get('error', '')[:140]}"
+                print(f"[{status}] {mesh_name} {arch} {shape}{extra}", flush=True)
+
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f)
+        raise SystemExit(1)
+    print("\nDry-run complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,334 @@
+"""Trip-count-aware HLO census.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so any scanned
+model (layers, q-chunks, loss chunks) under-reports FLOPs/bytes/collectives
+by the trip count.  This parser walks the post-optimization HLO text,
+extracts per-computation costs, resolves the call graph (while bodies ×
+trip count, fusions inlined once, calls × 1), and returns corrected totals:
+
+    flops            — dot ops: 2 · prod(output dims) · contracted size
+    bytes            — per top-level op: operand bytes + output bytes
+                       (post-fusion, so this approximates HBM traffic)
+    collective_bytes — output bytes of all-gather/all-reduce/reduce-scatter/
+                       all-to-all/collective-permute (+ per-kind breakdown)
+
+Trip counts come from the loop-condition constant (scan lowers to
+``compare(iv, constant(N))``); unresolvable loops conservatively count 1 and
+are reported in ``unresolved_loops``.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["census"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\(.*?\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?))\s*([\w\-]+)\(")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:\s*\{"?n"?:\s*"?(\d+)')
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _parse_computations(hlo: str) -> tuple[dict[str, list[str]], str | None]:
+    """Split HLO text into computations; returns (comps, entry_name)."""
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    entry: str | None = None
+    for line in hlo.splitlines():
+        if line and not line.startswith(" ") and line.rstrip().endswith("{"):
+            hdr = line.strip()
+            is_entry = hdr.startswith("ENTRY")
+            if is_entry:
+                hdr = hdr[len("ENTRY"):].strip()
+            name = hdr.lstrip("%").split(" ")[0].split("(")[0]
+            if not name:
+                continue
+            cur = name
+            comps[cur] = []
+            if is_entry:
+                entry = name
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def _dot_flops(line: str, symbols: dict[str, str]) -> float:
+    """2 * prod(out dims) * prod(contracting sizes of lhs).
+
+    Post-optimization HLO references operands by name, so the lhs shape is
+    resolved through the per-computation symbol table."""
+    m = _OP_RE.match(line)
+    out_dims = _shape_dims(m.group(2))
+    out_elems = 1
+    for _, dims in out_dims:
+        for d in dims:
+            out_elems *= d
+    args = line[m.end():]
+    first = args.split(")", 1)[0].split(",")[0].strip().lstrip("%")
+    lhs_shape_text = symbols.get(first, first)  # inline shapes still work
+    opnds = _shape_dims(lhs_shape_text)
+    c = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    contracted = 1
+    if c and opnds:
+        lhs_dims = opnds[0][1]
+        for i in c.group(1).split(","):
+            if i and int(i) < len(lhs_dims):
+                contracted *= lhs_dims[int(i)]
+    return 2.0 * out_elems * contracted
+
+
+def _fusion_access(lines: list[str]) -> tuple[dict[int, float], float | None]:
+    """Memory actually touched by a fused computation.
+
+    Returns (per-parameter access bytes, effective output bytes or None).
+    A fusion's boundary shapes wildly over-state traffic when the kernel only
+    *slices* a big carried buffer (e.g. a (L,B,S,H,D) KV cache updated in
+    place): the real traffic is the slice, not the buffer.  A parameter used
+    exclusively by slice-family ops is charged its slices; any other use
+    charges the full parameter once.  A root dynamic-update-slice writes only
+    the update (in-place aliasing), not the full result.
+    """
+    symbols: dict[str, str] = {}
+    param_idx: dict[str, int] = {}
+    for ln in lines:
+        m = _OP_RE.match(ln)
+        if not m:
+            continue
+        symbols[m.group(1)] = m.group(2)
+        if m.group(3) == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", ln)
+            if pm:
+                param_idx[m.group(1)] = int(pm.group(1))
+
+    access: dict[int, float] = {i: 0.0 for i in param_idx.values()}
+    full: set[int] = set()
+    root_out: float | None = None
+    for ln in lines:
+        m = _OP_RE.match(ln)
+        if not m:
+            continue
+        op = m.group(3)
+        if op == "parameter":
+            continue
+        out_b = _shape_bytes(m.group(2))
+        opnds = [t.strip().lstrip("%")
+                 for t in ln[m.end():].split(")", 1)[0].split(",")]
+        is_root = ln.lstrip().startswith("ROOT")
+        if op in ("dynamic-slice", "slice", "gather"):
+            tgt = opnds[0] if opnds else ""
+            if tgt in param_idx:
+                access[param_idx[tgt]] += out_b
+            if is_root:
+                root_out = out_b
+        elif op == "dynamic-update-slice":
+            tgt, upd = (opnds + ["", ""])[:2]
+            upd_b = _shape_bytes(symbols.get(upd, upd))
+            if tgt in param_idx:
+                access[param_idx[tgt]] += upd_b  # read-modify region only
+            if upd in param_idx:
+                full.add(param_idx[upd])
+            if is_root:
+                root_out = upd_b
+        else:
+            for t in opnds:
+                if t in param_idx:
+                    full.add(param_idx[t])
+            if is_root and op != "tuple":
+                root_out = out_b
+    for i in full:
+        access[i] = None  # sentinel: charge full size at the call site
+    return access, root_out
+
+
+def census(hlo: str) -> dict:
+    comps, entry = _parse_computations(hlo)
+    fusion_access = {name: _fusion_access(lines) for name, lines in comps.items()}
+
+    # per-computation local costs + call edges
+    local = {}
+    edges: dict[str, list[tuple[str, str]]] = defaultdict(list)  # comp -> [(kind, callee)]
+    loop_trip: dict[str, int] = {}  # while-op body name -> trip count
+
+    # fallback loop-condition constants (when backend_config lacks the trip)
+    cond_consts: dict[str, list[int]] = {}
+    for name, lines in comps.items():
+        consts = []
+        for ln in lines:
+            for mm in re.finditer(r"constant\((\d+)\)", ln):
+                consts.append(int(mm.group(1)))
+        cond_consts[name] = consts
+
+    for name, lines in comps.items():
+        flops = 0.0
+        bytes_ = 0.0
+        coll = defaultdict(float)
+        coll_n = defaultdict(int)
+        # first pass: symbol table (op name -> result type text)
+        symbols: dict[str, str] = {}
+        for ln in lines:
+            m = _OP_RE.match(ln)
+            if m:
+                symbols[m.group(1)] = m.group(2)
+        for ln in lines:
+            m = _OP_RE.match(ln)
+            if not m:
+                continue
+            op = m.group(3)
+            if op in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast", "after-all", "copy"):
+                continue
+            out_b = _shape_bytes(m.group(2))
+            # operand bytes resolved through the symbol table
+            args = ln[m.end():].split(")", 1)[0]
+            opnd_names = [t.strip().lstrip("%") for t in args.split(",")]
+            opnd_b = [_shape_bytes(symbols.get(t, t)) for t in opnd_names]
+            in_b = sum(opnd_b)
+            # slice-family ops touch only the slice, not the full operand
+            if op in ("dynamic-slice", "slice", "gather"):
+                in_b = out_b
+            elif op == "dynamic-update-slice":
+                upd = opnd_b[1] if len(opnd_b) > 1 else out_b
+                out_b, in_b = upd, upd  # in-place: write slice, read update
+            elif op == "scatter":
+                upd = opnd_b[-1] if opnd_b else out_b
+                out_b, in_b = upd, 2 * upd
+            elif op == "fusion":
+                f = re.search(r"calls=%?([\w\.\-]+)", ln)
+                if f and f.group(1) in fusion_access:
+                    acc, root_out = fusion_access[f.group(1)]
+                    in_b = 0.0
+                    for i, ob in enumerate(opnd_b):
+                        a = acc.get(i, 0.0)
+                        in_b += ob if a is None else min(a, ob)
+                    if root_out is not None:
+                        out_b = min(root_out, out_b)
+            bytes_ += out_b + in_b
+            if op == "dot":
+                flops += _dot_flops(ln, symbols)
+            for ck in _COLLECTIVES:
+                if op.startswith(ck):
+                    coll[ck] += out_b
+                    coll_n[ck] += 1
+                    break
+            # call edges
+            if op == "while":
+                b = re.search(r"body=%?([\w\.\-]+)", ln)
+                c = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if b:
+                    t = _TRIP_RE.search(ln)  # backend_config known_trip_count
+                    if t:
+                        trip = int(t.group(1))
+                    elif c and cond_consts.get(c.group(1)):
+                        trip = max(cond_consts[c.group(1)])
+                    else:
+                        trip = 1
+                    loop_trip[b.group(1)] = trip
+                    edges[name].append(("while", b.group(1)))
+            elif op == "fusion":
+                f = re.search(r"calls=%?([\w\.\-]+)", ln)
+                if f:
+                    edges[name].append(("fusion", f.group(1)))
+            elif op in ("call", "custom-call"):
+                f = re.search(r"to_apply=%?([\w\.\-]+)", ln)
+                if f:
+                    edges[name].append(("call", f.group(1)))
+            elif op == "conditional":
+                for f in re.finditer(r"(?:true_computation|false_computation|"
+                                     r"branch_computations=\{)%?([\w\.\-]+)", ln):
+                    edges[name].append(("call", f.group(1)))
+            elif op in ("reduce", "sort", "scatter", "map", "reduce-window",
+                        "select-and-scatter"):
+                for f in re.finditer(r"(?:to_apply|called_computations=\{)=?%?"
+                                     r"([\w\.\-]+)", ln):
+                    pass  # tiny scalar computations; ignore
+        local[name] = {
+            "flops": flops, "bytes": bytes_,
+            "coll": dict(coll), "coll_n": dict(coll_n),
+        }
+
+    if entry is None:
+        # fallback: the computation never called by another
+        callees = {c for lst in edges.values() for _, c in lst}
+        roots = [n for n in comps if n not in callees]
+        entry = roots[0] if roots else next(iter(comps))
+
+    totals = {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+    by_kind: dict[str, float] = defaultdict(float)
+    n_by_kind: dict[str, int] = defaultdict(int)
+    unresolved = []
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def cost_of(name: str) -> tuple[float, float, tuple, tuple]:
+        lc = local.get(name)
+        if lc is None:
+            return (0.0, 0.0, (), ())
+        f, b = lc["flops"], lc["bytes"]
+        coll = defaultdict(float, lc["coll"])
+        coll_n = defaultdict(int, lc["coll_n"])
+        for kind, callee in edges.get(name, ()):
+            cf, cb, cc, cn = cost_of(callee)
+            mult = loop_trip.get(callee, 1) if kind == "while" else 1
+            if kind == "fusion":
+                b -= 0.0  # fusion boundary bytes already counted; add flops
+                f += cf
+                continue
+            f += cf * mult
+            b += cb * mult
+            for k, v in cc:
+                coll[k] += v * mult
+            for k, v in cn:
+                coll_n[k] += v * mult
+        return (f, b, tuple(coll.items()), tuple(coll_n.items()))
+
+    f, b, cc, cn = cost_of(entry)
+    totals["flops"] = f
+    totals["bytes"] = b
+    for k, v in cc:
+        by_kind[k] += v
+    for k, v in cn:
+        n_by_kind[k] += v
+    totals["collective_bytes"] = sum(by_kind.values())
+    return {
+        **totals,
+        "coll_by_kind": dict(by_kind),
+        "coll_count_by_kind": dict(n_by_kind),
+        "loops": {k: v for k, v in loop_trip.items()},
+        "entry": entry,
+    }

@@ -1,0 +1,120 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb harness: lower one cell under rule/flag variants, print the
+three roofline terms + memory so hypothesis->change->measure cycles take one
+command.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch mixtral-8x7b \
+        --shape train_4k [--override expert=model] [--multipod]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch.hlo_census import census  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops  # noqa: E402
+from repro.launch.steps import build_cell  # noqa: E402
+
+
+def run(arch: str, shape: str, *, multipod=False, overrides=None, dump_hlo=None,
+        donate=True, two_phase=True, cfgset=None):
+    mesh = make_production_mesh(multi_pod=multipod)
+    t0 = time.time()
+    if arch == "dade-ivf":
+        from repro.configs.dade_ivf import CONFIG as SVC
+        from repro.launch import annservice
+
+        step = annservice.build_search_step(SVC, mesh, two_phase=two_phase)
+        args, shardings = annservice.search_input_specs(SVC, mesh)
+
+        class _C:  # minimal cell shim
+            kind = "search"
+            step_fn = staticmethod(step)
+            in_shardings = shardings
+        cell = _C()
+        cell.args = args
+        dn = ()
+    else:
+        cell = build_cell(arch, shape, mesh, overrides=overrides, cfgset=cfgset)
+        dn = ({"train": (0, 1), "decode": (2,), "prefill": ()}[cell.kind]
+              if donate else ())
+    kw = {}
+    if getattr(cell, "out_shardings", None) is not None:
+        kw["out_shardings"] = cell.out_shardings
+    jt = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                 donate_argnums=dn, **kw)
+    with jax.set_mesh(mesh):
+        lowered = jt.lower(*cell.args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    if dump_hlo:
+        with open(dump_hlo, "w") as f:
+            f.write(hlo)
+    cen = census(hlo)
+    t_c = cen["flops"] / PEAK_FLOPS
+    t_m = cen["bytes"] / HBM_BW
+    t_x = cen["collective_bytes"] / ICI_BW
+    total_mem = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes) / 2**30
+    mf = (model_flops(arch, shape) / mesh.devices.size
+          if arch != "dade-ivf" and shape in ("train_4k", "prefill_32k",
+                                              "decode_32k", "long_500k") else 0)
+    bound = max(t_c, t_m, t_x)
+    print(f"{arch} {shape} mesh={'2x16x16' if multipod else '16x16'} "
+          f"overrides={overrides}")
+    print(f"  compute {t_c*1e3:9.2f} ms | memory {t_m*1e3:9.2f} ms | "
+          f"collective {t_x*1e3:9.2f} ms | bound "
+          f"{'CMX'[[t_c, t_m, t_x].index(bound)]}")
+    print(f"  hbm/device: args={mem.argument_size_in_bytes/2**30:.2f} "
+          f"out={mem.output_size_in_bytes/2**30:.2f} "
+          f"temp={mem.temp_size_in_bytes/2**30:.2f} "
+          f"alias={mem.alias_size_in_bytes/2**30:.2f} total={total_mem:.2f} GiB")
+    if mf:
+        print(f"  useful={mf/cen['flops']*100:.1f}%  "
+              f"roofline_frac={(mf/bound)/PEAK_FLOPS*100:.2f}%")
+    print(f"  coll by kind: "
+          f"{ {k: round(v/2**30, 2) for k, v in cen['coll_by_kind'].items()} } GiB")
+    print(f"  compile {time.time()-t0:.1f}s")
+    return cen, mem
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--dump-hlo", default=None)
+    ap.add_argument("--override", action="append", default=[],
+                    help="logical=mesh1+mesh2 rule override, e.g. expert=model")
+    ap.add_argument("--no-two-phase", action="store_true")
+    ap.add_argument("--cfgset", action="append", default=[],
+                    help="ArchConfig field override, e.g. pad_heads_to=64")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=")
+        overrides[k] = tuple(x for x in v.split("+") if x)
+    cfgset = {}
+    for cv in args.cfgset:
+        k, v = cv.split("=")
+        cfgset[k] = type(getattr(__import__("repro.models.common",
+                                            fromlist=["ArchConfig"]).ArchConfig(
+            arch_id="x", family="dense", num_layers=1, d_model=8, n_heads=1,
+            n_kv_heads=1, d_ff=8, vocab_size=8), k))(eval(v))
+    run(args.arch, args.shape, multipod=args.multipod,
+        overrides=overrides or None, dump_hlo=args.dump_hlo,
+        donate=not args.no_donate, two_phase=not args.no_two_phase,
+        cfgset=cfgset or None)
+
+
+if __name__ == "__main__":
+    main()

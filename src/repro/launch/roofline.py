@@ -1,0 +1,195 @@
+"""Roofline analysis over the dry-run artifacts.
+
+Per (arch × shape × mesh) cell, from the compiled module's cost analysis
+(per-device, partitioned) and the HLO collective census:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for the useful-compute
+ratio.  TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh pod16x16] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.launch.specs import SHAPES
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+__all__ = ["param_count", "model_flops", "analyse", "load_records"]
+
+
+def param_count(arch: str) -> tuple[float, float]:
+    """(total_params, active_params) from the config (analytic)."""
+    cfg = get_config(arch)
+    d, v = cfg.d_model, cfg.vocab_padded
+    embed = v * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params():
+        return d * cfg.qkv_dim * 2 + d * cfg.kv_dim * 2
+
+    def mlp_params(f):
+        mult = 3 if cfg.activation in ("silu", "geglu") else 2
+        return mult * d * f
+
+    total = active = embed
+    if cfg.family in ("dense",):
+        per = attn_params() + mlp_params(cfg.d_ff)
+        total += cfg.num_layers * per
+        active = total
+    elif cfg.family == "moe":
+        f = cfg.moe_d_ff or cfg.d_ff
+        shared = mlp_params(cfg.shared_d_ff) if cfg.shared_d_ff else 0
+        per_tot = attn_params() + cfg.num_experts * mlp_params(f) + shared
+        per_act = attn_params() + cfg.experts_per_tok * mlp_params(f) + shared
+        total += cfg.num_layers * per_tot
+        active += cfg.num_layers * per_act
+    elif cfg.family == "ssm":
+        di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        per = d * (2 * di + 2 * n + h) + di * d + (cfg.ssm_conv + 1) * (di + 2 * n)
+        total += cfg.num_layers * per
+        active = total
+    elif cfg.family == "hybrid":
+        di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        per = d * (2 * di + 2 * n + h) + di * d + (cfg.ssm_conv + 1) * (di + 2 * n)
+        total += cfg.num_layers * per + attn_params() + mlp_params(cfg.d_ff)
+        active = total  # shared block re-executes; params shared
+    elif cfg.family == "encdec":
+        per = attn_params() + mlp_params(cfg.d_ff)
+        dec = per + attn_params()  # + cross attention
+        total += cfg.encoder_layers * per + cfg.num_layers * dec
+        active = total
+    elif cfg.family == "vlm":
+        per = attn_params() + mlp_params(cfg.d_ff)
+        n_cross = cfg.num_layers // cfg.cross_every
+        total += cfg.num_layers * per + n_cross * (attn_params() + mlp_params(cfg.d_ff))
+        active = total
+    return float(total), float(active)
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """MODEL_FLOPS = 6·N_active·D(tokens) for train; 2·N·D for inference."""
+    total, active = param_count(arch)
+    spec = SHAPES[shape]
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq
+        return 6.0 * active * tokens
+    if spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * spec.global_batch
+
+
+def load_records(mesh: str) -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(RESULTS, mesh, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def analyse(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    arch, shape = rec["arch"], rec["shape"]
+    cen = rec.get("census", {})
+    if cen and "flops" in cen:
+        # trip-count-corrected HLO census (hlo_census.py) — raw
+        # cost_analysis counts while bodies once and under-reports scans.
+        flops_dev = cen["flops"]
+        bytes_dev = cen["bytes"]
+        coll_dev = cen["collective_bytes"]
+    else:
+        flops_dev = rec["cost"]["flops"]
+        bytes_dev = rec["cost"]["bytes_accessed"]
+        coll_dev = rec["collectives"]["total_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    out = {
+        "arch": arch, "shape": shape, "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "bound_s": max(terms.values()),
+    }
+    if arch != "dade-ivf":
+        mf = model_flops(arch, shape)
+        hlo_total = flops_dev * rec["devices"]
+        out["model_flops"] = mf
+        out["hlo_flops_total"] = hlo_total
+        out["useful_ratio"] = mf / hlo_total if hlo_total else 0.0
+        # fraction of roofline: useful work per sec at the bound vs peak
+        out["roofline_frac"] = (
+            (mf / rec["devices"] / max(terms.values())) / PEAK_FLOPS
+            if max(terms.values()) > 0 else 0.0
+        )
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x*1e3:7.2f}ms"
+    return f"{x*1e6:7.2f}us"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--md", action="store_true", help="markdown table output")
+    args = ap.parse_args()
+
+    rows = []
+    for rec in load_records(args.mesh):
+        a = analyse(rec)
+        if a is None:
+            rows.append((rec["arch"], rec["shape"], rec.get("status"),
+                         rec.get("reason", rec.get("error", ""))[:60]))
+            continue
+        rows.append(a)
+
+    if args.md:
+        print("| arch | shape | compute | memory | collective | dominant | "
+              "useful% | roofline% |")
+        print("|---|---|---|---|---|---|---|---|")
+    else:
+        print(f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+              f"{'coll':>10s} {'dominant':>10s} {'useful%':>8s} {'roof%':>7s}")
+    for r in rows:
+        if isinstance(r, tuple):
+            if args.md:
+                print(f"| {r[0]} | {r[1]} | — | — | — | {r[2]}: {r[3]} | — | — |")
+            else:
+                print(f"{r[0]:24s} {r[1]:12s} {r[2]}: {r[3]}")
+            continue
+        u = f"{100*r.get('useful_ratio', 0):.1f}" if "useful_ratio" in r else "—"
+        rf = f"{100*r.get('roofline_frac', 0):.1f}" if "roofline_frac" in r else "—"
+        if args.md:
+            print(f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} | "
+                  f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+                  f"{r['dominant']} | {u} | {rf} |")
+        else:
+            print(f"{r['arch']:24s} {r['shape']:12s} {fmt_s(r['t_compute_s']):>10s} "
+                  f"{fmt_s(r['t_memory_s']):>10s} {fmt_s(r['t_collective_s']):>10s} "
+                  f"{r['dominant']:>10s} {u:>8s} {rf:>7s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Input specs (ShapeDtypeStruct stand-ins) for every (arch × shape) cell.
+
+Shapes are the assignment's four LM cells plus the paper's own service cell:
+
+  train_4k     seq 4096,    global_batch 256  -> train_step
+  prefill_32k  seq 32768,   global_batch 32   -> prefill_step
+  decode_32k   cache 32768, global_batch 128  -> serve_step (1 token)
+  long_500k    cache 524288, global_batch 1   -> serve_step (1 token);
+               runs only for sub-quadratic-capable archs (SSM / hybrid /
+               SWA / alternating-local) — see DESIGN.md §Arch-applicability
+  search_1m    dade-ivf service: corpus 1M rows/device, 1024 queries
+
+Modality frontends are stubs per the assignment: whisper gets precomputed
+frame embeddings, llama-vision gets projected patch embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+__all__ = ["SHAPES", "ShapeSpec", "input_specs", "cell_is_runnable", "LONG_OK"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# Archs whose long-context decode is sub-quadratic-capable (SSM state,
+# sliding windows, or alternating local attention bounding cache growth).
+LONG_OK = {"mamba2-130m", "zamba2-1.2b", "mixtral-8x7b", "gemma2-9b"}
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and cfg.arch_id not in LONG_OK:
+        return False, "pure full-attention arch: 500k decode skipped (DESIGN.md)"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ArchConfig, spec: ShapeSpec) -> dict[str, Any]:
+    """Training/prefill batch: tokens (+ stub modality embeddings)."""
+    b, s = spec.global_batch, spec.seq
+    out = {
+        "tokens": _sds((b, s), jnp.int32),
+    }
+    if spec.kind == "train":
+        out["labels"] = _sds((b, s), jnp.int32)
+    if cfg.family == "encdec":
+        out["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), cfg.param_dtype)
+    if cfg.family == "vlm":
+        out["vision"] = _sds((b, cfg.vision_seq, cfg.vision_dim), cfg.param_dtype)
+    return out
+
+
+def batch_logical_axes(cfg: ArchConfig, spec: ShapeSpec) -> dict[str, tuple]:
+    out = {"tokens": ("batch", "seq")}
+    if spec.kind == "train":
+        out["labels"] = ("batch", "seq")
+    if cfg.family == "encdec":
+        out["frames"] = ("batch", "frames", "embed")
+    if cfg.family == "vlm":
+        out["vision"] = ("batch", "frames", "embed")
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: str):
+    """(kind, batch_specs, batch_axes) for one cell."""
+    spec = SHAPES[shape]
+    return spec, batch_specs(cfg, spec), batch_logical_axes(cfg, spec)

@@ -1,0 +1,170 @@
+"""Step-function builders + sharding trees for every (arch × shape) cell.
+
+``build_cell`` returns everything the dry-run, the trainer, and the roofline
+analysis need: a jit-able step function, fully-specified in_shardings, and
+ShapeDtypeStruct arguments — no arrays are ever allocated at full scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import tree_shardings, use_rules
+from repro.launch.specs import ShapeSpec, cell_is_runnable, input_specs
+from repro.models.model import LM, build_model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, opt_state_axes
+
+__all__ = ["Cell", "build_cell", "RULE_OVERRIDES"]
+
+# Per-shape logical-rule overrides (see DESIGN.md §6).
+RULE_OVERRIDES: dict[str, dict] = {
+    # 500k-token caches: batch=1, so spread the cache seq over every axis.
+    "long_500k": {"kv_seq": ("model", "data", "pod")},
+}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape: str
+    kind: str  # train | prefill | decode
+    step_fn: Callable
+    args: tuple  # ShapeDtypeStructs
+    in_shardings: tuple
+    model: LM
+    runnable: bool = True
+    skip_reason: str = ""
+    out_shardings: tuple | None = None
+
+
+def _axes_of(model: LM) -> Any:
+    """Parameter logical-axes tree without allocating (captured during an
+    abstract trace of init — the axes leaves are static python tuples)."""
+    box = {}
+
+    def init_only(k):
+        p, ax = model.init(k)
+        box["axes"] = ax
+        return p
+
+    shapes = jax.eval_shape(init_only, jax.random.PRNGKey(0))
+    return shapes, box["axes"]
+
+
+def _cache_shapes_of(model: LM, b: int, cache_len: int):
+    box = {}
+
+    def caches_only():
+        c, ax = model.init_caches(b, cache_len)
+        box["axes"] = ax
+        return c
+
+    shapes = jax.eval_shape(caches_only)
+    return shapes, box["axes"]
+
+
+def build_cell(
+    arch_id: str,
+    shape: str,
+    mesh,
+    *,
+    opt: AdamWConfig | None = None,
+    overrides: dict | None = None,
+    cfgset: dict | None = None,
+) -> Cell:
+    cfg = get_config(arch_id)
+    if cfgset:
+        cfg = dataclasses.replace(cfg, **cfgset)
+    model = build_model(cfg)
+    spec, bspecs, baxes = input_specs(cfg, shape)
+    ok, why = cell_is_runnable(cfg, shape)
+    rules = dict(RULE_OVERRIDES.get(shape, {}))
+    if overrides:
+        rules.update(overrides)
+
+    params_shapes, params_axes = _axes_of(model)
+    param_sh = tree_shardings(params_axes, params_shapes, mesh, rules)
+    batch_sh = tree_shardings(baxes, bspecs, mesh, rules)
+    repl = NamedSharding(mesh, P())
+
+    if spec.kind == "train":
+        opt = opt or AdamWConfig()
+        opt_shapes = jax.eval_shape(adamw_init, params_shapes)
+        opt_sh = tree_shardings(opt_state_axes(params_axes), opt_shapes, mesh, rules)
+
+        ga = max(cfg.grad_accum, 1)
+
+        def train_step(params, opt_state, batch):
+            with use_rules(mesh, rules):
+                if ga == 1:
+                    (loss, mets), grads = jax.value_and_grad(
+                        model.loss_fn, has_aux=True)(params, batch)
+                else:
+                    # gradient accumulation: microbatches scale activation
+                    # memory by 1/ga; grads accumulate in f32 (sharded like
+                    # the params by GSPMD propagation).
+                    mb = jax.tree.map(
+                        lambda a: a.reshape(ga, a.shape[0] // ga, *a.shape[1:]),
+                        batch)
+
+                    def body(carry, b_i):
+                        gsum, lsum = carry
+                        (l, mets_i), g = jax.value_and_grad(
+                            model.loss_fn, has_aux=True)(params, b_i)
+                        gsum = jax.tree.map(
+                            lambda x, y: x + y.astype(jnp.float32), gsum, g)
+                        return (gsum, lsum + l), mets_i
+
+                    zeros = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                    (gsum, lsum), mets = jax.lax.scan(
+                        body, (zeros, jnp.zeros((), jnp.float32)), mb)
+                    grads = jax.tree.map(lambda g: g / ga, gsum)
+                    loss = lsum / ga
+                    mets = jax.tree.map(lambda m: m[-1], mets)
+                new_p, new_s, om = adamw_update(opt, params, grads, opt_state)
+            return new_p, new_s, {"loss": loss, **mets, **om}
+
+        return Cell(arch_id, shape, spec.kind, train_step,
+                    (params_shapes, opt_shapes, bspecs),
+                    (param_sh, opt_sh, batch_sh), model, ok, why)
+
+    if spec.kind == "prefill":
+        def prefill_step(params, batch):
+            with use_rules(mesh, rules):
+                return model.prefill(params, batch)
+
+        return Cell(arch_id, shape, spec.kind, prefill_step,
+                    (params_shapes, bspecs), (param_sh, batch_sh), model, ok, why)
+
+    # decode: one new token against a seq-long cache
+    b = spec.global_batch
+    cache_shapes, cache_axes = _cache_shapes_of(model, b, spec.seq)
+    cache_sh = tree_shardings(cache_axes, cache_shapes, mesh, rules)
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    token_sh = tree_shardings(("batch", "seq"), token, mesh, rules)
+
+    def serve_step(params, token, caches, pos):
+        with use_rules(mesh, rules):
+            return model.decode_step(params, token, caches, pos)
+
+    cell = Cell(arch_id, shape, spec.kind, serve_step,
+                (params_shapes, token, cache_shapes, pos),
+                (param_sh, token_sh, cache_sh, repl), model, ok, why)
+    # Pin the output cache shardings to the input ones so cache donation
+    # aliases (an inferred mismatch silently disables donation -> a second
+    # full cache allocation).
+    logits_sh = tree_shardings(("batch", "vocab"),
+                               jax.ShapeDtypeStruct(
+                                   (b, cfg.vocab_padded), jnp.float32),
+                               mesh, rules)
+    cell.out_shardings = (logits_sh, cache_sh)
+    return cell

@@ -1,0 +1,333 @@
+"""GQA/MQA attention: RoPE, sliding window, logit softcap, cross-attention,
+decode with sharded KV caches.
+
+Three entry points:
+  attn_train    — full-sequence forward, query-chunked (lax.scan) so the
+                  (B, H, Sq, Skv) score tile never exceeds q_chunk rows;
+                  also returns (k, v) so prefill reuses the same path.
+  attn_decode   — one new token against a fixed-size KV cache.  The cache
+                  carries the logical axis "kv_seq" (sharded over 'model' on
+                  the production mesh) — GSPMD turns the softmax/PV
+                  reductions into the flash-decoding partial-merge pattern.
+  attn_cross    — queries over a static memory (encoder output / vision).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ArchConfig, Initializer, rope, softcap
+
+__all__ = ["init_attention", "attn_train", "attn_decode", "attn_cross", "KVCache"]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_cache, Hkv, Dh)
+    v: jax.Array  # (B, S_cache, Hkv, Dh)
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache with per-(token, head) scales — 4x less HBM residency
+    than bf16 (the difference between fitting and not fitting batch-128
+    decode_32k for MHA-style archs like codeqwen).  Dequantization fuses
+    into the attention reads on TPU."""
+
+    k: jax.Array  # int8 (B, S_cache, Hkv, Dh)
+    v: jax.Array  # int8
+    k_scale: jax.Array  # f32 (B, S_cache, Hkv)
+    v_scale: jax.Array  # f32
+
+
+def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, 1, Hkv, Dh) -> (int8 values, (B, 1, Hkv) scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def init_attention(init: Initializer, cfg: ArchConfig, *, cross: bool = False):
+    d, qkv, kvd = cfg.d_model, cfg.qkv_dim, cfg.kv_dim
+    kv_in = d
+    if cross and cfg.family == "vlm" and cfg.vision_dim:
+        kv_in = cfg.vision_dim
+    p = {
+        "wq": init.dense((d, qkv), ("embed_fsdp", "qkv")),
+        "wk": init.dense((kv_in, kvd), ("embed_fsdp", "qkv")),
+        "wv": init.dense((kv_in, kvd), ("embed_fsdp", "qkv")),
+        "wo": init.dense((qkv, d), ("qkv", "embed_fsdp")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init.ones((cfg.hdim,), ("head_dim",))
+        p["k_norm"] = init.ones((cfg.hdim,), ("head_dim",))
+    return p
+
+
+def _project_q(p, x, cfg: ArchConfig):
+    b, s, _ = x.shape
+    q = constrain(x @ p["wq"], "batch", "seq", "qkv")
+    q = q.reshape(b, s, cfg.n_heads, cfg.hdim)
+    return constrain(q, "batch", "seq", "heads", "head_dim")
+
+
+def _project_kv(p, x, cfg: ArchConfig):
+    b, s, _ = x.shape
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.hdim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.hdim)
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return k, v
+
+
+def _scores_mask(qpos, kpos, *, causal: bool, window: int):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return m
+
+
+def _sdpa(q, k, v, mask, cap: float):
+    """q: (B,Sq,Hkv,G,Dh) k/v: (B,Skv,Hkv,Dh) mask: (Sq,Skv) or None."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = softcap(scores, cap)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(q.dtype)
+
+
+def _flat_sdpa(q, k, v, mask, cap: float):
+    """Flat-head attention: q (B,Sq,Hp,Dh), k/v (B,Skv,Hp,Dh) pre-repeated."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = softcap(scores, cap)
+    if mask is not None:
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(q.dtype)
+
+
+def _attn_flat_padded(p, q, k, v, positions, cfg: ArchConfig, *,
+                      window: int, causal: bool):
+    """Mesh-divisible head-padded attention (EXPERIMENTS.md §Perf iter B1).
+
+    Pads q-heads per GQA group to cfg.pad_heads_to and repeats K/V so the
+    head axis is flat and shardable; score tensors then shard over 'model'
+    instead of replicating (deepseek: 56 -> 64 heads, 16-way TP on scores).
+    """
+    b, s, h, dh = q.shape
+    hkv = cfg.n_kv_heads
+    g = h // hkv
+    hp = cfg.pad_heads_to or h
+    gp = hp // hkv
+    if gp > g:
+        qg = q.reshape(b, s, hkv, g, dh)
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, gp - g), (0, 0)))
+        q = qg.reshape(b, s, hp, dh)
+    qf = constrain(q, "batch", "seq", "heads", "head_dim")
+    kf = constrain(jnp.repeat(k, gp, axis=2), "batch", "seq", "heads", "head_dim")
+    vf = constrain(jnp.repeat(v, gp, axis=2), "batch", "seq", "heads", "head_dim")
+
+    qc = cfg.q_chunk
+    if s % qc != 0 or s <= qc:
+        mask = _scores_mask(positions, positions, causal=causal, window=window)
+        out = _flat_sdpa(qf, kf, vf, mask, cfg.attn_softcap)
+    else:
+        nch = s // qc
+        qch = jnp.moveaxis(qf.reshape(b, nch, qc, hp, dh), 1, 0)
+        pch = positions.reshape(nch, qc)
+
+        def body(carry, xs):
+            qi, pi = xs
+            mask = _scores_mask(pi, positions, causal=causal, window=window)
+            return carry, _flat_sdpa(qi, kf, vf, mask, cfg.attn_softcap)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        _, out = jax.lax.scan(body, (), (qch, pch))
+        out = jnp.moveaxis(out, 0, 1).reshape(b, s, hp, dh)
+
+    if gp > g:
+        out = out.reshape(b, s, hkv, gp, dh)[:, :, :, :g, :]
+    return out.reshape(b, s, h * dh)
+
+
+def attn_train(
+    p,
+    x: jax.Array,  # (B, S, D)
+    cfg: ArchConfig,
+    *,
+    window: int = 0,
+    causal: bool = True,
+    positions: jax.Array | None = None,
+) -> tuple[jax.Array, KVCache]:
+    b, s, d = x.shape
+    hkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    if positions is None:
+        positions = jnp.arange(s)
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if cfg.qk_norm:
+        from repro.models.common import rmsnorm  # local import to avoid cycle
+        q = rmsnorm(q, p["q_norm"], cfg.rms_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.rms_eps)
+
+    # FLAT-head attention is the default for train/prefill: the grouped
+    # (hkv, g) score layout let GSPMD pick shardings whose backward could
+    # not be resharded (involuntary full replication — 169 GiB/device on
+    # llama-vision train_4k).  A flat head axis shards cleanly; K/V are
+    # repeated per group (transient, g x kv bytes).  pad_heads_to > n_heads
+    # additionally pads to a mesh-divisible head count (§Perf iter B2).
+    out = _attn_flat_padded(p, q, k, v, positions, cfg,
+                            window=window, causal=causal)
+    out = constrain(out, "batch", "seq", "qkv")
+    # residual-stream outputs are sequence-sharded (Megatron SP): the wo
+    # partial-sum all-reduce becomes a reduce-scatter.
+    y = constrain(out @ p["wo"], "batch", "act_seq", "embed")
+    return y, KVCache(k=k, v=v)
+
+
+def attn_decode(
+    p,
+    x: jax.Array,  # (B, 1, D)
+    cache: KVCache,  # (B, S_cache, Hkv, Dh) — logical axis kv_seq on S
+    pos: jax.Array,  # () current position (number of tokens already cached)
+    cfg: ArchConfig,
+    *,
+    window: int = 0,
+) -> tuple[jax.Array, KVCache]:
+    b = x.shape[0]
+    hkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    s_cache = cache.k.shape[1]
+
+    q = _project_q(p, x, cfg)  # (B,1,H,Dh)
+    k_new, v_new = _project_kv(p, x, cfg)  # (B,1,Hkv,Dh)
+    if cfg.rope_theta > 0:
+        ppos = pos[None] if pos.ndim == 0 else pos
+        q = rope(q, ppos, cfg.rope_theta)
+        k_new = rope(k_new, ppos, cfg.rope_theta)
+    if cfg.qk_norm:
+        from repro.models.common import rmsnorm
+        q = rmsnorm(q, p["q_norm"], cfg.rms_eps)
+        k_new = rmsnorm(k_new, p["k_norm"], cfg.rms_eps)
+
+    # Ring-buffer write (windowed caches wrap; full caches have pos < S).
+    slot = jnp.mod(pos, s_cache)
+    quant = isinstance(cache, QuantKVCache)
+    if quant:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        kc = jax.lax.dynamic_update_slice(cache.k, kq, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache.v, vq, (0, slot, 0, 0))
+        ks_c = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, slot, 0))
+        vs_c = jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, slot, 0))
+        kc = constrain(kc, "batch", "kv_seq", "kv_heads", "head_dim")
+        vc = constrain(vc, "batch", "kv_seq", "kv_heads", "head_dim")
+        # dequantize at read (fuses into the attention matmul on TPU)
+        k = (kc.astype(jnp.float32) * ks_c[..., None]).astype(x.dtype)
+        v = (vc.astype(jnp.float32) * vs_c[..., None]).astype(x.dtype)
+        new_cache = QuantKVCache(k=kc, v=vc, k_scale=ks_c, v_scale=vs_c)
+    else:
+        k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+        k = constrain(k, "batch", "kv_seq", "kv_heads", "head_dim")
+        v = constrain(v, "batch", "kv_seq", "kv_heads", "head_dim")
+        new_cache = None
+
+    kpos = jnp.arange(s_cache)
+    # Valid = written positions; with wraparound every slot is valid once
+    # pos >= s_cache.  (RoPE phases for wrapped slots are stale by one window
+    # — acceptable for the serving dry-run; exact ring-RoPE is a serve-time
+    # detail orthogonal to sharding/roofline.)
+    valid = jnp.where(pos >= s_cache, jnp.ones_like(kpos, bool), kpos <= slot)
+    scale = 1.0 / math.sqrt(cfg.hdim)
+    qg = q.reshape(b, 1, hkv, g, cfg.hdim)
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    out = out.reshape(b, 1, cfg.qkv_dim)
+    y = constrain(out @ p["wo"], "batch", "seq", "embed")
+    return y, (new_cache if quant else KVCache(k=k, v=v))
+
+
+def attn_cross(
+    p,
+    x: jax.Array,  # (B, S, D)
+    memory_kv: KVCache,  # precomputed encoder/vision K,V (B, M, Hkv, Dh)
+    cfg: ArchConfig,
+) -> jax.Array:
+    """Cross attention in FLAT-head layout, q-chunked.
+
+    The grouped (hkv, g) layout let GSPMD pick a (8, 2)-way sharding for the
+    (B, hkv, g, S, M) scores whose backward could not be resharded — it fell
+    back to full replication (11 GiB/tensor on llama-vision train_4k,
+    169 GiB/device total).  A flat head axis shards cleanly and the q-chunk
+    scan bounds the live score tile.
+    """
+    b, s, _ = x.shape
+    hkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q = _project_q(p, x, cfg)  # no RoPE on cross queries (whisper/llama-v)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    kf = jnp.repeat(memory_kv.k, g, axis=2)  # (B, M, H, Dh)
+    vf = jnp.repeat(memory_kv.v, g, axis=2)
+    kf = constrain(kf, "batch", "frames", "heads", "head_dim")
+    vf = constrain(vf, "batch", "frames", "heads", "head_dim")
+
+    qc = cfg.q_chunk
+    if s % qc != 0 or s <= qc:
+        out = _flat_sdpa(q, kf, vf, None, 0.0)
+    else:
+        nch = s // qc
+        qch = jnp.moveaxis(q.reshape(b, nch, qc, cfg.n_heads, cfg.hdim), 1, 0)
+
+        def body(carry, qi):
+            return carry, _flat_sdpa(qi, kf, vf, None, 0.0)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        _, out = jax.lax.scan(body, (), qch)
+        out = jnp.moveaxis(out, 0, 1).reshape(b, s, cfg.n_heads, cfg.hdim)
+
+    out = out.reshape(b, s, cfg.qkv_dim)
+    out = constrain(out, "batch", "seq", "qkv")
+    return constrain(out @ p["wo"], "batch", "act_seq", "embed")
+
+
+def cross_memory(p, memory: jax.Array, cfg: ArchConfig) -> KVCache:
+    """Precompute cross-attention K/V from encoder/vision states (B, M, Dm)."""
+    b, m, _ = memory.shape
+    k = (memory @ p["wk"]).reshape(b, m, cfg.n_kv_heads, cfg.hdim)
+    v = (memory @ p["wv"]).reshape(b, m, cfg.n_kv_heads, cfg.hdim)
+    return KVCache(k=k, v=v)

@@ -1,0 +1,178 @@
+"""Transformer/SSM blocks and scanned layer stacks.
+
+``init_stack`` initializes N structurally-identical blocks with stacked
+parameters (leading 'layers' axis) so the model applies them with
+``jax.lax.scan`` — compile time stays O(1) in depth (62-layer deepseek
+lowers as one scanned body), matching MaxText practice.  Heterogeneous
+archs scan over a repeating *pattern* (e.g. gemma2 scans 21 local+global
+pairs; zamba2 scans groups of mamba layers between shared-attention calls).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import ArchConfig, Initializer, layernorm, rmsnorm
+
+__all__ = [
+    "init_block", "block_train", "block_decode", "init_stack", "stack_params",
+]
+
+
+def _init_norm(init: Initializer, cfg: ArchConfig, d: int | None = None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"w": init.ones((d,), ("embed",)), "b": init.zeros((d,), ("embed",))}
+    return {"w": init.ones((d,), ("embed",))}
+
+
+def _norm(p, x, cfg: ArchConfig):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["w"], p["b"], 1e-5)
+    return rmsnorm(x, p["w"], cfg.rms_eps)
+
+
+def init_block(init: Initializer, cfg: ArchConfig, kind: str):
+    """kind: dense | moe | mamba | enc | dec | cross."""
+    if kind == "mamba":
+        return {"norm": _init_norm(init, cfg), "ssm": ssm_mod.init_ssm(init, cfg)}
+    p: dict[str, Any] = {}
+    if kind in ("dense", "moe", "enc", "dec"):
+        p["ln_attn"] = _init_norm(init, cfg)
+        p["attn"] = attn.init_attention(init, cfg)
+        p["ln_mlp"] = _init_norm(init, cfg)
+        if kind == "moe":
+            p["moe"] = moe_mod.init_moe(init, cfg)
+        else:
+            p["mlp"] = mlp_mod.init_mlp(init, cfg)
+        if cfg.post_block_norm:  # gemma2 sandwich
+            p["ln_attn_post"] = _init_norm(init, cfg)
+            p["ln_mlp_post"] = _init_norm(init, cfg)
+        if kind == "dec":  # whisper decoder: + cross attention
+            p["ln_cross"] = _init_norm(init, cfg)
+            p["cross"] = attn.init_attention(init, cfg, cross=True)
+    elif kind == "cross":  # vlm gated cross-attention block
+        p["ln_cross"] = _init_norm(init, cfg)
+        p["cross"] = attn.init_attention(init, cfg, cross=True)
+        p["gate_attn"] = init.zeros((1,), (None,))
+        p["ln_mlp"] = _init_norm(init, cfg)
+        p["mlp"] = mlp_mod.init_mlp(init, cfg)
+        p["gate_mlp"] = init.zeros((1,), (None,))
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def block_train(
+    p,
+    x: jax.Array,
+    cfg: ArchConfig,
+    kind: str,
+    *,
+    window: int = 0,
+    memory: attn.KVCache | None = None,
+    collect_cache: bool = False,
+):
+    """Returns (x', cache, aux_loss). cache is KV/SSM state for decode."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind == "mamba":
+        y, cache = ssm_mod.ssm_train(p["ssm"], _norm(p["norm"], x, cfg), cfg)
+        return x + y, cache, aux
+
+    if kind == "cross":
+        h = _norm(p["ln_cross"], x, cfg)
+        y = attn.attn_cross(p["cross"], h, memory, cfg)
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * y
+        h2 = _norm(p["ln_mlp"], x, cfg)
+        y2 = mlp_mod.mlp_fwd(p["mlp"], h2, cfg)
+        return x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * y2, None, aux
+
+    h = _norm(p["ln_attn"], x, cfg)
+    causal = kind != "enc"
+    y, kv = attn.attn_train(p["attn"], h, cfg, window=window, causal=causal)
+    if cfg.post_block_norm:
+        y = _norm(p["ln_attn_post"], y, cfg)
+    x = x + y
+    if collect_cache:
+        cache = kv
+
+    if kind == "dec":
+        y = attn.attn_cross(p["cross"], _norm(p["ln_cross"], x, cfg), memory, cfg)
+        x = x + y
+
+    h2 = _norm(p["ln_mlp"], x, cfg)
+    if kind == "moe":
+        y2, aux = moe_mod.moe_fwd(p["moe"], h2, cfg, renorm=cfg.arch_id != "qwen2-moe-a2.7b")
+    else:
+        y2 = mlp_mod.mlp_fwd(p["mlp"], h2, cfg)
+    if cfg.post_block_norm:
+        y2 = _norm(p["ln_mlp_post"], y2, cfg)
+    return x + y2, cache, aux
+
+
+def block_decode(
+    p,
+    x: jax.Array,  # (B, 1, D)
+    cache,
+    pos: jax.Array,
+    cfg: ArchConfig,
+    kind: str,
+    *,
+    window: int = 0,
+    memory: attn.KVCache | None = None,
+):
+    """Returns (x', cache')."""
+    if kind == "mamba":
+        y, cache = ssm_mod.ssm_decode(p["ssm"], _norm(p["norm"], x, cfg), cache, cfg)
+        return x + y, cache
+
+    h = _norm(p["ln_attn"], x, cfg)
+    y, cache = attn.attn_decode(p["attn"], h, cache, pos, cfg, window=window)
+    if cfg.post_block_norm:
+        y = _norm(p["ln_attn_post"], y, cfg)
+    x = x + y
+
+    if kind == "dec":
+        y = attn.attn_cross(p["cross"], _norm(p["ln_cross"], x, cfg), memory, cfg)
+        x = x + y
+
+    h2 = _norm(p["ln_mlp"], x, cfg)
+    if kind == "moe":
+        y2, _ = moe_mod.moe_fwd(p["moe"], h2, cfg, renorm=cfg.arch_id != "qwen2-moe-a2.7b")
+    else:
+        y2 = mlp_mod.mlp_fwd(p["mlp"], h2, cfg)
+    if cfg.post_block_norm:
+        y2 = _norm(p["ln_mlp_post"], y2, cfg)
+    return x + y2, cache
+
+
+# ---- stacked (scanned) layer segments --------------------------------------
+
+
+def stack_params(per_layer: list):
+    """Stack a list of identical (param, axes) pair-trees along axis 0."""
+    is_pair = lambda t: (
+        isinstance(t, tuple) and len(t) == 2
+        and isinstance(t[0], jax.Array) and isinstance(t[1], tuple)
+    )
+    def stack(*leaves):
+        vals = jnp.stack([v for v, _ in leaves])
+        axes = ("layers",) + leaves[0][1]
+        return (vals, axes)
+    return jax.tree.map(stack, *per_layer, is_leaf=is_pair)
+
+
+def init_stack(init: Initializer, cfg: ArchConfig, kinds: tuple[str, ...], n_groups: int):
+    """n_groups repetitions of the block pattern ``kinds``, each stacked."""
+    return [
+        stack_params([init_block(init, cfg, k) for _ in range(n_groups)])
+        for k in kinds
+    ]

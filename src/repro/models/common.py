@@ -1,0 +1,213 @@
+"""Shared model substrate: config schema, norms, RoPE, embeddings, init.
+
+All models are pure functional pytrees: ``init_*`` returns ``(params, axes)``
+parallel trees (axes = logical sharding names consumed by
+``repro.distributed.sharding``); ``apply`` functions are jit-traceable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ArchConfig", "rmsnorm", "layernorm", "rope", "dense_init", "Initializer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One schema for every assigned architecture family."""
+
+    arch_id: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # attention details
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+    attn_softcap: float = 0.0  # gemma2: 50.0
+    final_softcap: float = 0.0  # gemma2: 30.0
+    sliding_window: int = 0  # 0 = full attention
+    window_pattern: str = "none"  # none | all | alternate (gemma2)
+    norm: str = "rmsnorm"  # rmsnorm | layernorm (whisper)
+    post_block_norm: bool = False  # gemma2 sandwich norms
+    activation: str = "silu"  # silu | geglu | gelu
+    tie_embeddings: bool = False
+    embed_scale: bool = False  # gemma: hidden *= sqrt(d_model)
+    qk_norm: bool = False
+    # §Perf: pad q-heads to this count (0 = off) and run attention with a
+    # flat, mesh-divisible head axis (k/v repeated per group).  Lets archs
+    # whose head count doesn't divide the TP axis (deepseek: 56 on 16) shard
+    # their score tensors instead of replicating them.
+    pad_heads_to: int = 0
+
+    # MoE
+    num_experts: int = 0
+    experts_per_tok: int = 0
+    moe_d_ff: int = 0  # routed expert width (qwen2moe: 1408)
+    shared_d_ff: int = 0  # qwen2moe shared experts (4*1408)
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2 SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # hybrid (zamba2)
+    attn_every: int = 0  # shared attention block cadence
+
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 1500  # stub frame embeddings
+
+    # vlm (llama-3.2-vision)
+    cross_every: int = 0  # self-layers per cross-attn block
+    vision_seq: int = 1601
+    vision_dim: int = 0  # 0 -> d_model (stub projects to d_model)
+
+    # numerics / compile strategy
+    dtype: str = "bfloat16"
+    remat: bool = True
+    grad_accum: int = 1  # microbatches per step (activation memory / N)
+    kv_cache_dtype: str = ""  # "" = param dtype; "int8" = quantized KV cache
+    pad_experts_to: int = 0  # pad expert tables so E divides the TP axis (EP)
+    q_chunk: int = 512  # query-block size for chunked attention
+    loss_chunk: int = 2048  # seq chunk for the streamed CE loss
+
+    # shapes the launcher may exercise (informational)
+    max_seq: int = 524288
+
+    @property
+    def hdim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.hdim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.hdim
+
+    @property
+    def vocab_padded(self) -> int:
+        return (self.vocab_size + 255) // 256 * 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def param_dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.dtype)
+
+    def layer_windows(self) -> list[int]:
+        """Per-layer sliding window (0 = full)."""
+        if self.window_pattern == "all":
+            return [self.sliding_window] * self.num_layers
+        if self.window_pattern == "alternate":
+            # gemma2: even layers local (SWA), odd layers global.
+            return [
+                self.sliding_window if i % 2 == 0 else 0
+                for i in range(self.num_layers)
+            ]
+        return [0] * self.num_layers
+
+
+# ---- primitives ------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    # gemma-style (1 + w) parameterization is folded into init (w ~ 1.0).
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, Dh), positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+# ---- initialization --------------------------------------------------------
+
+
+class Initializer:
+    """Tracks a PRNG key; init helpers produce (param, axes) pairs."""
+
+    def __init__(self, key: jax.Array, dtype: jnp.dtype):
+        self.key = key
+        self.dtype = dtype
+
+    def take(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def dense(self, shape: tuple[int, ...], axes: tuple, scale: float | None = None):
+        fan_in = shape[0] if len(shape) >= 2 else 1
+        std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+        w = (jax.random.normal(self.take(), shape, jnp.float32) * std).astype(self.dtype)
+        return w, axes
+
+    def zeros(self, shape: tuple[int, ...], axes: tuple):
+        return jnp.zeros(shape, self.dtype), axes
+
+    def ones(self, shape: tuple[int, ...], axes: tuple):
+        return jnp.ones(shape, self.dtype), axes
+
+
+def dense_init(init: Initializer, d_in: int, d_out: int, axes: tuple):
+    return init.dense((d_in, d_out), axes)
+
+
+def split_tree(pairs: Any) -> tuple[Any, Any]:
+    """Split a pytree of (param, axes) leaf pairs into two parallel trees."""
+    is_pair = lambda t: (
+        isinstance(t, tuple)
+        and len(t) == 2
+        and isinstance(t[0], jax.Array)
+        and isinstance(t[1], tuple)
+    )
+    params = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+    axes = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return params, axes

@@ -1,0 +1,50 @@
+"""Feed-forward blocks: gated (SiLU/GeGLU) and plain (whisper GELU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ArchConfig, Initializer
+
+__all__ = ["init_mlp", "mlp_fwd"]
+
+
+def init_mlp(init: Initializer, cfg: ArchConfig, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.activation in ("silu", "geglu"):
+        return {
+            "w_gate": init.dense((d, f), ("embed_fsdp", "ffn")),
+            "w_up": init.dense((d, f), ("embed_fsdp", "ffn")),
+            "w_down": init.dense((f, d), ("ffn", "embed_fsdp")),
+        }
+    return {  # plain 2-layer (gelu)
+        "w_up": init.dense((d, f), ("embed_fsdp", "ffn")),
+        "b_up": init.zeros((f,), ("ffn",)),
+        "w_down": init.dense((f, d), ("ffn", "embed_fsdp")),
+        "b_down": init.zeros((d,), ("embed",)),
+    }
+
+
+def _act(cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.activation == "silu":
+        return jax.nn.silu(x)
+    if cfg.activation == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def mlp_fwd(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if "w_gate" in p:
+        h = constrain(x @ p["w_gate"], "batch", "seq", "ffn")
+        u = constrain(x @ p["w_up"], "batch", "seq", "ffn")
+        h = _act(cfg, h) * u
+    else:
+        h = constrain(x @ p["w_up"] + p["b_up"], "batch", "seq", "ffn")
+        h = _act(cfg, h)
+    y = h @ p["w_down"]
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return constrain(y, "batch", "act_seq", "embed")

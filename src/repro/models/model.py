@@ -1,0 +1,446 @@
+"""Model assembly: embeddings, scanned layer plans, losses, decode steps.
+
+One functional ``LM`` facade covers all six families:
+
+  dense     — llama-style decoder (deepseek, codeqwen, gemma, gemma2)
+  moe       — mixtral / qwen2-moe (router blocks in the scanned stack)
+  ssm       — mamba2 (pure SSD stack)
+  hybrid    — zamba2 (mamba backbone + weight-shared attention block
+              invoked every ``attn_every`` layers)
+  encdec    — whisper (stub frame embeddings -> encoder; decoder w/ cross)
+  vlm       — llama-3.2-vision (8 gated cross-attn blocks between groups of
+              5 self-attn layers; stub patch embeddings)
+
+API (all pure functions of (params, batch)):
+  init()          -> (params, axes)  — axes drive mesh sharding
+  loss_fn         — next-token CE (streamed over seq chunks) + MoE aux
+  prefill         — forward returning per-layer KV/SSM caches
+  decode_step     — one token against the caches
+  init_caches     — zeroed caches for lowering decode without a prefill
+  cache_axes      — logical axes of the cache tree
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import blocks as B
+from repro.models.attention import KVCache, cross_memory
+from repro.models.common import ArchConfig, Initializer, softcap, split_tree
+from repro.models.ssm import SSMCache, conv_dim
+
+__all__ = ["LM", "build_model"]
+
+
+def _pattern(cfg: ArchConfig) -> tuple[tuple[str, int], ...]:
+    """Repeating (kind, window) pattern for the scanned stack."""
+    if cfg.family == "moe":
+        w = cfg.sliding_window if cfg.window_pattern == "all" else 0
+        return (("moe", w),)
+    if cfg.family == "ssm":
+        return (("mamba", 0),)
+    if cfg.window_pattern == "alternate":
+        return (("dense", cfg.sliding_window), ("dense", 0))
+    if cfg.window_pattern == "all":
+        return (("dense", cfg.sliding_window),)
+    return (("dense", 0),)
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ArchConfig
+
+    # ---- init ------------------------------------------------------------
+
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        init = Initializer(key, cfg.param_dtype)
+        vp, d = cfg.vocab_padded, cfg.d_model
+        p: dict[str, Any] = {
+            "tok_embed": init.dense((vp, d), ("vocab", "embed_fsdp"), scale=0.02),
+            "final_norm": B._init_norm(init, cfg),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = init.dense((d, vp), ("embed_fsdp", "vocab"), scale=0.02)
+
+        fam = cfg.family
+        if fam in ("dense", "moe", "ssm"):
+            pat = _pattern(cfg)
+            groups = cfg.num_layers // len(pat)
+            p["stacks"] = B.init_stack(init, cfg, tuple(k for k, _ in pat), groups)
+        elif fam == "hybrid":
+            p["stacks"] = B.init_stack(init, cfg, ("mamba",), cfg.num_layers)
+            p["shared_attn"] = B.init_block(init, cfg, "dense")
+        elif fam == "encdec":
+            p["enc_pos"] = init.dense((cfg.encoder_seq, d), ("frames", "embed_fsdp"), scale=0.02)
+            p["dec_pos"] = init.dense((32768, d), ("seq", "embed_fsdp"), scale=0.02)
+            p["enc_stacks"] = B.init_stack(init, cfg, ("enc",), cfg.encoder_layers)
+            p["stacks"] = B.init_stack(init, cfg, ("dec",), cfg.num_layers)
+            p["enc_norm"] = B._init_norm(init, cfg)
+        elif fam == "vlm":
+            assert cfg.num_layers % cfg.cross_every == 0
+            n_cross = cfg.num_layers // cfg.cross_every
+            p["stacks"] = B.init_stack(init, cfg, ("dense",), cfg.num_layers)
+            p["cross_stacks"] = B.init_stack(init, cfg, ("cross",), n_cross)
+        else:
+            raise ValueError(fam)
+        return split_tree(p)
+
+    # ---- shared helpers ----------------------------------------------------
+
+    def _embed(self, p, tokens: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = jnp.take(p["tok_embed"], tokens, axis=0)
+        if cfg.embed_scale:
+            h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+        # residual stream is sequence-sharded (Megatron SP); decode (seq=1)
+        # falls back to replicated via the divisibility rule.
+        return constrain(h, "batch", "act_seq", "embed")
+
+    def _logits(self, p, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        w = p["tok_embed"].T if cfg.tie_embeddings else p["lm_head"]
+        logits = (h @ w.astype(h.dtype)).astype(jnp.float32)
+        logits = softcap(logits, cfg.final_softcap)
+        vmask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(vmask, logits, -1e30)
+        return constrain(logits, "batch", "seq", "vocab")
+
+    def _run_stack(self, stack_p, x, kind: str, window: int, *,
+                   collect: bool, memory=None):
+        """Scan a stacked segment.  ``memory`` (if given) is a *stacked*
+        per-layer KVCache threaded through the scan.  Returns
+        (x, caches|None, aux)."""
+        cfg = self.cfg
+
+        def body(carry, xs):
+            x, aux = carry
+            # residual stream is sequence-sharded between blocks (Megatron
+            # SP): layer-input remat checkpoints shrink by the TP degree.
+            x = constrain(x, "batch", "act_seq", "embed")
+            if memory is not None:
+                layer_p, mem = xs
+                mem = KVCache(*mem)
+            else:
+                layer_p, mem = xs, None
+            x, cache, a = B.block_train(
+                layer_p, x, cfg, kind, window=window,
+                memory=mem, collect_cache=collect,
+            )
+            return (x, aux + a), cache
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=None)
+        xs = stack_p if memory is None else (stack_p, tuple(memory))
+        (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+        return x, caches, aux
+
+    def _run_stack_decode(self, stack_p, x, caches, pos, kind: str, window: int,
+                          *, memory=None):
+        cfg = self.cfg
+
+        def body(x, xs):
+            if memory is not None:
+                layer_p, cache, mem = xs
+                mem = KVCache(*mem)
+            else:
+                layer_p, cache = xs
+                mem = None
+            x, cache = B.block_decode(
+                layer_p, x, cache, pos, cfg, kind, window=window, memory=mem,
+            )
+            return x, cache
+
+        xs = (stack_p, caches) if memory is None else (stack_p, caches, tuple(memory))
+        return jax.lax.scan(body, x, xs)
+
+    # ---- forward (train / prefill) -----------------------------------------
+
+    def _backbone(self, p, batch, *, collect: bool):
+        """Token embeddings -> final hidden states (+caches if collect)."""
+        cfg = self.cfg
+        fam = cfg.family
+        x = self._embed(p, batch["tokens"])
+        caches: dict[str, Any] = {}
+        aux = jnp.zeros((), jnp.float32)
+
+        if fam in ("dense", "moe", "ssm"):
+            pat = _pattern(cfg)
+            for i, ((kind, window), stack_p) in enumerate(zip(pat, p["stacks"])):
+                x, c, a = self._run_stack(
+                    stack_p, x, kind, window, collect=collect)
+                aux = aux + a
+                if collect:
+                    caches[f"kv{i}"] = c
+        elif fam == "hybrid":
+            x, caches, aux = self._hybrid_fwd(p, x, collect)
+        elif fam == "encdec":
+            frames = batch["frames"].astype(x.dtype)
+            e = frames + p["enc_pos"][None, : frames.shape[1]].astype(x.dtype)
+            e, _, _ = self._run_stack(p["enc_stacks"][0], e, "enc", 0, collect=False)
+            e = B._norm(p["enc_norm"], e, cfg)
+            mem = jax.vmap(
+                lambda lp: cross_memory(lp["cross"], e, cfg)
+            )(p["stacks"][0])  # (L, B, M, Hkv, Dh) stacked cross K/V
+            pos0 = batch.get("pos0", 0)
+            x = x + jax.lax.dynamic_slice_in_dim(
+                p["dec_pos"], pos0, x.shape[1], axis=0
+            )[None].astype(x.dtype)
+            x, c, _ = self._run_stack(
+                p["stacks"][0], x, "dec", 0, collect=collect, memory=mem)
+            if collect:
+                caches["kv0"] = c
+                caches["cross_mem"] = mem
+        elif fam == "vlm":
+            vis = batch["vision"].astype(x.dtype)
+            mem = jax.vmap(
+                lambda lp: cross_memory(lp["cross"], vis, cfg)
+            )(p["cross_stacks"][0])  # (n_cross, B, M, Hkv, Dh)
+            n_cross = cfg.num_layers // cfg.cross_every
+            cross_fn = lambda cp, xx, mg: B.block_train(cp, xx, cfg, "cross", memory=mg)
+            if cfg.remat:  # python-level blocks need their own remat
+                cross_fn = jax.checkpoint(cross_fn)
+            for g in range(n_cross):
+                cp = jax.tree.map(lambda a: a[g], p["cross_stacks"][0])
+                mg = KVCache(mem.k[g], mem.v[g])
+                x, _, _ = cross_fn(cp, x, mg)
+                sl = jax.tree.map(
+                    lambda a: a[g * cfg.cross_every : (g + 1) * cfg.cross_every],
+                    p["stacks"][0],
+                )
+                x, c, _ = self._run_stack(sl, x, "dense", 0, collect=collect)
+                if collect:
+                    caches[f"kv{g}"] = c
+            if collect:
+                caches["cross_mem"] = mem
+        else:
+            raise ValueError(fam)
+
+        x = B._norm(p["final_norm"], x, cfg)
+        return x, caches, aux
+
+    def _hybrid_fwd(self, p, x, collect: bool):
+        """zamba2: mamba backbone + shared attn every ``attn_every`` layers."""
+        cfg = self.cfg
+        every = cfg.attn_every
+        n_shared = cfg.num_layers // every
+        caches: dict[str, Any] = {"ssm": [], "shared_kv": []}
+        aux = jnp.zeros((), jnp.float32)
+        stack = p["stacks"][0]
+        shared_fn = lambda sp, xx: B.block_train(
+            sp, xx, cfg, "dense", collect_cache=collect)
+        if cfg.remat:  # the shared block sits outside the scanned stack
+            shared_fn = jax.checkpoint(shared_fn)
+        for g in range(n_shared):
+            sl = jax.tree.map(lambda a: a[g * every : (g + 1) * every], stack)
+            x, c, _ = self._run_stack(sl, x, "mamba", 0, collect=collect)
+            if collect:
+                caches["ssm"].append(c)
+            x, kv, _ = shared_fn(p["shared_attn"], x)
+            if collect:
+                caches["shared_kv"].append(kv)
+        tail = cfg.num_layers - n_shared * every
+        if tail:
+            sl = jax.tree.map(lambda a: a[n_shared * every :], stack)
+            x, c, _ = self._run_stack(sl, x, "mamba", 0, collect=collect)
+            if collect:
+                caches["ssm"].append(c)
+        if collect:
+            # concat group caches back to a single (L, ...) stack
+            caches["ssm"] = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *caches["ssm"])
+            caches["shared_kv"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs, axis=0), *caches["shared_kv"])
+        else:
+            caches = {}
+        return x, caches, aux
+
+    # ---- public entry points ----------------------------------------------
+
+    def loss_fn(self, p, batch):
+        cfg = self.cfg
+        h, _, aux = self._backbone(p, batch, collect=False)
+        labels = batch["labels"]
+        lc = min(cfg.loss_chunk, h.shape[1])
+        s = h.shape[1]
+        nch = s // lc if s % lc == 0 else 1
+
+        hs = h.reshape(h.shape[0], nch, s // nch, h.shape[2])
+        ls = labels.reshape(labels.shape[0], nch, s // nch)
+
+        def body(carry, xs):
+            hc, lb = xs  # (B, c, D), (B, c)
+            logits = self._logits(p, hc)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            tgt = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+            return carry + jnp.sum(lse - tgt), None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        total, _ = jax.lax.scan(
+            body, jnp.zeros((), jnp.float32),
+            (jnp.moveaxis(hs, 1, 0), jnp.moveaxis(ls, 1, 0)),
+        )
+        ntok = labels.size
+        loss = total / ntok + 0.01 * aux
+        return loss, {"nll": total / ntok, "aux": aux}
+
+    def prefill(self, p, batch):
+        h, caches, _ = self._backbone(p, batch, collect=True)
+
+        def reshard(c):
+            # park prefill KV caches in the decode layout (kv_seq sharded)
+            if isinstance(c, KVCache) and c.k.ndim == 5:
+                ax = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+                return KVCache(k=constrain(c.k, *ax), v=constrain(c.v, *ax))
+            return c
+
+        caches = jax.tree.map(
+            reshard, caches, is_leaf=lambda c: isinstance(c, KVCache))
+        logits = self._logits(p, h[:, -1:, :])[:, 0]
+        return logits, caches
+
+    def decode_step(self, p, token: jax.Array, caches, pos: jax.Array):
+        """token: (B, 1) int32; pos: () current length. Returns (logits, caches)."""
+        cfg = self.cfg
+        fam = cfg.family
+        x = self._embed(p, token)
+        new_caches = dict(caches)
+
+        if fam in ("dense", "moe", "ssm"):
+            pat = _pattern(cfg)
+            for i, ((kind, window), stack_p) in enumerate(zip(pat, p["stacks"])):
+                x, c = self._run_stack_decode(
+                    stack_p, x, caches[f"kv{i}"], pos, kind, window)
+                new_caches[f"kv{i}"] = c
+        elif fam == "hybrid":
+            every = cfg.attn_every
+            n_shared = cfg.num_layers // every
+            stack = p["stacks"][0]
+            ssm_out = []
+            shared_out = []
+            for g in range(n_shared):
+                sl = jax.tree.map(lambda a: a[g * every : (g + 1) * every], stack)
+                cg = jax.tree.map(lambda a: a[g * every : (g + 1) * every], caches["ssm"])
+                x, c = self._run_stack_decode(sl, x, cg, pos, "mamba", 0)
+                ssm_out.append(c)
+                kv = KVCache(caches["shared_kv"].k[g], caches["shared_kv"].v[g])
+                x, kv = B.block_decode(p["shared_attn"], x, kv, pos, cfg, "dense")
+                shared_out.append(kv)
+            tail = cfg.num_layers - n_shared * every
+            if tail:
+                sl = jax.tree.map(lambda a: a[n_shared * every :], stack)
+                cg = jax.tree.map(lambda a: a[n_shared * every :], caches["ssm"])
+                x, c = self._run_stack_decode(sl, x, cg, pos, "mamba", 0)
+                ssm_out.append(c)
+            new_caches["ssm"] = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *ssm_out)
+            new_caches["shared_kv"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs, axis=0), *shared_out)
+        elif fam == "encdec":
+            pos_emb = jax.lax.dynamic_slice_in_dim(p["dec_pos"], pos, 1, axis=0)
+            x = x + pos_emb[None].astype(x.dtype)
+            x, c = self._run_stack_decode(
+                p["stacks"][0], x, caches["kv0"], pos, "dec", 0,
+                memory=caches["cross_mem"])
+            new_caches["kv0"] = c
+        elif fam == "vlm":
+            mem = caches["cross_mem"]
+            n_cross = cfg.num_layers // cfg.cross_every
+            for g in range(n_cross):
+                cp = jax.tree.map(lambda a: a[g], p["cross_stacks"][0])
+                mg = KVCache(mem.k[g], mem.v[g])
+                x, _, _ = B.block_train(cp, x, cfg, "cross", memory=mg)
+                sl = jax.tree.map(
+                    lambda a: a[g * cfg.cross_every : (g + 1) * cfg.cross_every],
+                    p["stacks"][0])
+                x, c = self._run_stack_decode(sl, x, caches[f"kv{g}"], pos, "dense", 0)
+                new_caches[f"kv{g}"] = c
+        else:
+            raise ValueError(fam)
+
+        x = B._norm(p["final_norm"], x, cfg)
+        logits = self._logits(p, x)[:, 0]
+        return logits, new_caches
+
+    # ---- cache construction -------------------------------------------------
+
+    def _kv_shape(self, b: int, s: int) -> tuple[int, ...]:
+        cfg = self.cfg
+        return (b, s, cfg.n_kv_heads, cfg.hdim)
+
+    def _cache_len(self, window: int, cache_len: int) -> int:
+        return min(window, cache_len) if window > 0 else cache_len
+
+    def init_caches(self, b: int, cache_len: int):
+        """Zeroed cache tree (and its logical axes) for decode lowering."""
+        cfg = self.cfg
+        dt = cfg.param_dtype
+        kv_axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+
+        def kv(n, s):
+            if cfg.kv_cache_dtype == "int8":
+                from repro.models.attention import QuantKVCache
+                z = jnp.zeros((n, *self._kv_shape(b, s)), jnp.int8)
+                sc = jnp.zeros((n, b, s, cfg.n_kv_heads), jnp.float32)
+                sc_axes = ("layers", "batch", "kv_seq", "kv_heads")
+                return (QuantKVCache(k=z, v=z, k_scale=sc, v_scale=sc),
+                        QuantKVCache(k=kv_axes, v=kv_axes,
+                                     k_scale=sc_axes, v_scale=sc_axes))
+            z = jnp.zeros((n, *self._kv_shape(b, s)), dt)
+            return KVCache(k=z, v=z), KVCache(k=kv_axes, v=kv_axes)
+
+        fam = cfg.family
+        caches: dict[str, Any] = {}
+        axes: dict[str, Any] = {}
+        if fam in ("dense", "moe"):
+            pat = _pattern(cfg)
+            groups = cfg.num_layers // len(pat)
+            for i, (kind, window) in enumerate(pat):
+                caches[f"kv{i}"], axes[f"kv{i}"] = kv(
+                    groups, self._cache_len(window, cache_len))
+        elif fam == "ssm":
+            caches["kv0"], axes["kv0"] = self._ssm_cache(cfg.num_layers, b)
+        elif fam == "hybrid":
+            caches["ssm"], axes["ssm"] = self._ssm_cache(cfg.num_layers, b)
+            caches["shared_kv"], axes["shared_kv"] = kv(
+                cfg.num_layers // cfg.attn_every, cache_len)
+        elif fam == "encdec":
+            caches["kv0"], axes["kv0"] = kv(cfg.num_layers, cache_len)
+            m = jnp.zeros(
+                (cfg.num_layers, *self._kv_shape(b, cfg.encoder_seq)), dt)
+            caches["cross_mem"] = KVCache(k=m, v=m)
+            axes["cross_mem"] = KVCache(k=("layers", "batch", "frames", "kv_heads", "head_dim"),
+                                        v=("layers", "batch", "frames", "kv_heads", "head_dim"))
+        elif fam == "vlm":
+            n_cross = cfg.num_layers // cfg.cross_every
+            for g in range(n_cross):
+                caches[f"kv{g}"], axes[f"kv{g}"] = kv(cfg.cross_every, cache_len)
+            m = jnp.zeros((n_cross, *self._kv_shape(b, cfg.vision_seq)), dt)
+            caches["cross_mem"] = KVCache(k=m, v=m)
+            axes["cross_mem"] = KVCache(k=("layers", "batch", "frames", "kv_heads", "head_dim"),
+                                        v=("layers", "batch", "frames", "kv_heads", "head_dim"))
+        else:
+            raise ValueError(fam)
+        return caches, axes
+
+    def _ssm_cache(self, n: int, b: int):
+        cfg = self.cfg
+        state = jnp.zeros(
+            (n, b, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        conv = jnp.zeros((n, b, cfg.ssm_conv - 1, conv_dim(cfg)), cfg.param_dtype)
+        cache = SSMCache(state=state, conv=conv)
+        ax = SSMCache(
+            state=("layers", "batch", "ssm_heads", None, "ssm_state"),
+            conv=("layers", "batch", None, "inner"),
+        )
+        return cache, ax
+
+
+def build_model(cfg: ArchConfig) -> LM:
+    return LM(cfg)

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts with gather-based dispatch (no dense all-experts pass).
+
+Tokens are routed top-k, sorted by expert, and packed into fixed-capacity
+expert buckets with gather/scatter (memory ops — zero matmul FLOPs), so the
+compiled HLO FLOPs track *active* expert compute (6·N_active·D in the
+roofline's MODEL_FLOPS sense), unlike the naive everybody-through-every-
+expert einsum which inflates compute by E/k.
+
+Baseline sharding is TP-in-expert (expert weights replicated across 'model'
+in the E dim, sharded in the ffn dim) — robust for E ∈ {8, 60} on a 16-way
+axis.  The EP remap ("expert" → ("model",) with E padded to the axis size)
+is evaluated in the §Perf hillclimb.
+
+Load-balance aux loss (Switch-style E·Σ f_e·P̄_e) is returned for the
+trainer.  Capacity overflow drops tokens (classic GShard semantics); the
+capacity factor is configurable per arch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ArchConfig, Initializer
+from repro.models.mlp import init_mlp, mlp_fwd
+
+__all__ = ["init_moe", "moe_fwd"]
+
+
+def init_moe(init: Initializer, cfg: ArchConfig):
+    d = cfg.d_model
+    e = cfg.pad_experts_to or cfg.num_experts  # EP: pad so E divides the axis
+    f = cfg.moe_d_ff or cfg.d_ff
+    p = {
+        "router": init.dense((d, cfg.num_experts), ("embed", "expert"), scale=0.02),
+        "w_gate": init.dense((e, d, f), ("expert", "embed_fsdp", "expert_ffn")),
+        "w_up": init.dense((e, d, f), ("expert", "embed_fsdp", "expert_ffn")),
+        "w_down": init.dense((e, f, d), ("expert", "expert_ffn", "embed_fsdp")),
+    }
+    if cfg.shared_d_ff:
+        p["shared"] = init_mlp(init, cfg, d_ff=cfg.shared_d_ff)
+        p["shared_gate"] = init.dense((d, 1), ("embed", None), scale=0.02)
+    return p
+
+
+def _capacity(cfg: ArchConfig, tokens: int) -> int:
+    cap = int(tokens * cfg.experts_per_tok * cfg.capacity_factor / cfg.num_experts)
+    return max(8, (cap + 7) // 8 * 8)
+
+
+def moe_fwd(p, x: jax.Array, cfg: ArchConfig, *, renorm: bool = True):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Dispatch is PER BATCH ROW: sort/rank/scatter all carry the leading B dim,
+    so under data-parallel batch sharding every dispatch op is local to its
+    shard — GSPMD never sees a cross-shard data-dependent gather (a global
+    token sort forced involuntary full rematerialization: 146 GiB/device on
+    qwen2-moe train_4k; per-row it lowers to ~1 GiB transients).  Capacity is
+    per (row, expert): S·k·cf/E slots.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_tok
+    e_pad = cfg.pad_experts_to or e  # padded experts are never routed to
+
+    # Dispatch gathers/scatters index the SEQ dim; with the residual stream
+    # seq-sharded (SP) GSPMD would all-gather per indexing op and all-reduce
+    # the f32 scatter output (measured: +1.7 TB/device/step on mixtral
+    # train_4k -> one explicit gather here cut collectives 58.3s -> 26.4s).
+    # Folding seq shards into the dispatch batch instead was REFUTED: the
+    # reshapes through sharded dims cost more in collective-permutes than
+    # the single gather (EXPERIMENTS.md §Perf iteration C3).
+    x = constrain(x, "batch", "seq", "embed")
+
+    logits = (x @ p["router"]).astype(jnp.float32)  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eidx = jax.lax.top_k(probs, k)  # (B, S, k)
+    if renorm:
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+        )
+
+    # Load-balance loss: E * sum_e (fraction routed to e) * (mean prob of e).
+    # scatter-add (tiny (E,) output) instead of a (B,S,k,E) one-hot tensor.
+    counts = jnp.zeros((e,), jnp.float32).at[eidx.reshape(-1)].add(1.0)
+    frac = counts / (b * s)
+    pbar = jnp.mean(probs, axis=(0, 1))  # (E,)
+    aux = e * jnp.sum(frac * pbar)
+
+    # ---- pack (token, slot) pairs into per-row expert buckets -----------
+    cap = _capacity(cfg, s)
+    sk = s * k
+    fe = eidx.reshape(b, sk)  # expert of each (token, slot) pair
+    fgate = gate_vals.reshape(b, sk).astype(x.dtype)
+    ftok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None, :], (b, sk))
+
+    order = jnp.argsort(fe, axis=1, stable=True)
+    se = jnp.take_along_axis(fe, order, axis=1)
+    stok = jnp.take_along_axis(ftok, order, axis=1)
+    sgate = jnp.take_along_axis(fgate, order, axis=1)
+    seg_start = jax.vmap(lambda a: jnp.searchsorted(a, a, side="left"))(se)
+    rank = jnp.arange(sk)[None, :] - seg_start
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, 0)
+
+    gathered = jnp.where(
+        keep[..., None], jnp.take_along_axis(x, stok[..., None], axis=1), 0
+    ).astype(x.dtype)  # (B, sk, D)
+    rows = jnp.arange(b)[:, None]
+    expert_in = jnp.zeros((b, e_pad * cap, d), x.dtype).at[rows, slot].add(gathered)
+    expert_in = constrain(
+        expert_in.reshape(b, e_pad, cap, d), "batch", "expert", "expert_cap", "embed"
+    )
+
+    h = jnp.einsum("becd,edf->becf", expert_in, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", expert_in, p["w_up"])
+    h = constrain(jax.nn.silu(h) * u, "batch", "expert", "expert_cap", "expert_ffn")
+    y_e = jnp.einsum("becf,efd->becd", h, p["w_down"]).reshape(b, e_pad * cap, d)
+
+    contrib = jnp.take_along_axis(y_e, slot[..., None], axis=1)
+    contrib = contrib * (sgate * keep.astype(x.dtype))[..., None]
+    out = jnp.zeros((b, s, d), x.dtype).at[rows, stok].add(contrib)
+
+    if "shared" in p:
+        sg = jax.nn.sigmoid((x @ p["shared_gate"]).astype(jnp.float32)).astype(x.dtype)
+        out = out + sg * mlp_fwd(p["shared"], x, cfg)
+
+    return constrain(out, "batch", "act_seq", "embed"), aux

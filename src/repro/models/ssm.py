@@ -1,0 +1,205 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the output
+is an attention-like masked product (quadratic in the chunk length — MXU
+friendly); across chunks a sequential ``lax.scan`` passes the (H, P, N)
+state.  Decode is the O(1) recurrent update.
+
+Layout: x (B, L, H, P) with H = d_inner/head_dim heads, P = head_dim,
+N = ssm_state, single B/C group (n_groups=1, as mamba2-130m).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ArchConfig, Initializer, rmsnorm
+
+__all__ = ["init_ssm", "ssm_train", "ssm_decode", "SSMCache"]
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array  # (B, H, P, N)
+    conv: jax.Array  # (B, W-1, conv_dim) rolling conv window
+
+
+def conv_dim(cfg: ArchConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_ssm(init: Initializer, cfg: ArchConfig):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj_out = 2 * di + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": init.dense((d, proj_out), ("embed_fsdp", "inner")),
+        "conv_w": init.dense((cfg.ssm_conv, conv_dim(cfg)), (None, "inner"), scale=0.5),
+        "conv_b": init.zeros((conv_dim(cfg),), ("inner",)),
+        "A_log": init.zeros((h,), ("ssm_heads",)),
+        "D": init.ones((h,), ("ssm_heads",)),
+        "dt_bias": init.zeros((h,), ("ssm_heads",)),
+        "norm_w": init.ones((di,), ("inner",)),
+        "out_proj": init.dense((di, d), ("inner", "embed_fsdp")),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n :]  # (…, H)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xbc: (B, L, C), w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(width):  # width is 4: unrolled shifts beat conv lowering
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _ssd_chunked(xh, dt, a, bmat, cmat, cfg: ArchConfig):
+    """Chunked SSD scan.
+
+    xh: (B, L, H, P); dt: (B, L, H); a: (H,) negative decay rates;
+    bmat/cmat: (B, L, N).  Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    bsz, l0, h, p = xh.shape
+    n = bmat.shape[-1]
+    kc = cfg.ssm_chunk
+    # pad to a chunk multiple: dt=0 on pads => decay 1, contribution 0
+    # (exact — padded steps are identities on the state).
+    pad = (-l0) % kc
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    l = l0 + pad
+    c = l // kc
+
+    xc = xh.reshape(bsz, c, kc, h, p)
+    dtc = dt.reshape(bsz, c, kc, h)
+    bc = bmat.reshape(bsz, c, kc, n)
+    cc = cmat.reshape(bsz, c, kc, n)
+
+    da = dtc * a[None, None, None, :]  # (B,C,K,H) negative
+    cum = jnp.cumsum(da, axis=2)  # within-chunk cumulative decay exponent
+
+    # Intra-chunk (quadratic, masked):
+    # Y[i] += sum_{j<=i} (C_i . B_j) * exp(cum_i - cum_j) * dt_j * x_j
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc, preferred_element_type=jnp.float32)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,C,i,j,H)
+    mask = jnp.tril(jnp.ones((kc, kc), bool))
+    w_ij = jnp.where(
+        mask[None, None, :, :, None], cb[..., None] * decay, 0.0
+    )  # (B,C,i,j,H)
+    y_intra = jnp.einsum(
+        "bcijh,bcjh,bcjhp->bcihp", w_ij, dtc, xc,
+        preferred_element_type=jnp.float32,
+    )
+
+    # Chunk end-states: S_c = sum_j exp(cum_end - cum_j) dt_j B_j x_j^T
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,C,K,H)
+    sc = jnp.einsum(
+        "bcjh,bcjn,bcjhp->bchpn", decay_end * dtc, bc, xc,
+        preferred_element_type=jnp.float32,
+    )
+
+    # Sequential inter-chunk state pass.
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,C,H)
+
+    def scan_body(state, xs):
+        sc_c, dec_c = xs  # (B,H,P,N), (B,H)
+        new = state * dec_c[..., None, None] + sc_c
+        return new, state  # emit the *incoming* state for this chunk
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final_state, states_in = jax.lax.scan(
+        scan_body, init,
+        (jnp.moveaxis(sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    states_in = jnp.moveaxis(states_in, 0, 1)  # (B,C,H,P,N)
+
+    # Inter-chunk: Y[i] += (C_i . state_in) * exp(cum_i)
+    y_inter = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp", cc, states_in, jnp.exp(cum),
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)[:, :l0]
+    return y, final_state
+
+
+def ssm_train(
+    p, x: jax.Array, cfg: ArchConfig
+) -> tuple[jax.Array, SSMCache]:
+    """x: (B, L, D) -> (y (B, L, D), cache for decode continuation)."""
+    bsz, l, _ = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = constrain(x @ p["in_proj"], "batch", "seq", "inner")
+    z, xbc_raw, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xh = xbc[..., :di].reshape(bsz, l, h, pd)
+    bmat = xbc[..., di : di + n]
+    cmat = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, state = _ssd_chunked(
+        xh.astype(jnp.float32), dt, a,
+        bmat.astype(jnp.float32), cmat.astype(jnp.float32), cfg,
+    )
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, l, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.rms_eps)
+    out = constrain(y @ p["out_proj"], "batch", "act_seq", "embed")
+
+    # decode continuation needs the last W-1 RAW (pre-activation) conv
+    # inputs — a zeroed window silently corrupts the first decoded tokens.
+    conv_tail = xbc_raw[:, -(cfg.ssm_conv - 1):, :].astype(x.dtype)
+    return out, SSMCache(state=state.astype(jnp.float32), conv=conv_tail)
+
+
+def ssm_decode(
+    p, x: jax.Array, cache: SSMCache, cfg: ArchConfig
+) -> tuple[jax.Array, SSMCache]:
+    """One-token recurrent update. x: (B, 1, D)."""
+    bsz = x.shape[0]
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = x[:, 0, :] @ p["in_proj"]  # (B, proj)
+    z, xbc_new, dt_raw = _split_proj(cfg, zxbcdt)
+
+    # rolling conv window: (B, W-1, C) + new row
+    win = jnp.concatenate([cache.conv, xbc_new[:, None, :]], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+
+    xh = xbc[:, :di].reshape(bsz, h, pd)
+    bvec = xbc[:, di : di + n]
+    cvec = xbc[:, di + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a[None, :])  # (B, H)
+
+    state = constrain(cache.state, "batch", "ssm_heads", None, "ssm_state")
+    new_state = state * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh.astype(jnp.float32), bvec
+    )
+    y = jnp.einsum("bhpn,bn->bhp", new_state, cvec)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.rms_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return constrain(out, "batch", "seq", "embed"), SSMCache(
+        state=new_state, conv=win[:, 1:, :]
+    )

@@ -1,0 +1,90 @@
+"""Dynamic request batching for the ANN serving path.
+
+The compiled ``search_step`` has a fixed query-batch shape; production
+traffic arrives as variable-size requests.  The scheduler packs pending
+requests into fixed batches (padding the tail), dispatches, and scatters
+results back per request — the standard continuous-batching front end,
+kept deliberately synchronous (deterministic, testable) with the async
+hand-off isolated in ``submit``/``drain``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable
+
+import numpy as np
+
+__all__ = ["BatchScheduler", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    queries: np.ndarray  # (n_i, D) rotated+padded queries
+    enqueued_at: float = dataclasses.field(default_factory=time.perf_counter)
+    result: tuple[np.ndarray, np.ndarray] | None = None  # (dists, ids)
+
+
+class BatchScheduler:
+    """Packs requests into fixed-size batches for a compiled search step.
+
+    Args:
+      step_fn: callable(batch (B, D)) -> (dists (B, K), ids (B, K)).
+      batch_size: the compiled step's fixed query-batch B.
+      max_wait_s: flush a partial batch after this long (latency bound).
+    """
+
+    def __init__(self, step_fn: Callable, batch_size: int,
+                 *, max_wait_s: float = 0.005):
+        self.step_fn = step_fn
+        self.batch = batch_size
+        self.max_wait = max_wait_s
+        self._queue: deque[tuple[Request, int]] = deque()  # (req, row offset)
+        self._next_rid = 0
+        self.stats = {"batches": 0, "padded_rows": 0, "rows": 0}
+
+    def submit(self, queries: np.ndarray) -> Request:
+        req = Request(rid=self._next_rid, queries=np.asarray(queries))
+        self._next_rid += 1
+        for i in range(len(req.queries)):
+            self._queue.append((req, i))
+        return req
+
+    def _pending(self) -> int:
+        return len(self._queue)
+
+    def drain(self, *, force: bool = True) -> list[Request]:
+        """Run batches until the queue empties (force) or only a fresh
+        partial batch remains.  Returns requests completed this call."""
+        done: dict[int, Request] = {}
+        parts: dict[int, list[tuple[int, np.ndarray, np.ndarray]]] = {}
+
+        while self._queue:
+            if not force and self._pending() < self.batch:
+                oldest = self._queue[0][0].enqueued_at
+                if time.perf_counter() - oldest < self.max_wait:
+                    break
+            take = min(self.batch, self._pending())
+            slots = [self._queue.popleft() for _ in range(take)]
+            qs = np.stack([r.queries[i] for r, i in slots])
+            pad = self.batch - take
+            if pad:
+                qs = np.pad(qs, ((0, pad), (0, 0)))
+            dists, ids = self.step_fn(qs)
+            dists, ids = np.asarray(dists), np.asarray(ids)
+            self.stats["batches"] += 1
+            self.stats["padded_rows"] += pad
+            self.stats["rows"] += take
+            for j, (req, i) in enumerate(slots):
+                parts.setdefault(req.rid, []).append((i, dists[j], ids[j]))
+                if len(parts[req.rid]) == len(req.queries):
+                    order = sorted(parts.pop(req.rid))
+                    req.result = (
+                        np.stack([d for _, d, _ in order]),
+                        np.stack([x for _, _, x in order]),
+                    )
+                    done[req.rid] = req
+        return [done[k] for k in sorted(done)]

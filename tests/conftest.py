@@ -1,0 +1,19 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 real device;
+only launch/dryrun.py forces the 512-device host platform (and the
+distributed tests spawn subprocesses with their own flags)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def aniso_corpus():
+    """Anisotropic, rotated Gaussian-mixture corpus (DADE's target regime)."""
+    from repro.data.pipeline import synthetic_vectors
+    return synthetic_vectors(4000, 64, seed=0, decay=0.08)
+
+
+@pytest.fixture(scope="session")
+def queries(aniso_corpus):
+    from repro.data.pipeline import synthetic_queries
+    return synthetic_queries(24, 64, aniso_corpus, seed=1)

@@ -1,0 +1,107 @@
+"""DCO engine semantics: Algorithm 1 equivalence across the three
+implementations, and the Lemma 5 failure bound."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_estimator
+from repro.core.dco import dco_screen, dco_screen_batch
+from repro.core.dco_host import dco_screen_host, knn_search_host
+
+
+@pytest.fixture(scope="module")
+def est(aniso_corpus):
+    return build_estimator("dade", aniso_corpus, jax.random.PRNGKey(0), delta_d=16)
+
+
+def test_host_vs_jnp_engine(est, aniso_corpus, queries):
+    q_rot = np.asarray(est.rotate(jnp.asarray(queries)))
+    c_rot = np.asarray(est.rotate(jnp.asarray(aniso_corpus[:800])))
+    dims = np.asarray(est.table.dims)
+    eps = np.asarray(est.table.eps)
+    scale = np.asarray(est.table.scale)
+    for r_sq in (1.0, 10.0, 100.0):
+        h = dco_screen_host(q_rot[0], c_rot, dims, eps, scale, r_sq)
+        j = dco_screen(jnp.asarray(q_rot[0]), jnp.asarray(c_rot), est.table,
+                       jnp.float32(r_sq))
+        assert np.array_equal(h.passed, np.asarray(j.passed))
+        assert np.array_equal(h.dims_used, np.asarray(j.dims_used))
+        np.testing.assert_allclose(h.est_sq, np.asarray(j.est_sq),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_batch_vs_single(est, aniso_corpus, queries):
+    q_rot = est.rotate(jnp.asarray(queries[:4]))
+    c_rot = est.rotate(jnp.asarray(aniso_corpus[:256]))
+    r_sq = jnp.asarray([2.0, 5.0, 20.0, 80.0], jnp.float32)
+    batch = dco_screen_batch(q_rot, c_rot, est.table, r_sq)
+    for qi in range(4):
+        single = dco_screen(q_rot[qi], c_rot, est.table, r_sq[qi])
+        agree = np.mean(
+            np.asarray(batch.passed[qi]) == np.asarray(single.passed))
+        assert agree > 0.995  # f32 matmul-vs-cumsum boundary ties only
+
+
+def test_passed_implies_exact_distance(est, aniso_corpus, queries):
+    """Algorithm 1: a returned candidate carries its exact distance."""
+    q = jnp.asarray(queries[0])
+    c = jnp.asarray(aniso_corpus[:500])
+    q_rot, c_rot = est.rotate(q), est.rotate(c)
+    r_sq = jnp.float32(50.0)
+    res = dco_screen(q_rot, c_rot, est.table, r_sq)
+    exact_sq = np.sum((np.asarray(c) - np.asarray(q)) ** 2, axis=1)
+    passed = np.asarray(res.passed)
+    np.testing.assert_allclose(
+        np.asarray(res.est_sq)[passed], exact_sq[passed], rtol=1e-3)
+    assert np.all(exact_sq[passed] <= 50.0 * (1 + 1e-4))
+
+
+def test_negatives_never_pass(est, aniso_corpus, queries):
+    """dis > r candidates are always rejected (Lemma 5: P{fail}=0 there)."""
+    q = jnp.asarray(queries[0])
+    c = jnp.asarray(aniso_corpus[:2000])
+    res = dco_screen(est.rotate(q), est.rotate(c), est.table, jnp.float32(9.0))
+    exact_sq = np.sum((np.asarray(c) - np.asarray(q)) ** 2, axis=1)
+    far = exact_sq > 9.0 * (1 + 1e-4)
+    assert not np.any(np.asarray(res.passed) & far)
+
+
+def test_lemma5_failure_bound(aniso_corpus):
+    """P{true positive pruned} <= floor((D-1)/dd) * P_s."""
+    p_s, dd = 0.05, 16
+    est = build_estimator("dade", aniso_corpus, jax.random.PRNGKey(0),
+                          p_s=p_s, delta_d=dd, num_pairs=8192)
+    rng = np.random.default_rng(3)
+    d = aniso_corpus.shape[1]
+    bound = ((d - 1) // dd) * p_s
+
+    # sample query/candidate pairs; set r slightly above the true distance so
+    # every pair is a true positive; measure how often DCO rejects it.
+    qi = rng.integers(0, len(aniso_corpus), 2000)
+    ci = rng.integers(0, len(aniso_corpus), 2000)
+    keep = qi != ci
+    q = jnp.asarray(aniso_corpus[qi[keep]])
+    c = jnp.asarray(aniso_corpus[ci[keep]])
+    exact_sq = jnp.sum((q - c) ** 2, axis=1)
+    q_rot, c_rot = est.rotate(q), est.rotate(c)
+    fails = 0
+    n = q.shape[0]
+    res = jax.vmap(
+        lambda qv, cv, rv: dco_screen(qv, cv[None], est.table, rv)
+    )(q_rot, c_rot, exact_sq * 1.0001)
+    fails = np.sum(~np.asarray(res.passed)[:, 0])
+    assert fails / n <= bound, f"failure rate {fails/n:.4f} > bound {bound:.4f}"
+
+
+def test_host_knn_matches_bruteforce_fdscanning(aniso_corpus, queries):
+    est = build_estimator("fdscanning", aniso_corpus, jax.random.PRNGKey(0))
+    q_rot = np.asarray(est.rotate(jnp.asarray(queries)))
+    c_rot = np.asarray(est.rotate(jnp.asarray(aniso_corpus)))
+    ids, dists, stats = knn_search_host(
+        q_rot[0], c_rot, 10, np.asarray(est.table.dims),
+        np.asarray(est.table.eps), np.asarray(est.table.scale))
+    brute = np.argsort(np.sum((aniso_corpus - queries[0]) ** 2, axis=1))[:10]
+    assert set(ids.tolist()) == set(brute.tolist())
+    assert stats["dims_fraction"] == pytest.approx(1.0)

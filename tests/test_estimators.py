@@ -1,0 +1,90 @@
+"""Estimator-level claims: unbiasedness (Lemma 3), calibration semantics
+(Eq. 14), ADSampling table shape."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_estimator
+from repro.core.calibration import adsampling_table, calibrate, expansion_schedule
+from repro.core.transforms import fit_pca, fit_random_orthogonal
+
+
+def test_expansion_schedule_terminates_at_d():
+    s = np.asarray(expansion_schedule(100, 32))
+    assert list(s) == [32, 64, 96, 100]
+    s2 = np.asarray(expansion_schedule(96, 32))
+    assert list(s2) == [32, 64, 96]
+
+
+def test_lemma3_unbiased_estimation(aniso_corpus):
+    """E[dis'^2] ~= E[dis^2] at every checkpoint, under the fitted scale."""
+    x = jnp.asarray(aniso_corpus)
+    t = fit_pca(x)
+    rng = np.random.default_rng(0)
+    i = rng.integers(0, len(aniso_corpus), 4000)
+    j = rng.integers(0, len(aniso_corpus), 4000)
+    keep = i != j
+    d = np.asarray(t.apply(jnp.asarray(aniso_corpus[i[keep]] - aniso_corpus[j[keep]])))
+    sq = d * d
+    csq = np.cumsum(sq, axis=1)
+    exact = csq[:, -1].mean()
+    for dd in (8, 16, 32, 48):
+        est = (csq[:, dd - 1] * float(t.scale(jnp.asarray(dd)))).mean()
+        assert est == pytest.approx(exact, rel=0.05), f"biased at d={dd}"
+
+
+def test_calibration_quantile_semantics(aniso_corpus):
+    """P(dis'/dis - 1 > eps_d) ~= P_s on held-out pairs (Eq. 14)."""
+    x = jnp.asarray(aniso_corpus)
+    t = fit_pca(x)
+    p_s = 0.1
+    table = calibrate(t, x, jax.random.PRNGKey(0), p_s=p_s, delta_d=16,
+                      num_pairs=8192)
+    rng = np.random.default_rng(7)
+    i = rng.integers(0, len(aniso_corpus), 6000)
+    j = rng.integers(0, len(aniso_corpus), 6000)
+    keep = i != j
+    d = np.asarray(t.apply(jnp.asarray(aniso_corpus[i[keep]] - aniso_corpus[j[keep]])))
+    csq = np.cumsum(d * d, axis=1)
+    dims = np.asarray(table.dims)
+    for s in range(len(dims) - 1):  # last checkpoint is exact
+        dd = dims[s]
+        est = np.sqrt(csq[:, dd - 1] * float(np.asarray(table.scale)[s]))
+        exact = np.sqrt(csq[:, -1])
+        viol = np.mean(est / exact - 1 > float(np.asarray(table.eps)[s]))
+        assert viol == pytest.approx(p_s, abs=0.04), f"d={dd}: {viol}"
+
+
+def test_dade_eps_below_adsampling(aniso_corpus):
+    """Fig. 1 right: PCA needs smaller eps_d at the same significance."""
+    x = jnp.asarray(aniso_corpus)
+    t_pca = fit_pca(x)
+    t_rop = fit_random_orthogonal(jax.random.PRNGKey(1), x)
+    e_pca = calibrate(t_pca, x, jax.random.PRNGKey(2), p_s=0.1, delta_d=16)
+    e_rop = calibrate(t_rop, x, jax.random.PRNGKey(2), p_s=0.1, delta_d=16)
+    # compare mid-schedule checkpoints
+    mid = len(np.asarray(e_pca.dims)) // 2
+    assert float(e_pca.eps[mid]) < float(e_rop.eps[mid])
+
+
+def test_adsampling_table_closed_form():
+    t = fit_random_orthogonal(
+        jax.random.PRNGKey(0), jnp.ones((64, 64)) + jax.random.normal(
+            jax.random.PRNGKey(1), (64, 64)))
+    tab = adsampling_table(t, eps0=2.1, delta_d=32)
+    assert float(tab.eps[0]) == pytest.approx(2.1 / np.sqrt(32))
+    assert float(tab.scale[0]) == pytest.approx(64 / 32)
+    assert float(tab.eps[-1]) == 0.0 and float(tab.scale[-1]) == 1.0
+
+
+@pytest.mark.parametrize("method", ["fdscanning", "adsampling", "dade",
+                                    "pca_fixed", "rp_fixed"])
+def test_build_estimator_all_methods(method, aniso_corpus):
+    est = build_estimator(
+        method, aniso_corpus, jax.random.PRNGKey(0), delta_d=16, fixed_dim=16)
+    assert est.method == method
+    assert est.transform.dim == aniso_corpus.shape[1]
+    r = est.rotate(jnp.asarray(aniso_corpus[:4]))
+    assert r.shape == (4, aniso_corpus.shape[1])

@@ -1,0 +1,103 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps + property tests.
+
+The kernel runs in interpret mode on CPU (the kernel body executes in
+Python), so equality with ref.py validates the real TPU semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_estimator
+from repro.core.dco import dco_screen_batch
+from repro.kernels.ops import block_table, dco_screen_kernel
+from repro.kernels.ref import dade_dco_ref
+
+
+def _fixture(d, n, q, seed=0, decay=0.05):
+    rng = np.random.default_rng(seed)
+    scales = np.exp(-decay * np.arange(d)).astype(np.float32)
+    data = (rng.standard_normal((max(n * 2, 1024), d)) * scales).astype(np.float32)
+    qs = (rng.standard_normal((q, d)) * scales).astype(np.float32)
+    est = build_estimator("dade", data, jax.random.PRNGKey(seed), delta_d=32)
+    return est, est.rotate(jnp.asarray(qs)), est.rotate(jnp.asarray(data[:n]))
+
+
+@pytest.mark.parametrize("d", [64, 128, 200, 384])
+@pytest.mark.parametrize("n", [128, 300])
+def test_kernel_matches_ref_shape_sweep(d, n):
+    est, q_rot, c_rot = _fixture(d, n, 8)
+    r_sq = jnp.full((8,), float(d) * 0.5)
+    e1, p1, d1 = dco_screen_kernel(est, q_rot, c_rot, r_sq, interpret=True,
+                                   block_q=8, block_c=128, block_d=64)
+    e2, p2, d2 = dco_screen_kernel(est, q_rot, c_rot, r_sq, use_ref=True,
+                                   block_q=8, block_c=128, block_d=64)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtype_sweep(dtype):
+    est, q_rot, c_rot = _fixture(128, 256, 8, seed=3)
+    q_rot, c_rot = q_rot.astype(dtype), c_rot.astype(dtype)
+    r_sq = jnp.full((8,), 40.0)
+    e1, p1, d1 = dco_screen_kernel(est, q_rot, c_rot, r_sq, interpret=True)
+    e2, p2, d2 = dco_screen_kernel(est, q_rot, c_rot, r_sq, use_ref=True)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4, atol=1e-3)
+    assert np.mean(np.asarray(p1) == np.asarray(p2)) > 0.999
+
+
+def test_kernel_vs_core_engine():
+    """Kernel (block schedule) == core dco_screen_batch given aligned table."""
+    est, q_rot, c_rot = _fixture(128, 256, 4, seed=5)
+    est128 = build_estimator(
+        "dade",
+        np.asarray(jax.random.normal(jax.random.PRNGKey(0), (1024, 128))),
+        jax.random.PRNGKey(1), delta_d=128)
+    # kernel with block_d=128 == one-checkpoint-per-128-dims core screen
+    r_sq = jnp.full((4,), 64.0)
+    e_k, p_k, d_k = dco_screen_kernel(
+        est128, q_rot, c_rot, r_sq, interpret=True, block_d=128)
+    res = dco_screen_batch(q_rot, c_rot, est128.table, r_sq)
+    np.testing.assert_allclose(np.asarray(e_k), np.asarray(res.est_sq),
+                               rtol=2e-4, atol=2e-4)
+    assert np.mean(np.asarray(p_k) == np.asarray(res.passed)) > 0.999
+
+
+def test_block_table_resampling():
+    est, _, _ = _fixture(200, 128, 4)
+    eps, scale, d_pad, eps_lo = block_table(est.table, 200, 64)
+    assert d_pad == 256 and eps.shape == (4,)
+    # final block covers the exact tail: eps 0, scale 1
+    assert float(eps[-1]) == 0.0 and float(scale[-1]) == 1.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    d=st.sampled_from([64, 128, 192]),
+    n=st.integers(32, 200),
+    q=st.integers(1, 12),
+    rscale=st.floats(0.05, 4.0),
+    seed=st.integers(0, 1000),
+)
+def test_kernel_property_ref_equivalence(d, n, q, rscale, seed):
+    """Property: kernel == oracle for arbitrary shapes/thresholds."""
+    est, q_rot, c_rot = _fixture(d, n, q, seed=seed)
+    r_sq = jnp.full((q,), float(d) * rscale)
+    e1, p1, d1 = dco_screen_kernel(est, q_rot, c_rot, r_sq, interpret=True)
+    e2, p2, d2 = dco_screen_kernel(est, q_rot, c_rot, r_sq, use_ref=True)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_kernel_pruning_monotone():
+    """Smaller thresholds can only prune earlier (dims_used monotone)."""
+    est, q_rot, c_rot = _fixture(128, 256, 4, seed=9)
+    _, _, dims_tight = dco_screen_kernel(
+        est, q_rot, c_rot, jnp.full((4,), 1.0), interpret=True)
+    _, _, dims_loose = dco_screen_kernel(
+        est, q_rot, c_rot, jnp.full((4,), 1e6), interpret=True)
+    assert np.all(np.asarray(dims_tight) <= np.asarray(dims_loose))

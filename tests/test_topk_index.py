@@ -1,0 +1,86 @@
+"""Wave top-k refinement + index-level recall behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_estimator, exact_knn, knn_search_waves, merge_topk
+from repro.index import build_flat, build_ivf, search_flat, search_ivf
+
+
+def _recall(ids, gt_ids):
+    ids, gt_ids = np.asarray(ids), np.asarray(gt_ids)
+    return np.mean([
+        len(set(ids[i].tolist()) & set(gt_ids[i].tolist())) / gt_ids.shape[1]
+        for i in range(len(ids))
+    ])
+
+
+def test_merge_topk_is_sorted_merge():
+    a_sq = jnp.asarray([[1.0, 3.0, 9.0]])
+    a_id = jnp.asarray([[10, 30, 90]], jnp.int32)
+    b_sq = jnp.asarray([[2.0, 4.0]])
+    b_id = jnp.asarray([[20, 40]], jnp.int32)
+    sq, ids = merge_topk(a_sq, a_id, b_sq, b_id)
+    assert list(np.asarray(sq)[0]) == [1.0, 2.0, 3.0]
+    assert list(np.asarray(ids)[0]) == [10, 20, 30]
+
+
+def test_waves_fdscanning_equals_exact(aniso_corpus, queries):
+    est = build_estimator("fdscanning", aniso_corpus, jax.random.PRNGKey(0))
+    q_rot = est.rotate(jnp.asarray(queries))
+    c_rot = est.rotate(jnp.asarray(aniso_corpus))
+    res = knn_search_waves(q_rot, c_rot, est.table, k=10, wave=512)
+    _, gt = exact_knn(jnp.asarray(queries), jnp.asarray(aniso_corpus), 10)
+    assert _recall(res.ids, gt) == 1.0
+    assert float(res.avg_dims) == pytest.approx(aniso_corpus.shape[1], rel=0.02)
+
+
+@pytest.mark.parametrize("method,min_recall", [
+    ("dade", 0.99), ("adsampling", 0.99),
+])
+def test_waves_dade_high_recall_fewer_dims(method, min_recall, aniso_corpus, queries):
+    est = build_estimator(method, aniso_corpus, jax.random.PRNGKey(0), delta_d=16)
+    q_rot = est.rotate(jnp.asarray(queries))
+    c_rot = est.rotate(jnp.asarray(aniso_corpus))
+    res = knn_search_waves(q_rot, c_rot, est.table, k=10, wave=512)
+    _, gt = exact_knn(jnp.asarray(queries), jnp.asarray(aniso_corpus), 10)
+    assert _recall(res.ids, gt) >= min_recall
+    assert float(res.avg_dims) < 0.75 * aniso_corpus.shape[1]
+
+
+def test_two_phase_seeding_reduces_dims(aniso_corpus, queries):
+    est = build_estimator("dade", aniso_corpus, jax.random.PRNGKey(0), delta_d=16)
+    q_rot = est.rotate(jnp.asarray(queries))
+    c_rot = est.rotate(jnp.asarray(aniso_corpus))
+    r1 = knn_search_waves(q_rot, c_rot, est.table, k=10, wave=512)
+    r2 = knn_search_waves(q_rot, c_rot, est.table, k=10, wave=512, two_phase=True)
+    _, gt = exact_knn(jnp.asarray(queries), jnp.asarray(aniso_corpus), 10)
+    assert _recall(r2.ids, gt) >= _recall(r1.ids, gt) - 0.02
+    assert float(r2.avg_dims) <= float(r1.avg_dims)
+
+
+def test_flat_index_roundtrip(aniso_corpus, queries):
+    idx = build_flat(aniso_corpus, method="dade", delta_d=16)
+    res = search_flat(idx, jnp.asarray(queries), k=5)
+    assert res.ids.shape == (len(queries), 5)
+    assert np.all(np.diff(np.asarray(res.dists), axis=1) >= -1e-5)
+
+
+def test_ivf_recall(aniso_corpus, queries):
+    idx = build_ivf(aniso_corpus, method="dade", n_clusters=32, delta_d=16)
+    d, ids, avg = search_ivf(idx, jnp.asarray(queries), k=10, n_probe=12)
+    _, gt = exact_knn(jnp.asarray(queries), jnp.asarray(aniso_corpus), 10)
+    assert _recall(ids, gt) >= 0.9
+    assert float(avg) < aniso_corpus.shape[1]
+
+
+def test_ivf_nprobe_monotone(aniso_corpus, queries):
+    idx = build_ivf(aniso_corpus, method="dade", n_clusters=32, delta_d=16)
+    _, gt = exact_knn(jnp.asarray(queries), jnp.asarray(aniso_corpus), 10)
+    recalls = []
+    for np_ in (2, 8, 24):
+        _, ids, _ = search_ivf(idx, jnp.asarray(queries), k=10, n_probe=np_)
+        recalls.append(_recall(ids, gt))
+    assert recalls[0] <= recalls[1] + 0.03 and recalls[1] <= recalls[2] + 0.03

@@ -1,0 +1,77 @@
+"""Transform-layer invariants (paper Lemmas 1, 2, 4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import transforms as tf
+
+
+def test_pca_orthogonal(aniso_corpus):
+    t = tf.fit_pca(jnp.asarray(aniso_corpus))
+    assert tf.orthogonality_error(t) < 1e-3
+
+
+def test_random_orthogonal_is_orthogonal():
+    q = tf.random_orthogonal(jax.random.PRNGKey(0), 48)
+    err = np.max(np.abs(np.asarray(q.T @ q) - np.eye(48)))
+    assert err < 1e-5
+
+
+def test_pca_variances_descending(aniso_corpus):
+    t = tf.fit_pca(jnp.asarray(aniso_corpus))
+    v = np.asarray(t.variances)
+    assert np.all(v[:-1] >= v[1:] - 1e-5)
+
+
+def test_lemma1_distance_invariance(aniso_corpus):
+    """Orthogonal rotation preserves pairwise distances (Lemma 1)."""
+    x = jnp.asarray(aniso_corpus[:100])
+    for t in (tf.fit_pca(x), tf.fit_random_orthogonal(jax.random.PRNGKey(1), x)):
+        r = t.apply(x)
+        d0 = np.linalg.norm(aniso_corpus[:50] - aniso_corpus[50:100], axis=1)
+        d1 = np.linalg.norm(np.asarray(r)[:50] - np.asarray(r)[50:100], axis=1)
+        np.testing.assert_allclose(d0, d1, rtol=2e-4)
+
+
+def test_lemma2_variance_sum_preserved(aniso_corpus):
+    """Orthogonal projection preserves the sum of per-dim variances."""
+    x = jnp.asarray(aniso_corpus)
+    t_pca = tf.fit_pca(x)
+    t_rop = tf.fit_random_orthogonal(jax.random.PRNGKey(2), x)
+    s_pca = float(jnp.sum(t_pca.variances))
+    s_rop = float(jnp.sum(t_rop.variances))
+    assert abs(s_pca - s_rop) / s_pca < 1e-3
+
+
+def test_lemma4_pca_concentrates_variance(aniso_corpus):
+    """PCA's sigma^2(1,d) dominates ROP's for every prefix d (Fig. 1 left)."""
+    x = jnp.asarray(aniso_corpus)
+    t_pca = tf.fit_pca(x)
+    t_rop = tf.fit_random_orthogonal(jax.random.PRNGKey(3), x)
+    c_pca = np.asarray(t_pca.cum_variances)
+    c_rop = np.asarray(t_rop.cum_variances)
+    # strict domination on the informative prefix
+    assert np.all(c_pca[: len(c_pca) // 2] >= c_rop[: len(c_rop) // 2])
+
+
+def test_scale_monotone(aniso_corpus):
+    t = tf.fit_pca(jnp.asarray(aniso_corpus))
+    d = jnp.arange(1, t.dim + 1)
+    s = np.asarray(t.scale(d))
+    assert np.all(np.diff(s) <= 1e-6)  # scale decreases towards 1
+    assert abs(s[-1] - 1.0) < 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(dim=st.integers(4, 32), seed=st.integers(0, 2**31 - 1))
+def test_identity_scale_property(dim, seed):
+    """For isotropic data, the unbiased scale is ~D/d (ADSampling's scale)."""
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal((2000, dim)).astype(np.float32)
+    t = tf.identity_transform(jnp.asarray(data))
+    d = dim // 2
+    s = float(t.scale(jnp.asarray(d)))
+    assert s == pytest.approx(dim / d, rel=0.25)
