@@ -10,10 +10,10 @@ import time
 def main() -> None:
     from benchmarks import (
         fig1_variance, fig2_time_recall, fig3_feasibility,
-        fig4_ps_sensitivity, fig5_delta_d, kernel_bench,
+        fig4_ps_sensitivity, fig5_delta_d, fig6_quant, kernel_bench,
     )
     mods = [fig1_variance, fig3_feasibility, fig4_ps_sensitivity,
-            fig5_delta_d, kernel_bench, fig2_time_recall]
+            fig5_delta_d, kernel_bench, fig2_time_recall, fig6_quant]
     print("name,us_per_call,derived")
     for m in mods:
         t0 = time.time()

@@ -39,9 +39,10 @@ from repro.launch.annservice import build_search_step, search_input_specs  # noq
 
 
 def main():
+    from repro.launch.mesh import make_mesh_compat
+
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh(
-        (n_dev,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((n_dev,), ("data",))
     svc = ServiceConfig(
         corpus_per_device=args.corpus_per_device, dim=args.dim,
         query_batch=args.batch, k=args.k, delta_d=32, wave=4096)

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify (the ROADMAP command): full test suite, fail-fast, quiet.
+# Usage: scripts/tier1.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -17,6 +17,9 @@ class ServiceConfig:
     # the two-phase distributed seed makes r final-tight from wave 0 (see
     # EXPERIMENTS.md §Dry-run notes); 0.02 keeps recall ~0.99 at 1M/dev.
     dtype: str = "bfloat16"  # §Perf A1: halves corpus + score traffic
+    quant: str = "none"  # "int8": repro.quant two-stage wave scan (1 B/dim
+    # stream + budgeted exact refine); quarters the dominant HBM traffic.
+    refine_per_wave: int = 0  # 0 -> auto (2k) exact refinements per wave
 
 
 CONFIG = ServiceConfig()

@@ -7,6 +7,12 @@ Layers:
   dco          — batched block-incremental DCO screen (Algorithm 1, TPU form).
   dco_host     — numpy compaction engine for honest CPU wall-clock QPS.
   topk         — wave-synchronous K-NN refinement (heap replacement).
+
+The quantized two-stage DCO subsystem lives in the sibling package
+``repro.quant`` (int8 corpus codes + lower-bound prefilter feeding this
+engine; imported lazily there to keep the layering acyclic — see
+``repro.quant.__init__`` for its exports).  Estimators carry the optional
+``quant`` policy (``repro.quant.scalar.QuantConfig``).
 """
 
 from repro.core.calibration import EpsilonTable, adsampling_table, calibrate, expansion_schedule

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import calibration as calib
 from repro.core import transforms as tf
+from repro.quant.scalar import QuantConfig
 
 __all__ = ["Estimator", "build_estimator"]
 
@@ -33,16 +34,21 @@ class Estimator:
     method: str  # static aux
     transform: tf.OrthogonalTransform
     table: calib.EpsilonTable
+    # Optional corpus-quantization policy (repro.quant): when set, index
+    # builders additionally store int8 codes + scales and searches may run
+    # the two-stage screen.  Static aux (hashable config, not data).
+    quant: QuantConfig | None = None
 
     def rotate(self, x: jax.Array) -> jax.Array:
         return self.transform.apply(x)
 
     def tree_flatten(self):
-        return (self.transform, self.table), self.method
+        return (self.transform, self.table), (self.method, self.quant)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(aux, *children)
+        method, quant = aux
+        return cls(method, *children, quant=quant)
 
 
 def _single_checkpoint_table(dim: int) -> calib.EpsilonTable:
@@ -83,6 +89,7 @@ def build_estimator(
     eps0: float = 2.1,
     fixed_dim: int | None = None,
     num_pairs: int = 4096,
+    quant: QuantConfig | str | None = None,
 ) -> Estimator:
     """Fit an estimator on a corpus sample.
 
@@ -94,7 +101,11 @@ def build_estimator(
       delta_d: expansion step size (paper default 32).
       eps0: ADSampling's error parameter (paper default 2.1).
       fixed_dim: projection dim for the fixed-d baselines.
+      quant: optional corpus-quantization policy ("int8", a QuantConfig, or
+        None/"none") — consumed by index builders and the serving stack.
     """
+    if isinstance(quant, str):
+        quant = None if quant in ("", "none") else QuantConfig(bits=int(quant.removeprefix("int")))
     data = jnp.asarray(data, jnp.float32)
     dim = data.shape[1]
     if key is None:
@@ -123,4 +134,4 @@ def build_estimator(
         table = _fixed_dim_table(transform, fixed_dim, unbiased=False)
     else:
         raise ValueError(f"unknown DCO method: {method}")
-    return Estimator(method=method, transform=transform, table=table)
+    return Estimator(method=method, transform=transform, table=table, quant=quant)

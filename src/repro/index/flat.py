@@ -11,6 +11,8 @@ import jax.numpy as jnp
 
 from repro.core.estimators import Estimator, build_estimator
 from repro.core.topk import KnnResult, exact_knn, knn_search_waves
+from repro.quant.scalar import QuantizedCorpus, quantize_corpus, wants_quant
+from repro.quant.screen import knn_search_waves_quant
 
 __all__ = ["FlatIndex", "build_flat", "search_flat"]
 
@@ -21,9 +23,17 @@ class FlatIndex:
     estimator: Estimator
     corpus_rot: jax.Array  # (N, D)
     corpus: jax.Array  # (N, D) original space (for exact ground truth)
+    # Optional int8 mirror of corpus_rot (repro.quant two-stage screen).
+    corpus_q: jax.Array | None = None  # (N, D) int8
+    qscales: jax.Array | None = None  # (D,)
+
+    @property
+    def has_quant(self) -> bool:
+        return self.corpus_q is not None
 
     def tree_flatten(self):
-        return ((self.estimator, self.corpus_rot, self.corpus), None)
+        return ((self.estimator, self.corpus_rot, self.corpus,
+                 self.corpus_q, self.qscales), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -37,17 +47,26 @@ def build_flat(
     method: str = "dade",
     key: jax.Array | None = None,
     estimator: Estimator | None = None,
+    quant: str | None = None,
     **est_kwargs,
 ) -> FlatIndex:
     if key is None:
         key = jax.random.PRNGKey(0)
     data = jnp.asarray(data, jnp.float32)
     if estimator is None:
-        estimator = build_estimator(method, data, key, **est_kwargs)
-    return FlatIndex(estimator=estimator, corpus_rot=estimator.rotate(data), corpus=data)
+        estimator = build_estimator(method, data, key, quant=quant, **est_kwargs)
+    rot = estimator.rotate(data)
+    corpus_q = qscales = None
+    if wants_quant(quant, estimator.quant):
+        qc = quantize_corpus(rot)
+        corpus_q, qscales = qc.codes, qc.scales
+    return FlatIndex(
+        estimator=estimator, corpus_rot=rot, corpus=data,
+        corpus_q=corpus_q, qscales=qscales,
+    )
 
 
-@partial(jax.jit, static_argnames=("k", "wave", "two_phase"))
+@partial(jax.jit, static_argnames=("k", "wave", "two_phase", "use_quant"))
 def search_flat(
     index: FlatIndex,
     queries: jax.Array,
@@ -55,8 +74,20 @@ def search_flat(
     k: int = 10,
     wave: int = 4096,
     two_phase: bool = False,
+    use_quant: bool = False,
 ) -> KnnResult:
+    """Flat-scan K-NN.  ``use_quant`` routes waves through the two-stage
+    screen (identical results; avg_dims counts only fp32 dims)."""
     q_rot = index.estimator.rotate(queries.astype(jnp.float32))
+    if use_quant:
+        if not index.has_quant:
+            raise ValueError("search_flat(use_quant=True) needs build_flat(quant='int8')")
+        result, _ = knn_search_waves_quant(
+            q_rot, index.corpus_rot,
+            QuantizedCorpus(index.corpus_q, index.qscales),
+            index.estimator.table, k=k, wave=wave,
+        )
+        return result
     return knn_search_waves(
         q_rot, index.corpus_rot, index.estimator.table, k=k, wave=wave, two_phase=two_phase
     )

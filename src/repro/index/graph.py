@@ -27,6 +27,8 @@ import numpy as np
 
 from repro.core.dco import dco_screen
 from repro.core.estimators import Estimator, build_estimator
+from repro.quant.scalar import QuantizedCorpus, quantize_corpus, wants_quant
+from repro.quant.screen import two_stage_screen
 
 __all__ = ["GraphIndex", "build_graph", "search_graph"]
 
@@ -38,13 +40,21 @@ class GraphIndex:
     corpus_rot: jax.Array  # (N, D)
     neighbors: jax.Array  # (N, M) int32, -1 padded
     entry: jax.Array  # () int32 medoid entry point
+    # Optional int8 mirror of corpus_rot (repro.quant two-stage screen).
+    corpus_q: jax.Array | None = None  # (N, D) int8
+    qscales: jax.Array | None = None  # (D,)
 
     @property
     def degree(self) -> int:
         return self.neighbors.shape[1]
 
+    @property
+    def has_quant(self) -> bool:
+        return self.corpus_q is not None
+
     def tree_flatten(self):
-        return ((self.estimator, self.corpus_rot, self.neighbors, self.entry), None)
+        return ((self.estimator, self.corpus_rot, self.neighbors, self.entry,
+                 self.corpus_q, self.qscales), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -97,13 +107,14 @@ def build_graph(
     ef_construction: int = 100,
     key: jax.Array | None = None,
     estimator: Estimator | None = None,
+    quant: str | None = None,
     **est_kwargs,
 ) -> GraphIndex:
     if key is None:
         key = jax.random.PRNGKey(0)
     data = jnp.asarray(data, jnp.float32)
     if estimator is None:
-        estimator = build_estimator(method, data, key, **est_kwargs)
+        estimator = build_estimator(method, data, key, quant=quant, **est_kwargs)
     rot = np.asarray(estimator.rotate(data))
     n = rot.shape[0]
 
@@ -167,15 +178,21 @@ def build_graph(
             nbrs = select_heuristic(v, nbrs, m)
         final[v, : nbrs.size] = nbrs
     entry = int(np.argmin(np.einsum("nd,nd->n", rot - rot.mean(0), rot - rot.mean(0))))
+    corpus_q = qscales = None
+    if wants_quant(quant, estimator.quant):
+        qc = quantize_corpus(jnp.asarray(rot))
+        corpus_q, qscales = qc.codes, qc.scales
     return GraphIndex(
         estimator=estimator,
         corpus_rot=jnp.asarray(rot),
         neighbors=jnp.asarray(final, jnp.int32),
         entry=jnp.asarray(entry, jnp.int32),
+        corpus_q=corpus_q,
+        qscales=qscales,
     )
 
 
-@partial(jax.jit, static_argnames=("k", "ef", "max_steps", "decoupled"))
+@partial(jax.jit, static_argnames=("k", "ef", "max_steps", "decoupled", "use_quant"))
 def search_graph(
     index: GraphIndex,
     queries: jax.Array,  # (Q, D) original space
@@ -184,13 +201,23 @@ def search_graph(
     ef: int = 64,
     max_steps: int = 512,
     decoupled: bool = True,
+    use_quant: bool = False,
 ):
     """Batched (vmapped) DCO beam search.
 
     Returns (dists (Q,K), ids (Q,K), avg_dims (Q,) mean dims per screened
     candidate).  ``decoupled`` selects the HNSW++-style threshold (r from the
     K-sized result set) vs HNSW+ (r from the ef-sized beam).
+
+    ``use_quant`` screens each expansion through the two-stage quantized
+    screen.  The result-set gating (``passed``) is identical to fp32 (no
+    false prunes); the beam *ordering* may differ slightly because pruned
+    neighbors are ranked by their (under-estimating) lower bound instead of
+    the fp32 rejecting estimate — recall semantics are unchanged (estimates
+    only order the ++-decoupled beam).  avg_dims counts fp32 dims only.
     """
+    if use_quant and not index.has_quant:
+        raise ValueError("search_graph(use_quant=True) needs build_graph(quant='int8')")
     q_rot = index.estimator.rotate(queries.astype(jnp.float32))
     table = index.estimator.table
     n = index.corpus_rot.shape[0]
@@ -242,7 +269,15 @@ def search_graph(
 
             r_sq = top_sq[-1] if decoupled else w_sq[-1]
             r_sq = jnp.where(jnp.isfinite(r_sq), r_sq, 1e18)
-            res = dco_screen(qv, cands, table, r_sq)
+            if use_quant:
+                qcands = index.corpus_q[jnp.maximum(nbrs, 0)]  # (M, D) int8
+                res2 = two_stage_screen(
+                    qv[None], cands, QuantizedCorpus(qcands, index.qscales),
+                    table, r_sq[None],
+                )
+                res = type(res2)(*[f[0] for f in res2])  # drop the Q=1 axis
+            else:
+                res = dco_screen(qv, cands, table, r_sq)
             est_sq = jnp.where(fresh, res.est_sq, jnp.inf)
             passed = res.passed & fresh
             dims_acc = dims_acc + jnp.sum(jnp.where(fresh, res.dims_used, 0))

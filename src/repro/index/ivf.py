@@ -23,6 +23,8 @@ from repro.core.dco import dco_screen_batch
 from repro.core.estimators import Estimator, build_estimator
 from repro.core.topk import merge_topk
 from repro.index.kmeans import kmeans
+from repro.quant.scalar import QuantizedCorpus, fit_scales, quantize, wants_quant
+from repro.quant.screen import two_stage_screen
 
 __all__ = ["IVFIndex", "build_ivf", "search_ivf"]
 
@@ -37,6 +39,11 @@ class IVFIndex:
     buckets: jax.Array  # (Nc, cap, D) rotated, padded with _SENTINEL
     bucket_ids: jax.Array  # (Nc, cap) original row ids, -1 padding
     bucket_sizes: jax.Array  # (Nc,)
+    # Optional int8 mirror of ``buckets`` (repro.quant): stage-1 of the
+    # two-stage screen streams these 1-byte codes; fp32 rows are touched
+    # only by surviving candidates.  None when built without quantization.
+    qbuckets: jax.Array | None = None  # (Nc, cap, D) int8, 0-padded
+    qscales: jax.Array | None = None  # (D,)
 
     @property
     def n_clusters(self) -> int:
@@ -46,9 +53,14 @@ class IVFIndex:
     def capacity(self) -> int:
         return self.buckets.shape[1]
 
+    @property
+    def has_quant(self) -> bool:
+        return self.qbuckets is not None
+
     def tree_flatten(self):
         return (
-            (self.estimator, self.centroids, self.buckets, self.bucket_ids, self.bucket_sizes),
+            (self.estimator, self.centroids, self.buckets, self.bucket_ids,
+             self.bucket_sizes, self.qbuckets, self.qscales),
             None,
         )
 
@@ -66,35 +78,59 @@ def build_ivf(
     kmeans_iters: int = 15,
     key: jax.Array | None = None,
     estimator: Estimator | None = None,
+    quant: str | None = None,
     **est_kwargs,
 ) -> IVFIndex:
-    """Build an IVF index over (N, D) data. Host-side (one-time, offline)."""
+    """Build an IVF index over (N, D) data. Host-side (one-time, offline).
+
+    ``quant="int8"`` (or an estimator carrying a QuantConfig) additionally
+    stores int8 codes per bucket for the two-stage screen.
+    """
     if key is None:
         key = jax.random.PRNGKey(0)
     k_est, k_km = jax.random.split(key)
     data = jnp.asarray(data, jnp.float32)
     if estimator is None:
-        estimator = build_estimator(method, data, k_est, **est_kwargs)
+        estimator = build_estimator(method, data, k_est, quant=quant, **est_kwargs)
     rot = np.asarray(estimator.rotate(data))
 
     cents, assignment = kmeans(k_km, jnp.asarray(rot), n_clusters, kmeans_iters)
     assignment = np.asarray(assignment)
 
-    order = np.argsort(assignment, kind="stable")
-    sizes = np.bincount(assignment, minlength=n_clusters)
+    n = rot.shape[0]
+    # Ids/offsets are int32 end-to-end: allocating int64 then downcasting
+    # hid a potential overflow.  2^31 rows is far beyond a single host's
+    # build anyway (the distributed service shards first).
+    if n >= np.iinfo(np.int32).max:
+        raise ValueError(f"corpus of {n} rows overflows int32 bucket ids")
+    order = np.argsort(assignment, kind="stable").astype(np.int32)
+    sizes = np.bincount(assignment, minlength=n_clusters).astype(np.int32)
     cap = int(max(1, sizes.max()))
     # Round capacity up so gathered candidate matrices are lane-aligned.
     cap = ((cap + 127) // 128) * 128
 
     dim = rot.shape[1]
     buckets = np.full((n_clusters, cap, dim), _SENTINEL, np.float32)
-    bucket_ids = np.full((n_clusters, cap), -1, np.int64)
-    starts = np.zeros(n_clusters + 1, np.int64)
+    bucket_ids = np.full((n_clusters, cap), -1, np.int32)
+    starts = np.zeros(n_clusters + 1, np.int32)
     np.cumsum(sizes, out=starts[1:])
+    assert int(starts[-1]) == n  # int32 cumsum cannot have wrapped
     for c in range(n_clusters):
         rows = order[starts[c] : starts[c + 1]]
         buckets[c, : len(rows)] = rot[rows]
         bucket_ids[c, : len(rows)] = rows
+
+    qbuckets = qscales = None
+    if wants_quant(quant, estimator.quant):
+        qscales = np.asarray(fit_scales(jnp.asarray(rot)))
+        # Pad slots get code 0 (dequantizes to the origin): stage 1 may keep
+        # them, but the fp32 stage sees the _SENTINEL row and the id mask
+        # drops them regardless — soundness never depends on pad rows.
+        qbuckets = np.zeros((n_clusters, cap, dim), np.int8)
+        codes = np.asarray(quantize(jnp.asarray(rot), jnp.asarray(qscales)))
+        for c in range(n_clusters):
+            rows = order[starts[c] : starts[c + 1]]
+            qbuckets[c, : len(rows)] = codes[rows]
 
     return IVFIndex(
         estimator=estimator,
@@ -102,16 +138,30 @@ def build_ivf(
         buckets=jnp.asarray(buckets),
         bucket_ids=jnp.asarray(bucket_ids, jnp.int32),
         bucket_sizes=jnp.asarray(sizes, jnp.int32),
+        qbuckets=None if qbuckets is None else jnp.asarray(qbuckets),
+        qscales=None if qscales is None else jnp.asarray(qscales, jnp.float32),
     )
 
 
-@partial(jax.jit, static_argnames=("k", "n_probe"))
-def search_ivf(index: IVFIndex, queries: jax.Array, *, k: int = 10, n_probe: int = 8):
+@partial(jax.jit, static_argnames=("k", "n_probe", "use_quant"))
+def search_ivf(
+    index: IVFIndex,
+    queries: jax.Array,
+    *,
+    k: int = 10,
+    n_probe: int = 8,
+    use_quant: bool = False,
+):
     """Batched IVF search. Returns (dists (Q,K), ids (Q,K), avg_dims scalar).
 
     Each probed bucket is one DCO wave: the threshold r refreshes between
     buckets (nearest bucket first, so r tightens fast — same ordering as
     Faiss/the paper's IVF*).
+
+    ``use_quant`` routes each wave through the two-stage screen (int8
+    lower-bound prefilter + fp32 re-screen of survivors).  Results are
+    identical to the fp32 path (no false prunes); ``avg_dims`` then counts
+    only fp32 dims — the bytes the prefilter saved are visible as the drop.
     """
     q = queries.astype(jnp.float32)
     q_rot = index.estimator.rotate(q)
@@ -131,6 +181,9 @@ def search_ivf(index: IVFIndex, queries: jax.Array, *, k: int = 10, n_probe: int
     dims_acc = jnp.zeros((), jnp.float32)
     rows_acc = jnp.zeros((), jnp.float32)
 
+    if use_quant and not index.has_quant:
+        raise ValueError("search_ivf(use_quant=True) needs an index built with quant='int8'")
+
     def body(p, carry):
         top_sq, top_ids, r_sq, dims_acc, rows_acc = carry
         bucket = probe[:, p]  # (Q,)
@@ -139,9 +192,17 @@ def search_ivf(index: IVFIndex, queries: jax.Array, *, k: int = 10, n_probe: int
         valid = cand_ids >= 0
 
         # Per-query candidate sets: vmap the single-query screen.
-        res = jax.vmap(
-            lambda qv, cv, rv: dco_screen_batch(qv[None], cv, table, rv[None])
-        )(q_rot, cands, r_sq)
+        if use_quant:
+            qcands = index.qbuckets[bucket]  # (Q, cap, D) int8
+            res = jax.vmap(
+                lambda qv, cv, qcv, rv: two_stage_screen(
+                    qv[None], cv, QuantizedCorpus(qcv, index.qscales), table, rv[None]
+                )
+            )(q_rot, cands, qcands, r_sq)
+        else:
+            res = jax.vmap(
+                lambda qv, cv, rv: dco_screen_batch(qv[None], cv, table, rv[None])
+            )(q_rot, cands, r_sq)
         est_sq = res.est_sq[:, 0, :]  # (Q, cap)
         passed = res.passed[:, 0, :] & valid
         new_sq = jnp.where(passed, est_sq, jnp.inf)

@@ -1,11 +1,20 @@
 """Pallas TPU kernels for the DCO hot-spot the paper optimizes.
 
 dade_dco.py -- blocked partial-distance screen (the paper's Algorithm 1 as a
-tile-granular VMEM-resident kernel); ops.py -- jit'd public wrappers with
-padding + CPU interpret fallback; ref.py -- pure-jnp oracle.
+tile-granular VMEM-resident kernel); quant_dco.py -- int8 lower-bound
+prefilter (stage 1 of the quantized two-stage screen, 1 byte/dim of HBM
+traffic); ops.py -- jit'd public wrappers with padding + CPU interpret
+fallback; ref.py -- pure-jnp oracles.
 """
 
-from repro.kernels.ops import block_table, dco_screen_kernel, on_tpu
-from repro.kernels.ref import dade_dco_ref
+from repro.kernels.ops import block_table, dco_screen_kernel, on_tpu, quant_screen_kernel
+from repro.kernels.ref import dade_dco_ref, quant_dco_ref
 
-__all__ = ["block_table", "dco_screen_kernel", "on_tpu", "dade_dco_ref"]
+__all__ = [
+    "block_table",
+    "dco_screen_kernel",
+    "quant_screen_kernel",
+    "on_tpu",
+    "dade_dco_ref",
+    "quant_dco_ref",
+]

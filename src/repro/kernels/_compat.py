@@ -1,0 +1,13 @@
+"""Pallas API compatibility shims.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` upstream;
+resolve whichever this jax build provides so the kernels lower on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 __all__ = ["l2_scan_kernel_call"]
 
 
@@ -67,7 +69,7 @@ def l2_scan_kernel_call(
         out_specs=pl.BlockSpec((block_q, block_c), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((qn, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_q, block_c), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q_rot, cands_rot)

@@ -16,9 +16,11 @@ import numpy as np
 from repro.core.calibration import EpsilonTable
 from repro.core.estimators import Estimator
 from repro.kernels import dade_dco as _dade
+from repro.kernels import quant_dco as _quant
 from repro.kernels import ref as _ref
+from repro.quant.scalar import cum_err_sq
 
-__all__ = ["dco_screen_kernel", "block_table", "on_tpu"]
+__all__ = ["dco_screen_kernel", "quant_screen_kernel", "block_table", "on_tpu"]
 
 _PAD_SENTINEL = 1e18  # huge-but-finite: pad rows prune at the first block
 
@@ -123,4 +125,72 @@ def dco_screen_kernel(
         est_sq[:qn, :n],
         passed[:qn, :n].astype(bool),
         dims_used[:qn, :n],
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_c", "block_d", "slack", "interpret", "use_ref"),
+)
+def _quant_call(q, codes, scales, eps, scale, ecum, r_sq, block_q, block_c,
+                block_d, slack, interpret, use_ref):
+    if use_ref:
+        return _ref.quant_dco_ref(
+            q, codes, scales, eps, scale, ecum, r_sq,
+            block_d=block_d, slack=slack,
+        )
+    return _quant.quant_dco_kernel_call(
+        q, codes, scales, eps, scale, ecum, r_sq,
+        block_q=block_q, block_c=block_c, block_d=block_d, slack=slack,
+        interpret=interpret,
+    )
+
+
+def quant_screen_kernel(
+    estimator: Estimator,
+    q_rot: jax.Array,  # (Q, D) rotated fp32 queries
+    codes: jax.Array,  # (N, D) int8 corpus codes
+    scales: jax.Array,  # (D,) per-dimension quantization scales
+    r_sq: jax.Array,  # (Q,)
+    *,
+    block_q: int = 128,
+    block_c: int = 128,
+    block_d: int = 128,
+    slack: float = 1e-4,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+):
+    """Public entry for the int8 lower-bound prefilter (stage 1).
+
+    Pads to tile boundaries, resamples the epsilon table onto the block
+    grid, derives the cumulative quantization-error band E(d) from the
+    scales, and launches the kernel (interpret on CPU).  Returns
+    (lb_sq (Q,N) f32, pruned (Q,N) bool, lb_dims (Q,N) i32), cropped.
+    Padded dimensions carry zero codes AND zero scales, so they add nothing
+    to either the distance or the error band.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    qn, dim = q_rot.shape
+    n = codes.shape[0]
+
+    eps, scale, d_pad, _ = block_table(estimator.table, dim, block_d)
+    s_count = d_pad // block_d
+    sc = _pad_axis(scales.astype(jnp.float32), 0, block_d, 0.0)
+    ecum = jnp.sqrt(cum_err_sq(sc, (jnp.arange(s_count) + 1) * block_d))
+
+    q = _pad_axis(q_rot.astype(jnp.float32), 1, block_d, 0.0)
+    q = _pad_axis(q, 0, block_q, 0.0)
+    c = _pad_axis(codes, 1, block_d, 0)
+    c = _pad_axis(c, 0, block_c, 0)
+    r = _pad_axis(r_sq.astype(jnp.float32), 0, block_q, 0.0)
+
+    lb_sq, pruned, lb_dims = _quant_call(
+        q, c, sc, eps, scale, ecum, r, block_q, block_c, block_d, slack,
+        interpret, use_ref,
+    )
+    return (
+        lb_sq[:qn, :n],
+        pruned[:qn, :n].astype(bool),
+        lb_dims[:qn, :n],
     )

@@ -1,27 +1,25 @@
-"""Pallas TPU kernel for the DADE block-incremental DCO screen.
+"""Pallas TPU kernel for the int8 lower-bound DCO prefilter (stage 1).
 
-TPU adaptation of Algorithm 1 (see DESIGN.md §3): the per-candidate early-
-exit loop becomes a tile-granular screen.  Grid = (q_tiles, c_tiles, S) with
-the dimension-block axis S innermost ("arbitrary" semantics — sequential per
-candidate tile).  VMEM scratch carries, across the S loop:
+Mirrors ``dade_dco.py``'s block structure exactly — grid (q_tiles, c_tiles,
+S) with the dimension-block axis innermost and sequential, VMEM scratch
+carrying psum/active/retirement state across blocks, tile-granular early
+exit via an SMEM alive counter — but streams the corpus as **int8 codes**
+(1 byte/dim of HBM traffic instead of 4) and tests the *lower bound*
 
-    psum   (QT, CT) f32   — partial squared distance (cumulative over blocks)
-    active (QT, CT) f32   — 1.0 while H0 not yet rejected
-    oest   (QT, CT) f32   — estimate at retirement
-    odims  (QT, CT) f32   — dims consumed at retirement
-    alive  (1, 1) SMEM    — per-tile active count for the early exit
+    lb = max(0, sqrt(psum) - E(d_s))^2 * (1 - slack)
 
-Per block s the partial distance is computed with the MXU-friendly
-``||q-o||² = ||q||² + ||o||² - 2 q·oᵀ`` decomposition, f32 accumulation.
-When every (q, c) pair in the tile has retired, ``@pl.when(alive > 0)``
-skips the remaining blocks' compute — the tile-granular realization of the
-paper's FLOP savings (HBM prefetch of skipped blocks still occurs under the
-automatic pipeline; see DESIGN.md §8.3).
+of the scaled partial distance against the DADE threshold.  Codes are
+dequantized in VMEM (one VPU multiply by the per-dimension scales tile)
+right before the MXU product, so the arithmetic is the same f32
+``qn + cn - 2 q.o'ᵀ`` decomposition as the fp32 kernel; only the memory
+traffic changes.  Rows the kernel marks ``pruned`` are definite rejects
+(no false prunes — see repro.quant.scalar); survivors are re-screened by
+the fp32 ``dade_dco`` path on exact rows.
 
-The checkpoint schedule is tied to the block width: checkpoint s tests at
-d = (s+1)·DB dims, so the epsilon/scale tables must be built with
-``delta_d = DB`` (``repro.kernels.ops`` enforces this).  DB defaults to 128
-(lane width); the paper's Δd=32 is swept in the jnp/host engines instead.
+Note the kernel deliberately does NOT use an int8xint8 MXU product: the
+per-dimension scales (which keep the high-variance leading PCA dims
+precise) would have to be folded into both operands, and DCOs are bound by
+HBM bandwidth, not MXU throughput — the 4x byte reduction is the win.
 """
 
 from __future__ import annotations
@@ -35,29 +33,33 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 
-__all__ = ["dade_dco_kernel_call"]
+__all__ = ["quant_dco_kernel_call"]
 
 
 def _kernel(
     # inputs
-    q_ref,  # (QT, DB) query block
-    c_ref,  # (CT, DB) candidate block
+    q_ref,  # (QT, DB) f32 query block
+    code_ref,  # (CT, DB) int8 candidate codes block
+    sc_ref,  # (1, DB) f32 per-dimension scales for this block
     eps_ref,  # (1, S) f32
-    scale_ref,  # (1, S) f32
-    rsq_ref,  # (QT, 1) f32 per-query squared threshold
+    scale_ref,  # (1, S) f32 unbiasing scales
+    ecum_ref,  # (1, S) f32 — E(d_s) = sqrt(cumulative quant error^2)
+    rsq_ref,  # (QT, 1) f32
     # outputs
-    est_ref,  # (QT, CT) f32
-    passed_ref,  # (QT, CT) i32
-    dims_ref,  # (QT, CT) i32
+    lb_ref,  # (QT, CT) f32 scaled lower-bound estimate at retirement
+    pruned_ref,  # (QT, CT) i32 — 1 iff definitely rejected
+    dims_ref,  # (QT, CT) i32 — int8 dims consumed
     # scratch
     psum,  # (QT, CT) f32
     active,  # (QT, CT) f32
     oest,  # (QT, CT) f32
     odims,  # (QT, CT) f32
+    opruned,  # (QT, CT) f32
     alive,  # (1, 1) i32 SMEM
     *,
     num_blocks: int,
     block_d: int,
+    slack: float,
 ):
     s = pl.program_id(2)
 
@@ -67,84 +69,91 @@ def _kernel(
         active[...] = jnp.ones_like(active)
         oest[...] = jnp.zeros_like(oest)
         odims[...] = jnp.zeros_like(odims)
+        opruned[...] = jnp.zeros_like(opruned)
         alive[0, 0] = psum.shape[0] * psum.shape[1]
 
     @pl.when(alive[0, 0] > 0)
     def _block():
         q = q_ref[...].astype(jnp.float32)  # (QT, DB)
-        c = c_ref[...].astype(jnp.float32)  # (CT, DB)
+        cf = code_ref[...].astype(jnp.float32) * sc_ref[...]  # dequantize in VMEM
         dot = jax.lax.dot_general(
-            q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            q, cf, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (QT, CT)
         qn = jnp.sum(q * q, axis=1, keepdims=True)  # (QT, 1)
-        cn = jnp.sum(c * c, axis=1, keepdims=True).T  # (1, CT)
+        cn = jnp.sum(cf * cf, axis=1, keepdims=True).T  # (1, CT)
         block_sq = jnp.maximum(qn + cn - 2.0 * dot, 0.0)
         new_psum = psum[...] + block_sq
         psum[...] = new_psum
 
-        eps_s = eps_ref[0, s]
-        scale_s = scale_ref[0, s]
-        est = new_psum * scale_s
-        thresh = (1.0 + eps_s) ** 2 * rsq_ref[...]  # (QT, 1) -> bcast
+        e_s = ecum_ref[0, s]
+        root = jnp.maximum(jnp.sqrt(new_psum) - e_s, 0.0)
+        lb = root * root * (1.0 - slack)
+        est = lb * scale_ref[0, s]
+        thresh = (1.0 + eps_ref[0, s]) ** 2 * rsq_ref[...]  # (QT, 1) -> bcast
         is_active = active[...] > 0.0
         is_last = s == num_blocks - 1
+        # lb <= exact partial distance, so rejecting is sound at EVERY
+        # checkpoint, the last included (contrast dade_dco, where the last
+        # checkpoint is the exact-distance terminal test).
         reject = jnp.logical_and(is_active, est > thresh)
-        # On the last block nothing is "rejected"; all survivors retire with
-        # the exact distance (scale_s == 1 by table construction).
-        reject = jnp.where(is_last, jnp.zeros_like(reject), reject)
         retire = jnp.logical_or(reject, jnp.logical_and(is_active, is_last))
 
         d_now = (s + 1).astype(jnp.float32) * block_d
         oest[...] = jnp.where(retire, est, oest[...])
         odims[...] = jnp.where(retire, d_now, odims[...])
+        opruned[...] = jnp.where(reject, 1.0, opruned[...])
         new_active = jnp.logical_and(is_active, jnp.logical_not(retire))
         active[...] = new_active.astype(jnp.float32)
         alive[0, 0] = jnp.sum(new_active.astype(jnp.int32))
 
     @pl.when(s == num_blocks - 1)
     def _finalize():
-        est_ref[...] = oest[...]
+        lb_ref[...] = oest[...]
+        pruned_ref[...] = (opruned[...] > 0.0).astype(jnp.int32)
         dims_ref[...] = odims[...].astype(jnp.int32)
-        # Passed: retired at the final block (never rejected) AND est <= r².
-        survived = odims[...] >= jnp.float32(num_blocks * block_d)
-        ok = jnp.logical_and(survived, oest[...] <= rsq_ref[...])
-        passed_ref[...] = ok.astype(jnp.int32)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_q", "block_c", "block_d", "interpret"),
+    static_argnames=("block_q", "block_c", "block_d", "slack", "interpret"),
 )
-def dade_dco_kernel_call(
-    q_rot: jax.Array,  # (Q, D)
-    cands_rot: jax.Array,  # (N, D)
+def quant_dco_kernel_call(
+    q_rot: jax.Array,  # (Q, D) f32
+    codes: jax.Array,  # (N, D) int8
+    scales: jax.Array,  # (D,) f32 per-dimension quantization scales
     eps: jax.Array,  # (S,) f32 — thresholds at d=(s+1)*block_d
-    scale: jax.Array,  # (S,) f32 — unbiasing scales (scale[-1] == 1)
+    scale: jax.Array,  # (S,) f32 — unbiasing scales
+    ecum: jax.Array,  # (S,) f32 — E(d) at each block checkpoint
     r_sq: jax.Array,  # (Q,) f32
     *,
     block_q: int = 128,
     block_c: int = 128,
     block_d: int = 128,
+    slack: float = 1e-4,
     interpret: bool = False,
 ):
-    """Launch the DCO screen. Shapes must be pre-padded: Q % block_q == 0,
-    N % block_c == 0, D % block_d == 0, S == D // block_d.
+    """Launch the int8 lower-bound prefilter.  Shapes must be pre-padded:
+    Q % block_q == 0, N % block_c == 0, D % block_d == 0, S == D // block_d.
 
-    Returns (est_sq (Q,N) f32, passed (Q,N) i32, dims_used (Q,N) i32).
+    Returns (lb_sq (Q,N) f32, pruned (Q,N) i32, lb_dims (Q,N) i32).
     """
     qn, dim = q_rot.shape
-    n = cands_rot.shape[0]
+    n = codes.shape[0]
     if qn % block_q or n % block_c or dim % block_d:
         raise ValueError(
             f"shapes must be padded: Q={qn}%{block_q}, N={n}%{block_c}, "
             f"D={dim}%{block_d}"
         )
+    if codes.dtype != jnp.int8:
+        raise ValueError(f"codes must be int8, got {codes.dtype}")
     num_blocks = dim // block_d
     if eps.shape[0] != num_blocks:
         raise ValueError(f"table has {eps.shape[0]} steps, need {num_blocks}")
 
     grid = (qn // block_q, n // block_c, num_blocks)
-    kernel = functools.partial(_kernel, num_blocks=num_blocks, block_d=block_d)
+    kernel = functools.partial(
+        _kernel, num_blocks=num_blocks, block_d=block_d, slack=slack
+    )
 
     out_shapes = (
         jax.ShapeDtypeStruct((qn, n), jnp.float32),
@@ -157,8 +166,10 @@ def dade_dco_kernel_call(
         in_specs=[
             pl.BlockSpec((block_q, block_d), lambda i, j, s: (i, s)),
             pl.BlockSpec((block_c, block_d), lambda i, j, s: (j, s)),
+            pl.BlockSpec((1, block_d), lambda i, j, s: (0, s)),
             pl.BlockSpec((1, eps.shape[0]), lambda i, j, s: (0, 0)),
             pl.BlockSpec((1, scale.shape[0]), lambda i, j, s: (0, 0)),
+            pl.BlockSpec((1, ecum.shape[0]), lambda i, j, s: (0, 0)),
             pl.BlockSpec((block_q, 1), lambda i, j, s: (i, 0)),
         ],
         out_specs=(
@@ -172,6 +183,7 @@ def dade_dco_kernel_call(
             pltpu.VMEM((block_q, block_c), jnp.float32),
             pltpu.VMEM((block_q, block_c), jnp.float32),
             pltpu.VMEM((block_q, block_c), jnp.float32),
+            pltpu.VMEM((block_q, block_c), jnp.float32),
             pltpu.SMEM((1, 1), jnp.int32),
         ],
         compiler_params=CompilerParams(
@@ -179,9 +191,11 @@ def dade_dco_kernel_call(
         ),
         interpret=interpret,
     )(
-        q_rot,
-        cands_rot,
+        q_rot.astype(jnp.float32),
+        codes,
+        scales.reshape(1, -1).astype(jnp.float32),
         eps.reshape(1, -1).astype(jnp.float32),
         scale.reshape(1, -1).astype(jnp.float32),
+        ecum.reshape(1, -1).astype(jnp.float32),
         r_sq.reshape(-1, 1).astype(jnp.float32),
     )

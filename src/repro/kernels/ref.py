@@ -4,6 +4,9 @@
 block-checkpoint schedule (d = (s+1)·DB), same MXU decomposition
 (qn + cn - 2q·oᵀ with a max(·, 0) clamp), same retire/passed rules — so
 tests can assert elementwise equality, not just statistical agreement.
+``quant_dco_ref`` does the same for the int8 lower-bound prefilter kernel
+(``quant_dco.quant_dco_kernel_call``): dequantize-then-decompose, identical
+lower-bound formula and retire rules.
 """
 
 from __future__ import annotations
@@ -13,7 +16,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-__all__ = ["dade_dco_ref"]
+__all__ = ["dade_dco_ref", "quant_dco_ref"]
 
 
 @partial(jax.jit, static_argnames=("block_d",))
@@ -58,3 +61,52 @@ def dade_dco_ref(
     dims_used = ((retire_s + 1) * block_d).astype(jnp.int32)
     passed = jnp.logical_and(never, est_sq <= r_sq[:, None])
     return est_sq, passed.astype(jnp.int32), dims_used
+
+
+@partial(jax.jit, static_argnames=("block_d", "slack"))
+def quant_dco_ref(
+    q_rot: jax.Array,  # (Q, D) f32
+    codes: jax.Array,  # (N, D) int8
+    scales: jax.Array,  # (D,) f32
+    eps: jax.Array,  # (S,)
+    scale: jax.Array,  # (S,)
+    ecum: jax.Array,  # (S,) E(d) at block checkpoints
+    r_sq: jax.Array,  # (Q,)
+    *,
+    block_d: int = 128,
+    slack: float = 1e-4,
+):
+    """Oracle for the int8 lower-bound prefilter kernel."""
+    qn, dim = q_rot.shape
+    n = codes.shape[0]
+    s_count = dim // block_d
+    assert s_count * block_d == dim and eps.shape[0] == s_count
+
+    q = q_rot.astype(jnp.float32).reshape(qn, s_count, block_d)
+    cf = (codes.astype(jnp.float32) * scales.astype(jnp.float32)[None, :]).reshape(
+        n, s_count, block_d
+    )
+    dot = jnp.einsum("qsd,csd->sqc", q, cf, preferred_element_type=jnp.float32)
+    qnorm = jnp.sum(q * q, axis=2).T[:, :, None]  # (S, Q, 1)
+    cnorm = jnp.sum(cf * cf, axis=2).T[:, None, :]  # (S, 1, C)
+    block_sq = jnp.maximum(qnorm + cnorm - 2.0 * dot, 0.0)
+    psum = jnp.cumsum(block_sq, axis=0)  # (S, Q, C)
+
+    root = jnp.maximum(jnp.sqrt(psum) - ecum[:, None, None], 0.0)
+    est_all = root * root * (1.0 - slack) * scale[:, None, None]
+    thresh = (1.0 + eps[:, None, None]) ** 2 * r_sq[None, :, None]
+    # Rejecting is sound at every checkpoint, the last included.
+    reject = est_all > thresh
+
+    s_idx = jnp.arange(s_count)
+    first_reject = jnp.min(
+        jnp.where(reject, s_idx[:, None, None], s_count), axis=0
+    )  # (Q, C)
+    pruned = first_reject < s_count
+    retire_s = jnp.where(pruned, first_reject, s_count - 1)
+
+    lb_sq = jnp.take_along_axis(
+        jnp.moveaxis(est_all, 0, -1), retire_s[..., None], axis=-1
+    )[..., 0]
+    lb_dims = ((retire_s + 1) * block_d).astype(jnp.int32)
+    return lb_sq, pruned.astype(jnp.int32), lb_dims

@@ -7,6 +7,11 @@ through a hierarchical all-gather tree (payload per hop: Q×K, not
 devices×Q×K).  A two-phase threshold seed (cheap first-block estimate +
 one small all-reduce) gives every shard a tight r before the full screen —
 the distributed analogue of the paper's warm max-heap.
+
+``quant="int8"`` (repro.quant) swaps the wave scan onto the int8-encoded
+corpus: each wave streams 1 byte/dim, tests the sound distance lower bound
+against the running k-th threshold, and only a fixed per-wave budget of
+bound-qualified candidates touches the fp corpus for exact refinement.
 """
 
 from __future__ import annotations
@@ -18,9 +23,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
 from repro.configs.dade_ivf import ServiceConfig
+from repro.launch.mesh import shard_map
+from repro.quant.scalar import cum_err_sq
 from repro.distributed.collectives import hierarchical_topk
 
 __all__ = ["build_search_step", "search_input_specs"]
@@ -30,8 +36,13 @@ def _pad_dim(d: int, block: int) -> int:
     return (d + block - 1) // block * block
 
 
-def search_input_specs(svc: ServiceConfig, mesh):
-    """ShapeDtypeStructs + shardings for the search step."""
+def search_input_specs(svc: ServiceConfig, mesh, *, quant: str | None = None):
+    """ShapeDtypeStructs + shardings for the search step.
+
+    ``quant="int8"`` inserts (corpus_q int8, qscales f32) after the fp
+    corpus: codes are sharded row-wise exactly like the corpus (every wave
+    streams them), scales are replicated (one f32 per dimension).
+    """
     n_dev = mesh.devices.size
     d_pad = _pad_dim(svc.dim, svc.delta_d)
     s_steps = d_pad // svc.delta_d
@@ -42,68 +53,94 @@ def search_input_specs(svc: ServiceConfig, mesh):
     scale = jax.ShapeDtypeStruct((s_steps,), jnp.float32)
     eps_lo = jax.ShapeDtypeStruct((s_steps,), jnp.float32)
     axes = tuple(mesh.axis_names)
-    shardings = (
-        NamedSharding(mesh, P(axes, None)),  # corpus rows over every axis
-        NamedSharding(mesh, P()),  # queries replicated
-        NamedSharding(mesh, P()),
-        NamedSharding(mesh, P()),
-        NamedSharding(mesh, P()),
+    row_shard = NamedSharding(mesh, P(axes, None))
+    repl = NamedSharding(mesh, P())
+    if quant == "int8":
+        corpus_q = jax.ShapeDtypeStruct(corpus.shape, jnp.int8)
+        qscales = jax.ShapeDtypeStruct((d_pad,), jnp.float32)
+        return (
+            (corpus, corpus_q, qscales, queries, eps, scale, eps_lo),
+            (row_shard, row_shard, repl, repl, repl, repl, repl),
+        )
+    return (
+        (corpus, queries, eps, scale, eps_lo),
+        (row_shard, repl, repl, repl, repl),
     )
-    return (corpus, queries, eps, scale, eps_lo), shardings
 
 
 def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
-                      seed_waves: int = 1):
+                      seed_waves: int = 1, quant: str | None = None,
+                      refine_per_wave: int | None = None):
     """Returns search_step(corpus_rot, queries_rot, eps, scale, eps_lo)
-    -> (dists, ids)."""
+    -> (dists, ids); with ``quant="int8"``:
+    search_step(corpus_rot, corpus_q, qscales, queries_rot, eps, scale,
+    eps_lo) -> (dists, ids).
+
+    Quantized mode (repro.quant): every wave streams the *int8* corpus
+    (1 byte/dim of HBM traffic instead of 2-4) and computes the sound
+    lower bound of each distance; only the best ``refine_per_wave``
+    candidates per wave (those whose bound beats the current threshold)
+    touch the fp corpus for exact refinement.  Rows whose lower bound
+    exceeds the running k-th distance provably cannot enter the top-K, so
+    the only recall exposure is the fixed refine budget (default 2k).
+    """
     axes = tuple(mesh.axis_names)
     k = svc.k
     wave = svc.wave
     block_d = svc.delta_d
+    if refine_per_wave is None:
+        refine_per_wave = getattr(svc, "refine_per_wave", 0) or 2 * k
+    refine_per_wave = min(refine_per_wave, wave)
+
+    # jax.lax.axis_size is a recent addition; mesh shape is static anyway.
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def shard_base(n_local):
+        """Global row id offset for this shard (inside shard_map)."""
+        lin = jnp.zeros((), jnp.int32)
+        stride = 1
+        for ax in reversed(axes):
+            lin = lin + jax.lax.axis_index(ax) * stride
+            stride = stride * axis_sizes[ax]
+        return lin.astype(jnp.int32) * n_local
+
+    def seed_rsq(corpus, queries, eps):
+        """Two-phase threshold seed (exact-verified local top-k, pmin)."""
+        qb = queries[:, :block_d]
+        cb = corpus[: seed_waves * wave, :block_d]
+        est0 = (
+            jnp.sum(qb * qb, 1)[:, None]
+            + jnp.sum(cb * cb, 1)[None, :]
+            - 2.0 * qb @ cb.T
+        )
+        _, idx = jax.lax.top_k(-est0, k)
+        sample = corpus[: seed_waves * wave]
+        cand = jnp.take(sample, idx.reshape(-1), axis=0).reshape(
+            idx.shape[0], idx.shape[1], -1)
+        diff = (cand - queries[:, None, :]).astype(jnp.float32)
+        exact_sq = jnp.sum(diff * diff, axis=-1)
+        kth_local = jnp.max(exact_sq, axis=1)
+        r0 = kth_local
+        for ax in axes:
+            r0 = jax.lax.pmin(r0, ax)
+        return r0 * (1.0 + eps[0]) ** 2
 
     def local_search(corpus, queries, eps, scale, eps_lo):
         """Per-shard screen. corpus: (N_local, D). Runs inside shard_map."""
         n_local, dim = corpus.shape
         q = queries.shape[0]
 
-        # Global row ids for this shard.
-        lin = jnp.zeros((), jnp.int32)
-        stride = 1
-        for ax in reversed(axes):
-            lin = lin + jax.lax.axis_index(ax) * stride
-            stride = stride * jax.lax.axis_size(ax)
-        base = lin.astype(jnp.int32) * n_local
+        base = shard_base(n_local)
 
         # Phase 1: cheap first-block estimate seeds the threshold globally.
         # §Perf iteration A2: seed from the first `seed_waves` waves only —
         # the k-th best of a corpus SAMPLE still upper-bounds the global
         # k-th (safe, slightly looser), and the (Q, N_local) phase-1 blob
-        # (4 GiB at 1M rows/device) shrinks to (Q, wave).
+        # (4 GiB at 1M rows/device) shrinks to (Q, wave).  (Exact-verified
+        # local top-k + pmin; widened by the first-checkpoint overshoot
+        # band so a true neighbor whose estimate overshoots is admitted.)
         if two_phase:
-            qb = queries[:, :block_d]
-            cb = corpus[: seed_waves * wave, :block_d]
-            est0 = (
-                jnp.sum(qb * qb, 1)[:, None]
-                + jnp.sum(cb * cb, 1)[None, :]
-                - 2.0 * qb @ cb.T
-            ) * scale[0]
-            _, idx = jax.lax.top_k(-est0, k)  # local candidates by estimate
-            # Verify the K local candidates EXACTLY (estimated k-th order
-            # statistics are selection-biased low; exact verification gives
-            # a deterministic upper bound of the global k-th):
-            sample = corpus[: seed_waves * wave]
-            cand = jnp.take(sample, idx.reshape(-1), axis=0).reshape(
-                idx.shape[0], idx.shape[1], -1)
-            diff = (cand - queries[:, None, :]).astype(jnp.float32)
-            exact_sq = jnp.sum(diff * diff, axis=-1)
-            kth_local = jnp.max(exact_sq, axis=1)
-            # Global kth <= min over shards of (local kth exact).
-            r0 = kth_local
-            for ax in axes:
-                r0 = jax.lax.pmin(r0, ax)
-            # Widen by the first-checkpoint overshoot band (a true neighbor
-            # whose own estimate overshoots must still be admitted).
-            r_sq = r0 * (1.0 + eps[0]) ** 2
+            r_sq = seed_rsq(corpus, queries, eps)
         else:
             r_sq = jnp.full((q,), jnp.inf)
 
@@ -178,6 +215,87 @@ def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
         top_sq, top_ids = hierarchical_topk(top_sq, top_ids, tuple(reversed(axes)), k)
         return jnp.sqrt(jnp.maximum(top_sq, 0.0)), top_ids
 
+    def local_search_quant(corpus, codes, scales, queries, eps, scale, eps_lo):
+        """Quantized per-shard scan: int8 wave stream + budgeted fp refine.
+
+        corpus: (N_local, D) fp/bf16 (refine source, touched sparsely);
+        codes: (N_local, D) int8; scales: (D,) replicated.
+        """
+        n_local, dim = corpus.shape
+        q = queries.shape[0]
+        base = shard_base(n_local)
+
+        if two_phase:
+            r_sq = seed_rsq(corpus, queries, eps)
+        else:
+            r_sq = jnp.full((q,), jnp.inf)
+
+        # Full-D quantization error band E(D): the wave scan tests the
+        # full-dimension lower bound once per row instead of the blockwise
+        # schedule — XLA computes every block regardless, and one fused
+        # (Q, wave) matmul over int8-sourced operands is the
+        # bandwidth-optimal shape here.
+        dim_arr = jnp.asarray([scales.shape[0]])
+        e_band = jnp.sqrt(cum_err_sq(scales, dim_arr)[0])
+
+        qf = queries.astype(jnp.float32)
+        qn = jnp.sum(qf * qf, axis=1)[:, None]  # (Q, 1)
+
+        num_waves = n_local // wave
+        corpus_w = corpus.reshape(num_waves, wave, dim)
+        codes_w = codes.reshape(num_waves, wave, dim)
+
+        def body(carry, xs):
+            top_sq, top_ids, r_sq = carry
+            rows_fp, rows_q, wbase = xs
+            cf = rows_q.astype(jnp.float32) * scales[None, :]  # (W, D)
+            dot = jax.lax.dot_general(
+                qf, cf, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            cn = jnp.sum(cf * cf, axis=1)[None, :]
+            dstq = jnp.maximum(qn + cn - 2.0 * dot, 0.0)  # (Q, W) dequant dist
+            lb = jnp.maximum(jnp.sqrt(dstq) - e_band, 0.0) ** 2 * (1.0 - 1e-4)
+            # Rows whose lower bound beats r are the only possible top-K
+            # entrants; refine the best `refine_per_wave` of them exactly.
+            cand = jnp.where(lb <= r_sq[:, None], lb, jnp.inf)
+            _, idx = jax.lax.top_k(-cand, refine_per_wave)  # (Q, R)
+            gathered = jnp.take(rows_fp, idx.reshape(-1), axis=0).reshape(
+                q, refine_per_wave, dim)
+            diff = (gathered - queries[:, None, :]).astype(jnp.float32)
+            exact_sq = jnp.sum(diff * diff, axis=-1)  # (Q, R)
+            # Over-budget rows (selected slots holding inf bounds) carry
+            # exact > r and fall out of the merge naturally.
+            ids = base + wbase + idx.astype(jnp.int32)
+            all_sq = jnp.concatenate([top_sq, exact_sq], 1)
+            all_ids = jnp.concatenate([top_ids, ids], 1)
+            neg, sel = jax.lax.top_k(-all_sq, k)
+            top_sq = -neg
+            top_ids = jnp.take_along_axis(all_ids, sel, axis=1)
+            r_sq = jnp.minimum(r_sq, top_sq[:, -1])
+            return (top_sq, top_ids, r_sq), None
+
+        init = (
+            jnp.full((q, k), jnp.inf),
+            jnp.full((q, k), -1, jnp.int32),
+            r_sq,
+        )
+        bases = jnp.arange(num_waves, dtype=jnp.int32) * wave
+        (top_sq, top_ids, _), _ = jax.lax.scan(
+            body, init, (corpus_w, codes_w, bases))
+
+        top_sq, top_ids = hierarchical_topk(top_sq, top_ids, tuple(reversed(axes)), k)
+        return jnp.sqrt(jnp.maximum(top_sq, 0.0)), top_ids
+
+    if quant == "int8":
+        return shard_map(
+            local_search_quant,
+            mesh=mesh,
+            in_specs=(P(axes, None), P(axes, None), P(), P(), P(), P(), P()),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+    if quant not in (None, "none"):
+        raise ValueError(f"unknown quant mode: {quant!r}")
     return shard_map(
         local_search,
         mesh=mesh,

@@ -87,11 +87,24 @@ def _parse_computations(hlo: str) -> tuple[dict[str, list[str]], str | None]:
     return comps, entry
 
 
+def _operand_tokens(args: str) -> list[str]:
+    """Split an operand list.  Shapes contain commas without spaces
+    (``f32[8,32]{1,0}``) while operands separate with ``", "`` — so split on
+    the latter; works for both bare-name and inline-shape HLO dialects."""
+    return [t.strip() for t in args.split(")", 1)[0].split(", ")]
+
+
+def _operand_name(token: str) -> str:
+    """``f32[8,32]{1,0} %foo.1`` -> ``foo.1``; ``%foo.1`` -> ``foo.1``."""
+    return token.split(" ")[-1].lstrip("%")
+
+
 def _dot_flops(line: str, symbols: dict[str, str]) -> float:
     """2 * prod(out dims) * prod(contracting sizes of lhs).
 
-    Post-optimization HLO references operands by name, so the lhs shape is
-    resolved through the per-computation symbol table."""
+    Post-optimization HLO references operands by name (newer dialects) or
+    with inline shapes; resolve through the symbol table, falling back to
+    the token text itself."""
     m = _OP_RE.match(line)
     out_dims = _shape_dims(m.group(2))
     out_elems = 1
@@ -99,8 +112,8 @@ def _dot_flops(line: str, symbols: dict[str, str]) -> float:
         for d in dims:
             out_elems *= d
     args = line[m.end():]
-    first = args.split(")", 1)[0].split(",")[0].strip().lstrip("%")
-    lhs_shape_text = symbols.get(first, first)  # inline shapes still work
+    first = _operand_tokens(args)[0]
+    lhs_shape_text = symbols.get(_operand_name(first), first)
     opnds = _shape_dims(lhs_shape_text)
     c = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
     contracted = 1
@@ -146,8 +159,7 @@ def _fusion_access(lines: list[str]) -> tuple[dict[int, float], float | None]:
         if op == "parameter":
             continue
         out_b = _shape_bytes(m.group(2))
-        opnds = [t.strip().lstrip("%")
-                 for t in ln[m.end():].split(")", 1)[0].split(",")]
+        opnds = [_operand_name(t) for t in _operand_tokens(ln[m.end():])]
         is_root = ln.lstrip().startswith("ROOT")
         if op in ("dynamic-slice", "slice", "gather"):
             tgt = opnds[0] if opnds else ""
@@ -214,9 +226,10 @@ def census(hlo: str) -> dict:
                 continue
             out_b = _shape_bytes(m.group(2))
             # operand bytes resolved through the symbol table
-            args = ln[m.end():].split(")", 1)[0]
-            opnd_names = [t.strip().lstrip("%") for t in args.split(",")]
-            opnd_b = [_shape_bytes(symbols.get(t, t)) for t in opnd_names]
+            toks = _operand_tokens(ln[m.end():])
+            opnd_names = [_operand_name(t) for t in toks]
+            opnd_b = [_shape_bytes(symbols.get(n, t))
+                      for n, t in zip(opnd_names, toks)]
             in_b = sum(opnd_b)
             # slice-family ops touch only the slice, not the full operand
             if op in ("dynamic-slice", "slice", "gather"):

@@ -1,11 +1,35 @@
 """Production mesh construction (functions, not module constants, so
-importing never touches jax device state)."""
+importing never touches jax device state) + jax mesh/shard_map version
+shims — the compat home launch-layer code should route through."""
 
 from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_mesh_compat", "make_production_mesh", "make_host_mesh", "shard_map"]
+
+try:  # jax >= 0.6 exports shard_map at top level with check_vma
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+except ImportError:  # 0.4.x: experimental home, check_rep spelling
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types`` (with explicit
+    Auto axes) only exists on newer releases; 0.4.x meshes are Auto-only."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,9 +40,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -26,7 +48,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     if data * model > n:
         data, model = n, 1
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh_compat((data, model), ("data", "model"))

@@ -24,6 +24,12 @@ def main() -> None:
     ap.add_argument("--method", default="dade",
                     choices=["dade", "adsampling", "fdscanning"])
     ap.add_argument("--p-s", type=float, default=0.02)
+    ap.add_argument("--quant", default="none", choices=["none", "int8"],
+                    help="int8: stream the corpus as 1-byte codes per wave "
+                         "(repro.quant) with budgeted exact refinement")
+    ap.add_argument("--refine-per-wave", type=int, default=0,
+                    help="exact refinements per wave in --quant int8 mode "
+                         "(0 = auto: 2k)")
     args = ap.parse_args()
 
     os.environ.setdefault(
@@ -41,13 +47,14 @@ def main() -> None:
     from repro.kernels.ops import block_table
     from repro.launch.annservice import build_search_step, search_input_specs
 
+    from repro.launch.mesh import make_mesh_compat
+
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((n_dev,), ("data",))
     svc = ServiceConfig(
         corpus_per_device=args.corpus_per_device, dim=args.dim,
         query_batch=args.batch, k=args.k, delta_d=32, wave=4096,
-        p_s=args.p_s)
+        p_s=args.p_s, quant=args.quant, refine_per_wave=args.refine_per_wave)
 
     n = n_dev * svc.corpus_per_device
     corpus = synthetic_vectors(n, svc.dim, seed=0)
@@ -57,16 +64,30 @@ def main() -> None:
     c_rot = np.pad(np.asarray(est.rotate(jnp.asarray(corpus))),
                    ((0, 0), (0, d_pad - svc.dim)))
 
-    _, shardings = search_input_specs(svc, mesh)
-    step = jax.jit(build_search_step(svc, mesh), in_shardings=shardings)
+    quant = None if args.quant == "none" else args.quant
+    _, shardings = search_input_specs(svc, mesh, quant=quant)
+    step = jax.jit(build_search_step(svc, mesh, quant=quant),
+                   in_shardings=shardings)
     corpus_dev = jax.device_put(c_rot.astype(np.dtype(svc.dtype)), shardings[0])
+    if quant == "int8":
+        # Quantize the padded rotated corpus; padded dims get zero scales
+        # (max-abs 0), so they contribute nothing to bounds or distances.
+        from repro.quant import quantize_corpus
+
+        qc = quantize_corpus(jnp.asarray(c_rot))
+        codes_dev = jax.device_put(np.asarray(qc.codes), shardings[1])
+        scales_dev = jax.device_put(np.asarray(qc.scales), shardings[2])
 
     # Variable-size requests flow through the dynamic batcher; the compiled
     # step always sees the fixed (query_batch, D) shape.
     from repro.runtime.scheduler import BatchScheduler
 
     def fixed_step(batch_np):
-        d, i = step(corpus_dev, jnp.asarray(batch_np), eps, scale, eps_lo)
+        if quant == "int8":
+            d, i = step(corpus_dev, codes_dev, scales_dev,
+                        jnp.asarray(batch_np), eps, scale, eps_lo)
+        else:
+            d, i = step(corpus_dev, jnp.asarray(batch_np), eps, scale, eps_lo)
         return np.asarray(d), np.asarray(i)
 
     sched = BatchScheduler(fixed_step, batch_size=svc.query_batch)
@@ -90,7 +111,7 @@ def main() -> None:
         recalls.append(np.mean([
             len(set(ids[i]) & set(gt[i])) / svc.k for i in range(len(gt))]))
     total_q = sum(len(g) for g in gts)
-    print(f"method={args.method} devices={n_dev} corpus={n} "
+    print(f"method={args.method} quant={args.quant} devices={n_dev} corpus={n} "
           f"requests={len(reqs)} rows={total_q} "
           f"batches={sched.stats['batches']} "
           f"pad_frac={sched.stats['padded_rows']/max(sched.stats['rows'],1):.2f} "

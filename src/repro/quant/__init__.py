@@ -1,0 +1,56 @@
+"""Quantized two-stage DCO subsystem.
+
+scalar — per-dimension symmetric int8 encoding of the rotated corpus with
+  exact-arithmetic reconstruction/partial-distance bounds.
+screen — the two-stage screen: int8 lower-bound prefilter feeding the fp32
+  DADE hypothesis-test screen (no false prunes — bit-identical ``passed``),
+  plus host engines with honest byte accounting.
+
+The matching Pallas kernel lives in ``repro.kernels.quant_dco`` (oracle in
+``repro.kernels.ref``); index/serving integration in ``repro.index.*`` and
+``repro.launch.annservice`` (``--quant int8``).
+"""
+
+# NOTE: scalar must import before screen (screen -> repro.core -> estimators
+# -> quant.scalar; keeping scalar first makes that chain re-entrant).
+from repro.quant.scalar import (
+    QuantConfig,
+    QuantizedCorpus,
+    cum_err_sq,
+    dequantize,
+    fit_scales,
+    lower_bound_sq,
+    quantize,
+    quantize_corpus,
+    upper_bound_sq,
+)
+from repro.quant.screen import (
+    QuantScreenResult,
+    Stage1Result,
+    bytes_scanned,
+    knn_search_quant_host,
+    knn_search_waves_quant,
+    quant_lb_screen,
+    two_stage_screen,
+    two_stage_screen_host,
+)
+
+__all__ = [
+    "QuantConfig",
+    "QuantizedCorpus",
+    "cum_err_sq",
+    "dequantize",
+    "fit_scales",
+    "lower_bound_sq",
+    "quantize",
+    "quantize_corpus",
+    "upper_bound_sq",
+    "QuantScreenResult",
+    "Stage1Result",
+    "bytes_scanned",
+    "knn_search_quant_host",
+    "knn_search_waves_quant",
+    "quant_lb_screen",
+    "two_stage_screen",
+    "two_stage_screen_host",
+]

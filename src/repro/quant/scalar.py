@@ -1,0 +1,180 @@
+"""Per-dimension symmetric int8 scalar quantization of the *rotated* corpus.
+
+The DCO hot loop is memory-bound: every screened candidate streams its
+(partial) row from HBM, and the seed stored that row in fp32 — 4x the bytes
+the arithmetic needs.  This module stores the PCA-rotated corpus as int8
+codes plus one fp32 scale per dimension:
+
+    code_d = round(x_d / s_d),   s_d = max_n |x_nd| / 127
+
+Scales are fitted per dimension from the rotated data distribution, so the
+early high-variance PCA directions (which carry most of each distance, and
+which DADE's screen reads first) keep full relative precision instead of
+being crushed by a global scale.
+
+The reconstruction error is deterministically bounded: |x_d - s_d·code_d|
+<= s_d/2 for every corpus point (round-to-nearest, no clipping possible for
+in-corpus values by construction of s_d).  That bound is what makes the
+two-stage screen (``repro.quant.screen``) *provably* free of false prunes:
+for any query q and corpus point o with dequantized row o',
+
+    || (q - o)[:d] ||  >=  || (q - o')[:d] || - E(d),
+    E(d)^2 = sum_{j<d} (s_j / 2)^2                       (triangle inequality)
+
+so ``lower_bound_sq`` computed purely from int8 data never exceeds the true
+partial squared distance (up to an explicit fp32 slack factor), and a
+candidate retired by the quantized stage would also have been retired by the
+fp32 screen at the same checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantConfig",
+    "QuantizedCorpus",
+    "fit_scales",
+    "quantize",
+    "quantize_corpus",
+    "dequantize",
+    "cum_err_sq",
+    "lower_bound_sq",
+    "upper_bound_sq",
+    "wants_quant",
+]
+
+# int8 code range is symmetric [-127, 127] (the -128 code is unused so the
+# error bound s/2 holds on both tails).
+_QMAX = 127.0
+
+# Deflation applied to lower bounds to absorb fp32 round-off in the blockwise
+# cumulative sums (relative error ~ D * eps_f32 ~ 1e-5 at D=512; 1e-4 leaves
+# an order of magnitude of headroom and costs nothing in pruning power next
+# to the quantization band E(d)).
+DEFAULT_SLACK = 1e-4
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static corpus-quantization policy carried by an Estimator.
+
+    Hashable (frozen, scalar fields) so it can ride in jit static aux data.
+    """
+
+    bits: int = 8
+    slack: float = DEFAULT_SLACK
+
+    def __post_init__(self):
+        if self.bits != 8:
+            raise ValueError(f"only int8 scalar quantization is implemented, got bits={self.bits}")
+        if not 0.0 <= self.slack < 1e-2:
+            raise ValueError(f"slack must be a small non-negative fraction, got {self.slack}")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QuantizedCorpus:
+    """int8 codes + per-dimension scales for a rotated corpus (or shard).
+
+    Attributes:
+      codes: (..., D) int8 — round(x / scales) clipped to [-127, 127].
+      scales: (D,) float32 — per-dimension symmetric step sizes.
+    """
+
+    codes: jax.Array
+    scales: jax.Array
+
+    @property
+    def dim(self) -> int:
+        return self.codes.shape[-1]
+
+    @property
+    def err(self) -> jax.Array:
+        """(D,) worst-case per-dimension reconstruction error s_d / 2."""
+        return self.scales * 0.5
+
+    def dequantize(self) -> jax.Array:
+        return dequantize(self.codes, self.scales)
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def fit_scales(rot_corpus: jax.Array) -> jax.Array:
+    """Per-dimension symmetric scales from the rotated data distribution.
+
+    s_d = max |x_d| / 127 — in-corpus values never clip, which is what the
+    s_d/2 error bound (and hence the no-false-prune guarantee) rests on.
+    Zero-variance dimensions get scale 0 (codes 0, reconstruction exact).
+    """
+    max_abs = jnp.max(jnp.abs(rot_corpus.astype(jnp.float32)), axis=0)
+    return (max_abs / _QMAX).astype(jnp.float32)
+
+
+def quantize(x: jax.Array, scales: jax.Array) -> jax.Array:
+    """Round to int8 codes.  Values beyond the fitted range clip to +-127;
+    the error bound only covers data the scales were fitted on (the corpus),
+    so callers must not rely on bounds for out-of-corpus inputs."""
+    x = x.astype(jnp.float32)
+    safe = jnp.where(scales > 0.0, scales, 1.0)
+    q = jnp.round(x / safe)
+    q = jnp.where(scales > 0.0, q, 0.0)
+    return jnp.clip(q, -_QMAX, _QMAX).astype(jnp.int8)
+
+
+def quantize_corpus(rot_corpus: jax.Array, scales: jax.Array | None = None) -> QuantizedCorpus:
+    """Fit scales (unless given, e.g. on a shard of a global corpus) and encode."""
+    rot_corpus = jnp.asarray(rot_corpus)
+    if scales is None:
+        scales = fit_scales(rot_corpus)
+    return QuantizedCorpus(codes=quantize(rot_corpus, scales), scales=scales)
+
+
+def dequantize(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scales
+
+
+def cum_err_sq(scales: jax.Array, dims: jax.Array) -> jax.Array:
+    """E(d)^2 = sum_{j < d} (s_j/2)^2 at each checkpoint in ``dims`` (1-indexed
+    dimension counts, as in EpsilonTable.dims)."""
+    e2 = jnp.cumsum((scales.astype(jnp.float32) * 0.5) ** 2)
+    return e2[jnp.asarray(dims) - 1]
+
+
+def lower_bound_sq(
+    dq_psum: jax.Array, ecum_sq: jax.Array, *, slack: float = DEFAULT_SLACK
+) -> jax.Array:
+    """Sound lower bound on the true partial squared distance.
+
+    Args:
+      dq_psum: ||q - o'||^2 over the first d dims (o' dequantized), any shape.
+      ecum_sq: E(d)^2, broadcastable against dq_psum.
+    Returns max(0, sqrt(dq_psum) - E(d))^2 * (1 - slack).
+    """
+    root = jnp.sqrt(jnp.maximum(dq_psum, 0.0)) - jnp.sqrt(ecum_sq)
+    return jnp.maximum(root, 0.0) ** 2 * (1.0 - slack)
+
+
+def wants_quant(quant, estimator_quant) -> bool:
+    """Shared build-time decision: store int8 codes?  True when the builder
+    was passed an explicit policy ("int8" or a QuantConfig) or the estimator
+    already carries one (build_estimator normalizes strings into configs)."""
+    return estimator_quant is not None or quant not in (None, "none")
+
+
+def upper_bound_sq(dq_psum: jax.Array, ecum_sq: jax.Array) -> jax.Array:
+    """Matching upper bound (sqrt(dq_psum) + E(d))^2 * (1 + slack) — used by
+    tests and the serving refine-budget heuristics; the slack *inflates*
+    here (mirror of lower_bound_sq: fp32 round-off must never shrink an
+    upper bound below the true value)."""
+    root = jnp.sqrt(jnp.maximum(dq_psum, 0.0)) + jnp.sqrt(ecum_sq)
+    return root**2 * (1.0 + DEFAULT_SLACK)

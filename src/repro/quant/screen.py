@@ -1,0 +1,350 @@
+"""Two-stage DCO screen: int8 lower-bound prefilter + fp32 DADE re-screen.
+
+Stage 1 walks the same Delta-d checkpoint schedule as ``repro.core.dco`` but
+reads only int8 codes (1 byte/dim of HBM traffic instead of 4) and tests the
+*lower bound* of the scaled partial distance against the hypothesis-test
+threshold:
+
+    lb(d) = max(0, ||q - o'||_d - E(d))^2 * (1 - slack)      (o' dequantized)
+    retire candidate at checkpoint s  iff  lb(d_s) * scale_s > (1+eps_s)^2 r^2
+
+Because lb(d) never exceeds the true partial distance (scalar.py), every
+candidate stage 1 retires would also have been retired by the fp32 screen at
+the same (or an earlier) checkpoint — *no false prunes*.  Stage 2 re-screens
+only the survivors through the exact fp32 engine, so the final ``passed``
+set (and every surviving estimate) is identical to ``dco_screen_batch``; the
+saving is that pruned candidates — the vast majority once the top-K
+threshold r tightens — never touch fp32 bytes at all.
+
+``dims_used`` in the result counts *fp32* dimensions (0 for stage-1-pruned
+rows); ``lb_dims`` counts int8 dimensions.  ``bytes_scanned`` combines both
+at 1 and 4 bytes/dim — the quantity fig6_quant.py compares against the
+4-bytes/dim fp32 screen.
+
+The jnp functions are shape-static (XLA computes both stages; the *bytes*
+savings are realized by the Pallas kernel in ``repro.kernels.quant_dco`` and
+by the numpy compaction engines below, which skip work for real).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import EpsilonTable
+from repro.core.dco import dco_screen_batch
+from repro.core.dco_host import dco_screen_host
+from repro.quant.scalar import (
+    DEFAULT_SLACK,
+    QuantizedCorpus,
+    cum_err_sq,
+    lower_bound_sq,
+)
+
+__all__ = [
+    "Stage1Result",
+    "QuantScreenResult",
+    "quant_lb_screen",
+    "two_stage_screen",
+    "bytes_scanned",
+    "knn_search_waves_quant",
+    "two_stage_screen_host",
+    "knn_search_quant_host",
+]
+
+
+class Stage1Result(NamedTuple):
+    """Outcome of the int8 lower-bound prefilter.
+
+    lb_sq: (Q, C) scaled lower-bound estimate at retirement (for pruned rows)
+      or at the final checkpoint (for survivors).
+    pruned: (Q, C) bool — definite rejects (true distance provably > r band).
+    lb_dims: (Q, C) int32 — int8 dimensions consumed before retirement.
+    """
+
+    lb_sq: jax.Array
+    pruned: jax.Array
+    lb_dims: jax.Array
+
+
+class QuantScreenResult(NamedTuple):
+    """Two-stage screen outcome.  est_sq/passed match ``dco_screen_batch``
+    exactly; dims_used counts fp32 dims only (0 for stage-1-pruned rows)."""
+
+    est_sq: jax.Array
+    passed: jax.Array
+    dims_used: jax.Array
+    stage1_pruned: jax.Array
+    lb_dims: jax.Array
+
+
+def quant_lb_screen(
+    q_rot: jax.Array,  # (Q, D) rotated fp32 queries
+    qc: QuantizedCorpus,  # codes (C, D)
+    table: EpsilonTable,
+    r_sq: jax.Array,  # (Q,)
+    *,
+    slack: float = DEFAULT_SLACK,
+) -> Stage1Result:
+    """Stage 1: blockwise int8 lower-bound screen (batched, jnp)."""
+    dims = table.dims
+    q = q_rot.astype(jnp.float32)
+    c = qc.dequantize()  # (C, D) — int8 HBM reads, upcast in registers
+    ecum_sq = cum_err_sq(qc.scales, dims)  # (S,)
+
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), dims[:-1]])
+
+    def block_term(start, stop):
+        k = jnp.arange(q.shape[1])
+        m = ((k >= start) & (k < stop)).astype(jnp.float32)
+        qm = q * m[None, :]
+        cm = c * m[None, :]
+        dot = qm @ cm.T
+        qn = jnp.sum(qm * qm, axis=1)
+        cn = jnp.sum(cm * cm, axis=1)
+        return qn[:, None] + cn[None, :] - 2.0 * dot
+
+    blocks = jax.vmap(block_term)(starts, dims)  # (S, Q, C)
+    csq = jnp.maximum(jnp.cumsum(blocks, axis=0), 0.0)
+
+    lb = lower_bound_sq(csq, ecum_sq[:, None, None], slack=slack)
+    est_lb = lb * table.scale[:, None, None]
+    thresh = (1.0 + table.eps[:, None, None]) ** 2 * r_sq[None, :, None]
+    # Unlike the fp32 screen, rejecting at the *last* checkpoint is sound
+    # here too: lb <= exact, so lb > r^2 certifies exact > r^2.
+    reject = est_lb > thresh
+
+    s_count = dims.shape[0]
+    s_idx = jnp.arange(s_count)
+    first_reject = jnp.min(jnp.where(reject, s_idx[:, None, None], s_count), axis=0)
+    pruned = first_reject < s_count
+    retire_s = jnp.where(pruned, first_reject, s_count - 1)
+
+    lb_sq = jnp.take_along_axis(jnp.moveaxis(est_lb, 0, -1), retire_s[..., None], axis=-1)[..., 0]
+    lb_dims = dims[retire_s]
+    return Stage1Result(lb_sq=lb_sq, pruned=pruned, lb_dims=lb_dims)
+
+
+def two_stage_screen(
+    q_rot: jax.Array,  # (Q, D)
+    cands_rot: jax.Array,  # (C, D) fp32 rows (stage-2 refinement source)
+    qc: QuantizedCorpus,  # int8 codes for the same C rows
+    table: EpsilonTable,
+    r_sq: jax.Array,  # (Q,)
+    *,
+    slack: float = DEFAULT_SLACK,
+) -> QuantScreenResult:
+    """Quantized prefilter + exact fp32 re-screen of the survivors.
+
+    ``passed`` (and the estimate of every passed row) is bit-identical to
+    ``dco_screen_batch(q_rot, cands_rot, table, r_sq)`` — the prefilter only
+    removes candidates the fp32 screen would reject anyway.
+    """
+    s1 = quant_lb_screen(q_rot, qc, table, r_sq, slack=slack)
+    full = dco_screen_batch(q_rot, cands_rot, table, r_sq)
+    passed = full.passed & ~s1.pruned  # == full.passed (soundness)
+    return QuantScreenResult(
+        est_sq=jnp.where(s1.pruned, s1.lb_sq, full.est_sq),
+        passed=passed,
+        dims_used=jnp.where(s1.pruned, 0, full.dims_used).astype(jnp.int32),
+        stage1_pruned=s1.pruned,
+        lb_dims=s1.lb_dims,
+    )
+
+
+def bytes_scanned(res: QuantScreenResult, *, fp_bytes: int = 4) -> jax.Array:
+    """Corpus bytes touched per (query, candidate): int8 stage + fp stage."""
+    return res.lb_dims.astype(jnp.int64) + res.dims_used.astype(jnp.int64) * fp_bytes
+
+
+class QuantSearchStats(NamedTuple):
+    lb_dims_total: jax.Array  # int8 dims scanned (== bytes at 1 B/dim)
+    fp_dims_total: jax.Array  # fp32 dims scanned by stage 2
+
+
+def knn_search_waves_quant(
+    queries_rot: jax.Array,  # (Q, D)
+    corpus_rot: jax.Array,  # (N, D) fp32
+    qc: QuantizedCorpus,  # codes (N, D)
+    table: EpsilonTable,
+    *,
+    k: int,
+    wave: int = 4096,
+    slack: float = DEFAULT_SLACK,
+):
+    """Wave-synchronous K-NN with the two-stage screen (flat-scan workload).
+
+    Returns (KnnResult, QuantSearchStats).  Results are identical to
+    ``repro.core.topk.knn_search_waves`` (no-false-prune guarantee);
+    ``avg_dims`` counts fp32 dims only, so it shrinks to the survivor set.
+    """
+    from repro.core.topk import KnnResult, merge_topk
+
+    qn, dim = queries_rot.shape
+    n = corpus_rot.shape[0]
+    codes = qc.codes
+    if n % wave != 0:
+        pad = wave - n % wave
+        corpus_rot = jnp.concatenate(
+            [corpus_rot, jnp.full((pad, dim), 1e18, corpus_rot.dtype)], axis=0
+        )
+        # Zero codes for pad rows: their lower bound stays finite, but the
+        # fp32 stage sees the 1e18 sentinel and retires them unconditionally.
+        codes = jnp.concatenate([codes, jnp.zeros((pad, dim), jnp.int8)], axis=0)
+        n = corpus_rot.shape[0]
+    num_waves = n // wave
+    waves_fp = corpus_rot.reshape(num_waves, wave, dim)
+    waves_q = codes.reshape(num_waves, wave, dim)
+
+    init = (
+        jnp.full((qn, k), jnp.inf),
+        jnp.full((qn, k), -1, jnp.int32),
+        jnp.full((qn,), jnp.inf),
+        jnp.zeros((), jnp.float32),  # fp32 dims
+        jnp.zeros((), jnp.float32),  # int8 dims
+    )
+
+    def step(carry, xs):
+        top_sq, top_ids, r_sq, fp_acc, lb_acc = carry
+        rows_fp, rows_q, wave_base = xs
+        res = two_stage_screen(
+            queries_rot, rows_fp, QuantizedCorpus(rows_q, qc.scales), table, r_sq,
+            slack=slack,
+        )
+        ids = wave_base + jnp.arange(wave, dtype=jnp.int32)[None, :]
+        new_sq = jnp.where(res.passed, res.est_sq, jnp.inf)
+        top_sq, top_ids = merge_topk(
+            top_sq, top_ids, new_sq, jnp.broadcast_to(ids, new_sq.shape)
+        )
+        r_sq = jnp.minimum(r_sq, top_sq[:, -1])
+        fp_acc = fp_acc + jnp.sum(res.dims_used.astype(jnp.float32))
+        lb_acc = lb_acc + jnp.sum(res.lb_dims.astype(jnp.float32))
+        return (top_sq, top_ids, r_sq, fp_acc, lb_acc), None
+
+    bases = jnp.arange(num_waves, dtype=jnp.int32) * wave
+    (top_sq, top_ids, _, fp_acc, lb_acc), _ = jax.lax.scan(
+        step, init, (waves_fp, waves_q, bases)
+    )
+    result = KnnResult(
+        dists=jnp.sqrt(jnp.maximum(top_sq, 0.0)),
+        ids=top_ids,
+        avg_dims=fp_acc / (qn * n),
+    )
+    return result, QuantSearchStats(lb_dims_total=lb_acc, fp_dims_total=fp_acc)
+
+
+# ---------------------------------------------------------------------------
+# Host (numpy) engines with *actual* work skipping and byte accounting —
+# the honest-CPU counterpart of repro.core.dco_host for the quantized path.
+# ---------------------------------------------------------------------------
+
+
+class HostQuantResult(NamedTuple):
+    est_sq: np.ndarray
+    passed: np.ndarray
+    dims_used: np.ndarray  # fp32 dims (0 for stage-1-pruned rows)
+    lb_dims: np.ndarray  # int8 dims
+    bytes_scanned: int  # lb_dims * 1 + fp dims * 4, summed
+
+
+def two_stage_screen_host(
+    q_rot: np.ndarray,  # (D,)
+    codes: np.ndarray,  # (C, D) int8
+    scales: np.ndarray,  # (D,)
+    rows_fp: np.ndarray,  # (C, D) fp32
+    dims: np.ndarray,
+    eps: np.ndarray,
+    scale: np.ndarray,
+    r_sq: float,
+    *,
+    slack: float = DEFAULT_SLACK,
+) -> HostQuantResult:
+    """One-query two-stage screen with candidate-set compaction."""
+    c = codes.shape[0]
+    est_sq = np.zeros((c,), np.float32)
+    lb_dims = np.zeros((c,), np.int32)
+    s_count = len(dims)
+    ecum = np.sqrt(np.asarray(cum_err_sq(scales, np.asarray(dims))))
+
+    active_idx = np.arange(c)
+    psum = np.zeros((c,), np.float32)
+    bytes_total = 0
+    prev_d = 0
+    for s in range(s_count):
+        d = int(dims[s])
+        blk = codes[active_idx, prev_d:d].astype(np.float32) * scales[prev_d:d] - q_rot[prev_d:d]
+        psum[active_idx] += np.einsum("cd,cd->c", blk, blk)
+        bytes_total += blk.size  # 1 byte per int8 dim read
+        lb = np.maximum(np.sqrt(np.maximum(psum[active_idx], 0.0)) - ecum[s], 0.0) ** 2
+        lb *= (1.0 - slack) * float(scale[s])
+        thresh = (1.0 + float(eps[s])) ** 2 * r_sq
+        reject = lb > thresh
+        retired = active_idx[reject]
+        est_sq[retired] = lb[reject]
+        lb_dims[retired] = d
+        active_idx = active_idx[~reject]
+        if active_idx.size == 0:
+            break
+        prev_d = d
+    lb_dims[active_idx] = int(dims[-1])
+
+    passed = np.zeros((c,), bool)
+    dims_used = np.zeros((c,), np.int32)
+    if active_idx.size:
+        ref = dco_screen_host(q_rot, rows_fp[active_idx], dims, eps, scale, r_sq)
+        est_sq[active_idx] = ref.est_sq
+        passed[active_idx] = ref.passed
+        dims_used[active_idx] = ref.dims_used
+        bytes_total += 4 * int(ref.dims_used.sum())
+    return HostQuantResult(
+        est_sq=est_sq, passed=passed, dims_used=dims_used, lb_dims=lb_dims,
+        bytes_scanned=bytes_total,
+    )
+
+
+def knn_search_quant_host(
+    q_rot: np.ndarray,  # (D,)
+    codes: np.ndarray,  # (N, D) int8
+    scales: np.ndarray,
+    corpus_rot: np.ndarray,  # (N, D) fp32
+    k: int,
+    dims: np.ndarray,
+    eps: np.ndarray,
+    scale: np.ndarray,
+    wave: int = 4096,
+) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Two-stage wave K-NN for one query; mirrors dco_host.knn_search_host."""
+    n = corpus_rot.shape[0]
+    top_ids = np.full((k,), -1, np.int64)
+    top_sq = np.full((k,), np.inf, np.float32)
+    r_sq = np.inf
+    bytes_total = 0
+    fp_dims_total = 0
+    lb_dims_total = 0
+    for start in range(0, n, wave):
+        stop = min(start + wave, n)
+        res = two_stage_screen_host(
+            q_rot, codes[start:stop], scales, corpus_rot[start:stop],
+            dims, eps, scale, r_sq,
+        )
+        bytes_total += res.bytes_scanned
+        fp_dims_total += int(res.dims_used.sum())
+        lb_dims_total += int(res.lb_dims.sum())
+        surv = np.nonzero(res.passed)[0]
+        if surv.size:
+            cand_sq = np.concatenate([top_sq, res.est_sq[surv]])
+            cand_id = np.concatenate([top_ids, surv + start])
+            order = np.argsort(cand_sq, kind="stable")[:k]
+            top_sq = cand_sq[order]
+            top_ids = cand_id[order]
+            r_sq = float(top_sq[-1])
+    stats = {
+        "bytes_scanned": bytes_total,
+        "fp_dims": fp_dims_total,
+        "lb_dims": lb_dims_total,
+        "avg_fp_dims": fp_dims_total / n,
+    }
+    return top_ids, np.sqrt(top_sq), stats

@@ -1,0 +1,39 @@
+"""Optional-`hypothesis` shim (satellite of the quant PR).
+
+The seed hard-imported ``hypothesis`` from two test modules, so a missing
+optional dev dependency aborted the *entire* tier-1 collection.  Import
+``given/settings/st`` from here instead: with hypothesis installed the real
+decorators are re-exported; without it the property-based tests are skipped
+individually (``pytest.mark.skip``) while every other test in the module
+still runs.  Install the real thing via ``requirements-dev.txt``.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised on bare images
+    HAVE_HYPOTHESIS = False
+    _skip = pytest.mark.skip(reason="hypothesis not installed (see requirements-dev.txt)")
+
+    def given(*_a, **_k):  # type: ignore[misc]
+        def deco(fn):
+            return _skip(fn)
+        return deco
+
+    def settings(*_a, **_k):  # type: ignore[misc]
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategies:
+        """Strategy calls are only consumed by @given; return inert stubs."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()  # type: ignore[assignment]

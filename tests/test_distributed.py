@@ -13,9 +13,10 @@ _SCRIPT = textwrap.dedent("""
     import dataclasses
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P, NamedSharding
-    from jax import shard_map
 
     from repro.configs.dade_ivf import ServiceConfig
+    # version-compat shims (top-level jax.shard_map / axis_types are recent)
+    from repro.launch.mesh import make_mesh_compat, shard_map
     from repro.core import build_estimator, exact_knn
     from repro.data.pipeline import synthetic_vectors, synthetic_queries
     from repro.distributed.collectives import (
@@ -26,8 +27,7 @@ _SCRIPT = textwrap.dedent("""
     from repro.distributed.sharding import tree_shardings
 
     assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
 
     # ---- 1. distributed DADE search == single-device exact topk ------------
     svc = ServiceConfig(corpus_per_device=2048, dim=64, query_batch=16, k=10,
@@ -51,6 +51,23 @@ _SCRIPT = textwrap.dedent("""
     recall = np.mean([len(set(ids[i]) & set(gt[i])) / 10 for i in range(16)])
     assert recall >= 0.95, f"distributed search recall {recall}"
     print("OK distributed_search", recall)
+
+    # ---- 1b. quantized serving path (repro.quant, --quant int8) -------------
+    from repro.quant import quantize_corpus
+    _, sh_q = search_input_specs(svc, mesh, quant="int8")
+    step_q = jax.jit(build_search_step(svc, mesh, quant="int8"),
+                     in_shardings=sh_q)
+    qcorp = quantize_corpus(jnp.asarray(c_rot))
+    dists_q, ids_q = step_q(
+        jax.device_put(c_rot, sh_q[0]),
+        jax.device_put(np.asarray(qcorp.codes), sh_q[1]),
+        jax.device_put(np.asarray(qcorp.scales), sh_q[2]),
+        jnp.asarray(q_rot), eps, scale, eps_lo)
+    ids_q = np.asarray(ids_q)
+    recall_q = np.mean([len(set(ids_q[i]) & set(gt[i])) / 10 for i in range(16)])
+    assert recall_q >= recall - 0.02, (
+        f"quant serving recall {recall_q} vs fp {recall}")
+    print("OK quant_search", recall_q)
 
     # ---- 2. hierarchical_topk == flat global top-k --------------------------
     rng = np.random.default_rng(0)
@@ -91,8 +108,7 @@ _SCRIPT = textwrap.dedent("""
     t1 = jax.device_put(tree, {"w": sh1})
     mgr = CheckpointManager(tempfile.mkdtemp(), async_save=False)
     mgr.save(1, t1)
-    mesh2 = jax.make_mesh((8,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh2 = make_mesh_compat((8,), ("data",))
     sh2 = {"w": NamedSharding(mesh2, P(None, "data"))}
     t2 = mgr.restore(1, tree, shardings=sh2)
     np.testing.assert_array_equal(np.asarray(t2["w"]), np.asarray(tree["w"]))
@@ -109,6 +125,7 @@ def test_distributed_semantics():
         cwd=".", timeout=540,
     )
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
-    for marker in ("OK distributed_search", "OK hierarchical_topk",
+    for marker in ("OK distributed_search", "OK quant_search",
+                   "OK hierarchical_topk",
                    "OK compressed_allreduce", "OK elastic_restore"):
         assert marker in r.stdout

@@ -1,0 +1,244 @@
+"""repro.quant: int8 corpus quantization + two-stage DCO screen.
+
+Covers the subsystem's contract end to end: reconstruction error bound,
+lower-bound soundness, the no-false-prune parity of the two-stage screen
+against the fp32 engine (identical ``passed`` sets on aniso_corpus), the
+int8 Pallas kernel vs its ref.py oracle, index-level result identity, and
+byte-accounting sanity of the host engine.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import build_estimator
+from repro.core.dco import dco_screen_batch
+from repro.kernels.ops import quant_screen_kernel
+from repro.quant import (
+    QuantizedCorpus,
+    cum_err_sq,
+    lower_bound_sq,
+    quantize_corpus,
+    two_stage_screen,
+    two_stage_screen_host,
+    upper_bound_sq,
+)
+
+
+@pytest.fixture(scope="module")
+def est(aniso_corpus):
+    return build_estimator("dade", aniso_corpus, jax.random.PRNGKey(0), delta_d=16)
+
+
+@pytest.fixture(scope="module")
+def rot(est, aniso_corpus):
+    return est.rotate(jnp.asarray(aniso_corpus))
+
+
+@pytest.fixture(scope="module")
+def qc(rot):
+    return quantize_corpus(rot)
+
+
+# ---- scalar: reconstruction error bound -------------------------------------
+
+def test_dequantize_error_bound(rot, qc):
+    """|x - dq(q(x))| <= s_d/2 per dimension, for every corpus point."""
+    err = np.abs(np.asarray(rot) - np.asarray(qc.dequantize()))
+    bound = np.asarray(qc.err)[None, :]
+    assert np.all(err <= bound * (1 + 1e-6) + 1e-12)
+
+
+def test_codes_are_int8_and_unclipped(qc):
+    codes = np.asarray(qc.codes)
+    assert codes.dtype == np.int8
+    assert codes.min() >= -127 and codes.max() <= 127
+
+
+def test_zero_scale_dims_roundtrip():
+    """Constant-zero dimensions must encode exactly (scale 0 -> code 0)."""
+    x = jnp.concatenate(
+        [jnp.zeros((64, 3)), jax.random.normal(jax.random.PRNGKey(0), (64, 5))], axis=1
+    )
+    qc = quantize_corpus(x)
+    assert float(jnp.max(jnp.abs(qc.dequantize()[:, :3]))) == 0.0
+
+
+# ---- lower/upper bound soundness --------------------------------------------
+
+def test_lower_bound_sound_random_blocks(est, rot, qc, queries):
+    """lb(d) <= exact partial distance at every checkpoint, all pairs."""
+    q_rot = np.asarray(est.rotate(jnp.asarray(queries)))
+    dims = np.asarray(est.table.dims)
+    c = np.asarray(rot[:600])
+    dq = np.asarray(qc.dequantize()[:600])
+    ecum = np.asarray(cum_err_sq(qc.scales, est.table.dims))
+    for qi in range(0, len(q_rot), 5):
+        exact_csq = np.cumsum((c - q_rot[qi]) ** 2, axis=1)[:, dims - 1]
+        dq_csq = np.cumsum((dq - q_rot[qi]) ** 2, axis=1)[:, dims - 1]
+        lb = np.asarray(lower_bound_sq(jnp.asarray(dq_csq), jnp.asarray(ecum)[None, :]))
+        assert np.all(lb <= exact_csq * (1 + 1e-5) + 1e-7)
+        ub = np.asarray(upper_bound_sq(jnp.asarray(dq_csq), jnp.asarray(ecum)[None, :]))
+        assert np.all(ub >= exact_csq * (1 - 1e-5) - 1e-7)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(16, 128), d=st.sampled_from([32, 64, 96]))
+def test_lower_bound_sound_property(seed, n, d):
+    """Property: soundness holds for arbitrary data scales/shapes."""
+    rng = np.random.default_rng(seed)
+    scales = np.exp(-rng.uniform(0.01, 0.2) * np.arange(d)).astype(np.float32)
+    data = (rng.standard_normal((max(n, 32), d)) * scales).astype(np.float32)
+    q = (rng.standard_normal((d,)) * scales).astype(np.float32)
+    qc = quantize_corpus(jnp.asarray(data))
+    dq = np.asarray(qc.dequantize())
+    dims = np.asarray([d // 2, d], np.int32)
+    ecum = np.asarray(cum_err_sq(qc.scales, jnp.asarray(dims)))
+    exact = np.cumsum((data - q) ** 2, axis=1)[:, dims - 1]
+    approx = np.cumsum((dq - q) ** 2, axis=1)[:, dims - 1]
+    lb = np.asarray(lower_bound_sq(jnp.asarray(approx), jnp.asarray(ecum)[None, :]))
+    assert np.all(lb <= exact * (1 + 1e-5) + 1e-7)
+
+
+# ---- two-stage screen: no-false-prune parity --------------------------------
+
+@pytest.mark.parametrize("r_scale", [0.25, 1.0, 4.0])
+def test_two_stage_parity_aniso(est, rot, qc, queries, r_scale):
+    """Identical `passed` sets vs the fp32 screen; fp32 dims never larger."""
+    q_rot = est.rotate(jnp.asarray(queries))
+    c = rot[:1500]
+    sub = QuantizedCorpus(qc.codes[:1500], qc.scales)
+    # r^2 near the true 10-NN distance scale makes the screen selective.
+    d_typ = jnp.median(jnp.sum((c[:200] - q_rot[0]) ** 2, axis=1))
+    r_sq = jnp.full((q_rot.shape[0],), float(d_typ) * 0.05 * r_scale)
+
+    full = dco_screen_batch(q_rot, c, est.table, r_sq)
+    two = two_stage_screen(q_rot, c, sub, est.table, r_sq)
+
+    assert np.array_equal(np.asarray(two.passed), np.asarray(full.passed))
+    # Surviving estimates are the fp32 estimates, bit for bit.
+    passed = np.asarray(full.passed)
+    np.testing.assert_array_equal(
+        np.asarray(two.est_sq)[passed], np.asarray(full.est_sq)[passed]
+    )
+    # fp32 work never exceeds the fp32-only screen's.
+    assert np.all(np.asarray(two.dims_used) <= np.asarray(full.dims_used))
+    # And the screen actually prunes in stage 1 at selective thresholds.
+    if r_scale <= 1.0:
+        assert float(jnp.mean(two.stage1_pruned)) > 0.5
+
+
+def test_two_stage_prunes_only_fp32_rejects(est, rot, qc, queries):
+    """Every stage-1 pruned candidate is rejected by the fp32 screen too."""
+    q_rot = est.rotate(jnp.asarray(queries[:8]))
+    c = rot[:1000]
+    sub = QuantizedCorpus(qc.codes[:1000], qc.scales)
+    r_sq = jnp.full((8,), 2.0)
+    full = dco_screen_batch(q_rot, c, est.table, r_sq)
+    two = two_stage_screen(q_rot, c, sub, est.table, r_sq)
+    assert not np.any(np.asarray(two.stage1_pruned) & np.asarray(full.passed))
+
+
+# ---- int8 kernel vs oracle ---------------------------------------------------
+
+@pytest.mark.parametrize("d,n", [(64, 128), (200, 300), (128, 256)])
+def test_quant_kernel_matches_ref(d, n):
+    rng = np.random.default_rng(d + n)
+    scales = np.exp(-0.05 * np.arange(d)).astype(np.float32)
+    data = (rng.standard_normal((1024, d)) * scales).astype(np.float32)
+    qs = (rng.standard_normal((8, d)) * scales).astype(np.float32)
+    est = build_estimator("dade", data, jax.random.PRNGKey(0), delta_d=32)
+    rot = est.rotate(jnp.asarray(data))
+    qc = quantize_corpus(rot)
+    q_rot = est.rotate(jnp.asarray(qs))
+    r_sq = jnp.full((8,), float(d) * 0.02)
+
+    l1, p1, d1 = quant_screen_kernel(
+        est, q_rot, qc.codes[:n], qc.scales, r_sq,
+        interpret=True, block_q=8, block_c=128, block_d=64)
+    l2, p2, d2 = quant_screen_kernel(
+        est, q_rot, qc.codes[:n], qc.scales, r_sq,
+        use_ref=True, block_q=8, block_c=128, block_d=64)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_quant_kernel_sound_vs_fp32_kernel():
+    """Kernel-level no-false-prunes: pruned rows never pass the fp32 kernel."""
+    from repro.kernels.ops import dco_screen_kernel
+
+    rng = np.random.default_rng(7)
+    d = 128
+    scales = np.exp(-0.06 * np.arange(d)).astype(np.float32)
+    data = (rng.standard_normal((2048, d)) * scales).astype(np.float32)
+    est = build_estimator("dade", data, jax.random.PRNGKey(1), delta_d=32)
+    rot = est.rotate(jnp.asarray(data))
+    qc = quantize_corpus(rot)
+    q_rot = est.rotate(jnp.asarray(data[:8]))
+    r_sq = jnp.full((8,), 1.0)
+    _, pruned, _ = quant_screen_kernel(
+        est, q_rot, qc.codes[:512], qc.scales, r_sq, interpret=True, block_d=32)
+    _, passed, _ = dco_screen_kernel(
+        est, q_rot, rot[:512], r_sq, interpret=True, block_d=32)
+    assert np.any(np.asarray(pruned))  # the prefilter does real work
+    assert not np.any(np.asarray(pruned) & np.asarray(passed))
+
+
+# ---- index integration: identical search results -----------------------------
+
+def test_ivf_quant_search_identical(aniso_corpus, queries):
+    from repro.index.ivf import build_ivf, search_ivf
+
+    idx = build_ivf(aniso_corpus, n_clusters=32, quant="int8", delta_d=16)
+    assert idx.has_quant and idx.bucket_ids.dtype == jnp.int32
+    d0, i0, a0 = search_ivf(idx, jnp.asarray(queries), k=10, n_probe=4)
+    d1, i1, a1 = search_ivf(idx, jnp.asarray(queries), k=10, n_probe=4, use_quant=True)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-6)
+    assert float(a1) <= float(a0)  # fp32 dims shrink to the survivor set
+
+
+def test_flat_quant_search_identical(aniso_corpus, queries):
+    from repro.index.flat import build_flat, search_flat
+
+    f = build_flat(aniso_corpus, quant="int8", delta_d=16)
+    r0 = search_flat(f, jnp.asarray(queries), k=10, wave=1000)
+    r1 = search_flat(f, jnp.asarray(queries), k=10, wave=1000, use_quant=True)
+    assert np.array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+    assert float(r1.avg_dims) <= float(r0.avg_dims)
+
+
+def test_estimator_quant_config_roundtrip(aniso_corpus):
+    est = build_estimator("dade", aniso_corpus, jax.random.PRNGKey(0),
+                          delta_d=16, quant="int8")
+    assert est.quant is not None and est.quant.bits == 8
+    leaves, treedef = jax.tree_util.tree_flatten(est)
+    est2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert est2.quant == est.quant
+
+
+# ---- host engine: parity + byte accounting -----------------------------------
+
+def test_host_two_stage_matches_jnp_and_saves_bytes(est, rot, qc, aniso_corpus, queries):
+    q_rot = np.asarray(est.rotate(jnp.asarray(queries)))
+    c = np.asarray(rot[:800])
+    codes = np.asarray(qc.codes[:800])
+    scales = np.asarray(qc.scales)
+    dims = np.asarray(est.table.dims)
+    eps = np.asarray(est.table.eps)
+    scl = np.asarray(est.table.scale)
+    from repro.core.dco_host import dco_screen_host
+
+    for r_sq in (1.0, 10.0):
+        h = two_stage_screen_host(q_rot[0], codes, scales, c, dims, eps, scl, r_sq)
+        ref = dco_screen_host(q_rot[0], c, dims, eps, scl, r_sq)
+        assert np.array_equal(h.passed, ref.passed)
+        np.testing.assert_allclose(h.est_sq[h.passed], ref.est_sq[ref.passed],
+                                   rtol=1e-5)
+        # >= 2x byte saving vs the fp32 screen at selective thresholds.
+        fp32_bytes = 4 * int(ref.dims_used.sum())
+        assert h.bytes_scanned * 2 <= fp32_bytes

@@ -153,7 +153,7 @@ def test_straggler_monitor_flags_outliers():
 
 # ---- property: checkpoint round-trips arbitrary pytrees ----------------------
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 
 @settings(max_examples=10, deadline=None)
