@@ -1,7 +1,10 @@
-"""Shared benchmark fixtures: corpus, queries, ground truth, recall/QPS."""
+"""Shared benchmark fixtures: corpus, queries, ground truth, recall/QPS,
+and the machine-readable BENCH_dco.json trajectory registry (perf tracked
+PR-over-PR; written by benchmarks.run)."""
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -18,6 +21,33 @@ K = 10
 
 
 _cache: dict = {}
+_records: dict = {}
+
+
+def set_smoke():
+    """Shrink the fixture for the CI smoke invocation (tiny corpus)."""
+    global CORPUS_N, NQ
+    CORPUS_N = 4000
+    NQ = 16
+    _cache.clear()
+
+
+def record(name: str, **metrics):
+    """Register a machine-readable benchmark row for BENCH_dco.json."""
+    _records[name] = {
+        k: (float(v) if isinstance(v, (int, float, np.floating)) else v)
+        for k, v in metrics.items()
+    }
+
+
+def write_bench_json(path: str = "BENCH_dco.json"):
+    payload = {
+        "fixture": {"corpus_n": CORPUS_N, "dim": DIM, "nq": NQ, "k": K},
+        "rows": _records,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
 
 
 def fixture():

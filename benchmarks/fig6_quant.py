@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, estimator, fixture, host_tables, recall
+from benchmarks.common import emit, estimator, fixture, host_tables, recall, record
 from repro.core.dco_host import knn_search_host
 from repro.quant import quantize_corpus
 from repro.quant.screen import knn_search_quant_host
@@ -68,6 +68,10 @@ def main():
         emit(f"fig6.quant.int8@ps{p_s}", dt_q / nq * 1e6,
              f"recall={r_q:.3f};qps={nq/dt_q:.0f};bytes_per_q={bytes_q/nq:.0f};"
              f"bytes_reduction={reduction:.2f}x")
+        record(f"fp32_host@ps{p_s}", recall=r_f, qps=nq / dt_f,
+               bytes_per_query=bytes_f / nq)
+        record(f"quant_host@ps{p_s}", recall=r_q, qps=nq / dt_q,
+               bytes_per_query=bytes_q / nq, bytes_reduction=reduction)
         assert reduction >= 2.0, f"bytes reduction {reduction:.2f}x < 2x at p_s={p_s}"
 
 

@@ -4,12 +4,14 @@ No TPU on this host, so instead of wall-clock we report the quantity the
 kernel's @pl.when early-exit converts into saved MXU cycles: the fraction of
 (candidate-tile x dim-block) work units skipped, at tile granularities the
 kernel actually uses.  Derived from the interpret-mode kernel's dims_used
-(bit-identical to TPU semantics)."""
+(bit-identical to TPU semantics).  The fused IVF megakernel row reports the
+same quantities from its on-device stats: int8/fp32 dims consumed per row
+and the stage-2 skip rate the int8×int8 prefilter buys."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, estimator, fixture
+from benchmarks.common import emit, estimator, fixture, record
 from repro.core import exact_knn
 from repro.kernels.ops import dco_screen_kernel
 
@@ -18,7 +20,10 @@ def main():
     corpus, queries, gt = fixture()
     est = estimator("dade", corpus, delta_d=32)
     q_rot = est.rotate(jnp.asarray(queries[:16]))
-    c_rot = est.rotate(jnp.asarray(corpus[:8192]))
+    # Crop to a multiple of every tile width swept below (smoke fixtures
+    # are smaller than 8192 and not 256-aligned).
+    n_use = min(len(corpus), 8192) // 256 * 256
+    c_rot = est.rotate(jnp.asarray(corpus[:n_use]))
     gt_d, _ = exact_knn(jnp.asarray(queries[:16]), jnp.asarray(corpus), 10)
     r_sq = jnp.asarray(np.asarray(gt_d)[:16, -1] ** 2)
 
@@ -39,6 +44,28 @@ def main():
              f"tile_work_frac={frac_done:.3f};row_dims_frac={row_frac:.3f};"
              f"pass_rate={float(jnp.mean(passed.astype(jnp.float32))):.4f};"
              f"speedup_vs_fds_kernel={1.0/frac_done:.2f}x")
+        record(f"kernel_tileskip@c{tile_c}b{block_d}",
+               tile_work_frac=frac_done, row_dims_frac=row_frac,
+               speedup_vs_fds=1.0 / frac_done)
+
+    # Fused IVF megakernel: dims consumed per stage from on-device stats.
+    from repro.index.ivf import build_ivf, search_ivf_fused
+
+    idx = build_ivf(corpus[:n_use], estimator=est, n_clusters=32,
+                    quant="int8", scan_block_d=32)
+    d_pad = idx.flat_rot.shape[1]
+    _, _, st = search_ivf_fused(idx, jnp.asarray(queries[:16]), k=10,
+                                n_probe=8)
+    emit("kernel.ivf_fused@p8", 0.0,
+         f"int8_dims_frac={st.avg_int8_dims/d_pad:.3f};"
+         f"fp32_dims_frac={st.avg_fp_dims/d_pad:.3f};"
+         f"bytes_per_q={st.bytes_per_query:.0f};"
+         f"rows_per_q={st.rows_per_query:.0f}")
+    record("kernel_ivf_fused@p8",
+           int8_dims_frac=st.avg_int8_dims / d_pad,
+           fp32_dims_frac=st.avg_fp_dims / d_pad,
+           bytes_per_query=st.bytes_per_query,
+           rows_per_query=st.rows_per_query)
 
 
 if __name__ == "__main__":

@@ -1,24 +1,58 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call is 0.0 for
-analysis-only rows).  Run: PYTHONPATH=src python -m benchmarks.run
+analysis-only rows) and writes the machine-readable ``BENCH_dco.json``
+trajectory file (QPS, bytes/query, recall, avg_dims rows registered via
+``benchmarks.common.record``) so perf is tracked PR-over-PR.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--smoke] [--only m1,m2]
+``--smoke`` shrinks the fixture to a tiny corpus (the CI invocation).
 """
+import argparse
 import sys
 import time
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny corpus, for CI")
+    ap.add_argument("--only", default="",
+                    help="comma-separated module names (e.g. fig6_quant)")
+    ap.add_argument("--json", default=None,
+                    help="trajectory output path (default BENCH_dco.json; "
+                         "smoke runs default to BENCH_dco.smoke.json so the "
+                         "tracked full-fixture trajectory isn't clobbered)")
+    args = ap.parse_args()
+    json_path = args.json or (
+        "BENCH_dco.smoke.json" if args.smoke else "BENCH_dco.json")
+
+    from benchmarks import common
+
+    if args.smoke:
+        common.set_smoke()
+
     from benchmarks import (
         fig1_variance, fig2_time_recall, fig3_feasibility,
-        fig4_ps_sensitivity, fig5_delta_d, fig6_quant, kernel_bench,
+        fig4_ps_sensitivity, fig5_delta_d, fig6_quant, fig7_ivf_fused,
+        kernel_bench,
     )
     mods = [fig1_variance, fig3_feasibility, fig4_ps_sensitivity,
-            fig5_delta_d, kernel_bench, fig2_time_recall, fig6_quant]
+            fig5_delta_d, kernel_bench, fig2_time_recall, fig6_quant,
+            fig7_ivf_fused]
+    if args.only:
+        wanted = {m.strip() for m in args.only.split(",") if m.strip()}
+        mods = [m for m in mods if m.__name__.split(".")[-1] in wanted]
+        missing = wanted - {m.__name__.split(".")[-1] for m in mods}
+        if missing:
+            raise SystemExit(f"unknown benchmark module(s): {sorted(missing)}")
     print("name,us_per_call,derived")
     for m in mods:
         t0 = time.time()
         m.main()
         print(f"# {m.__name__} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    path = common.write_bench_json(json_path)
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -19,7 +19,8 @@ class ServiceConfig:
     dtype: str = "bfloat16"  # §Perf A1: halves corpus + score traffic
     quant: str = "none"  # "int8": repro.quant two-stage wave scan (1 B/dim
     # stream + budgeted exact refine); quarters the dominant HBM traffic.
-    refine_per_wave: int = 0  # 0 -> auto (2k) exact refinements per wave
+    refine_per_wave: int = 0  # 0 -> autotuned from the stage-1 bound band
+    # width (launch.annservice.autotune_refine_budget); 2k blind fallback.
 
 
 CONFIG = ServiceConfig()

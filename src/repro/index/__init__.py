@@ -2,12 +2,15 @@
 
 from repro.index.flat import FlatIndex, build_flat, search_flat
 from repro.index.graph import GraphIndex, build_graph, search_graph
-from repro.index.ivf import IVFIndex, build_ivf, search_ivf
+from repro.index.ivf import (
+    FusedScanStats, IVFIndex, build_ivf, search_ivf, search_ivf_fused,
+)
 from repro.index.kmeans import assign, kmeans
 
 __all__ = [
     "FlatIndex", "build_flat", "search_flat",
     "GraphIndex", "build_graph", "search_graph",
-    "IVFIndex", "build_ivf", "search_ivf",
+    "IVFIndex", "build_ivf", "search_ivf", "search_ivf_fused",
+    "FusedScanStats",
     "assign", "kmeans",
 ]

@@ -63,19 +63,31 @@ class GraphIndex:
 
 
 def _greedy_search_np(rot, adj, entry, q, ef):
-    """Host beam search used during construction (exact distances)."""
+    """Host beam search used during construction (exact distances).
+
+    Vectorized inner loop: a whole neighbourhood's distance updates land as
+    one batched admit/merge/trim (argpartition) instead of per-neighbor
+    Python list surgery — graph build is O(N·ef·M) either way, but the
+    constant is numpy's, not the interpreter's.  Admission tests against
+    the beam's worst *before* the batch (the sequential loop re-tested
+    after every insert); that is mildly more permissive — a superset beam —
+    so construction recall can only match or improve.
+    """
     n = rot.shape[0]
     visited = np.zeros(n, bool)
     d0 = float(np.sum((rot[entry] - q) ** 2))
     visited[entry] = True
-    cand_ids = [entry]
-    cand_d = [d0]
-    result_ids = [entry]
-    result_d = [d0]
-    while cand_ids:
+    cand_ids = np.asarray([entry], np.int64)
+    cand_d = np.asarray([d0], np.float64)
+    result_ids = np.asarray([entry], np.int64)
+    result_d = np.asarray([d0], np.float64)
+    while cand_ids.size:
         i = int(np.argmin(cand_d))
-        cid, cd = cand_ids.pop(i), cand_d.pop(i)
-        worst = max(result_d) if len(result_d) >= ef else np.inf
+        cid, cd = cand_ids[i], cand_d[i]
+        keep = np.ones(cand_ids.size, bool)
+        keep[i] = False
+        cand_ids, cand_d = cand_ids[keep], cand_d[keep]
+        worst = result_d.max() if result_d.size >= ef else np.inf
         if cd > worst:
             break
         nbrs = adj[cid]
@@ -85,18 +97,18 @@ def _greedy_search_np(rot, adj, entry, q, ef):
         visited[nbrs] = True
         diff = rot[nbrs] - q[None, :]
         nd = np.einsum("nd,nd->n", diff, diff)
-        for dist, node in zip(nd, nbrs):
-            if len(result_d) < ef or dist < max(result_d):
-                result_ids.append(int(node))
-                result_d.append(float(dist))
-                cand_ids.append(int(node))
-                cand_d.append(float(dist))
-                if len(result_d) > ef:
-                    j = int(np.argmax(result_d))
-                    result_ids.pop(j)
-                    result_d.pop(j)
-    order = np.argsort(result_d)
-    return [result_ids[i] for i in order]
+        adm = nd < worst
+        if not adm.any():
+            continue
+        result_ids = np.concatenate([result_ids, nbrs[adm]])
+        result_d = np.concatenate([result_d, nd[adm]])
+        if result_d.size > ef:
+            sel = np.argpartition(result_d, ef - 1)[:ef]
+            result_ids, result_d = result_ids[sel], result_d[sel]
+        cand_ids = np.concatenate([cand_ids, nbrs[adm]])
+        cand_d = np.concatenate([cand_d, nd[adm]])
+    order = np.argsort(result_d, kind="stable")
+    return [int(result_ids[i]) for i in order]
 
 
 def build_graph(
@@ -192,7 +204,8 @@ def build_graph(
     )
 
 
-@partial(jax.jit, static_argnames=("k", "ef", "max_steps", "decoupled", "use_quant"))
+@partial(jax.jit, static_argnames=("k", "ef", "max_steps", "decoupled",
+                                   "use_quant", "seed_r"))
 def search_graph(
     index: GraphIndex,
     queries: jax.Array,  # (Q, D) original space
@@ -202,6 +215,7 @@ def search_graph(
     max_steps: int = 512,
     decoupled: bool = True,
     use_quant: bool = False,
+    seed_r: bool = False,
 ):
     """Batched (vmapped) DCO beam search.
 
@@ -215,9 +229,19 @@ def search_graph(
     neighbors are ranked by their (under-estimating) lower bound instead of
     the fp32 rejecting estimate — recall semantics are unchanged (estimates
     only order the ++-decoupled beam).  avg_dims counts fp32 dims only.
+
+    ``seed_r`` (needs a quant build) floors the DCO threshold with the k-th
+    exact distance to an int8-prescreened sample of the entry point's
+    neighbourhood, so the walk prunes from step 0 instead of waiting for
+    the result set to fill.  The floor only tightens r (sound: the k
+    verified candidates are real corpus rows), and seeds are *not* placed
+    in the result set — they re-enter through the walk, which keeps the
+    top-K duplicate-free.
     """
     if use_quant and not index.has_quant:
         raise ValueError("search_graph(use_quant=True) needs build_graph(quant='int8')")
+    if seed_r and not index.has_quant:
+        raise ValueError("search_graph(seed_r=True) needs build_graph(quant='int8')")
     q_rot = index.estimator.rotate(queries.astype(jnp.float32))
     table = index.estimator.table
     n = index.corpus_rot.shape[0]
@@ -225,7 +249,25 @@ def search_graph(
 
     c_max = 2 * ef  # frontier capacity (hnswlib bounds C by worst(W) instead)
 
-    def one(qv):
+    if seed_r:
+        nbrs0 = index.neighbors[index.entry]  # (M,)
+        nvalid = nbrs0 >= 0
+        codes0 = index.corpus_q[jnp.maximum(nbrs0, 0)]  # (M, D) — 1 B/dim
+        deq0 = codes0.astype(jnp.float32) * index.qscales[None, :]
+        approx = jnp.sum((deq0[None, :, :] - q_rot[:, None, :]) ** 2, axis=-1)
+        approx = jnp.where(nvalid[None, :], approx, jnp.inf)  # (Q, M)
+        kk = min(k, m)
+        _, sel = jax.lax.top_k(-approx, kk)  # (Q, kk) best by int8 estimate
+        rows0 = index.corpus_rot[jnp.maximum(nbrs0, 0)][sel]  # (Q, kk, D)
+        exact0 = jnp.sum((rows0 - q_rot[:, None, :]) ** 2, axis=-1)
+        kth = jnp.max(exact0, axis=1) * (1.0 + table.eps[0]) ** 2
+        # A sound floor needs k *distinct* verified candidates.
+        enough = (jnp.sum(nvalid) >= k) & (kk == k)
+        r_seed = jnp.where(enough, kth, jnp.inf)
+    else:
+        r_seed = jnp.full((q_rot.shape[0],), jnp.inf)
+
+    def one(qv, r_seed_q):
         # W: ef-sized result window ordered by ESTIMATED distance (the
         #    greedy walk's notion of progress — hnswlib's dynamic list).
         # C: frontier of unexpanded nodes ordered by estimate.
@@ -268,6 +310,7 @@ def search_graph(
             cands = index.corpus_rot[jnp.maximum(nbrs, 0)]  # (M, D)
 
             r_sq = top_sq[-1] if decoupled else w_sq[-1]
+            r_sq = jnp.minimum(r_sq, r_seed_q)  # seeded floor (inf = off)
             r_sq = jnp.where(jnp.isfinite(r_sq), r_sq, 1e18)
             if use_quant:
                 qcands = index.corpus_q[jnp.maximum(nbrs, 0)]  # (M, D) int8
@@ -316,4 +359,4 @@ def search_graph(
             rows_acc.astype(jnp.float32), 1.0)
         return jnp.sqrt(jnp.maximum(top_sq, 0.0)), top_ids, avg
 
-    return jax.vmap(one)(q_rot)
+    return jax.vmap(one)(q_rot, r_seed)

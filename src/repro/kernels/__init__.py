@@ -3,18 +3,28 @@
 dade_dco.py -- blocked partial-distance screen (the paper's Algorithm 1 as a
 tile-granular VMEM-resident kernel); quant_dco.py -- int8 lower-bound
 prefilter (stage 1 of the quantized two-stage screen, 1 byte/dim of HBM
-traffic); ops.py -- jit'd public wrappers with padding + CPU interpret
-fallback; ref.py -- pure-jnp oracles.
+traffic); ivf_scan.py -- fused IVF wave-scan megakernel (gather-free bucket
+streaming + int8×int8 MXU prefilter + fp32 re-screen + on-device top-K);
+ops.py -- jit'd public wrappers with padding + CPU interpret fallback;
+ref.py -- pure-jnp oracles.
 """
 
-from repro.kernels.ops import block_table, dco_screen_kernel, on_tpu, quant_screen_kernel
-from repro.kernels.ref import dade_dco_ref, quant_dco_ref
+from repro.kernels.ops import (
+    block_table,
+    dco_screen_kernel,
+    ivf_scan_kernel,
+    on_tpu,
+    quant_screen_kernel,
+)
+from repro.kernels.ref import dade_dco_ref, ivf_scan_ref, quant_dco_ref
 
 __all__ = [
     "block_table",
     "dco_screen_kernel",
+    "ivf_scan_kernel",
     "quant_screen_kernel",
     "on_tpu",
     "dade_dco_ref",
+    "ivf_scan_ref",
     "quant_dco_ref",
 ]

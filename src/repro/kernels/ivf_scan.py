@@ -1,0 +1,404 @@
+"""Fused IVF wave-scan megakernel (Pallas TPU).
+
+One kernel launch performs the whole IVF probe scan that ``search_ivf``
+previously ran as a host-orchestrated gather + vmapped jnp screen:
+
+  * **Gather-free bucket streaming.**  The corpus lives in a flat
+    cluster-contiguous layout (``repro.index.ivf`` CSR fields, cluster
+    starts aligned to the tile grid).  A scalar-prefetched
+    ``(q_tiles, n_probe, cap_tiles)`` offset table drives the BlockSpec
+    index maps, so each grid step DMAs its bucket's candidate tiles
+    straight from HBM — the ``(Q, cap, D)`` fp32 gather copy the old path
+    materialized per probe (cap·D·4 bytes per query per probe, mostly
+    thrown away by the screen) never exists.  Out-of-span steps of
+    buckets shorter than the largest one point at the sentinel tail, so a
+    probe window costs its own bucket's rows, not ``max_bucket``.
+  * **int8×int8 MXU prefilter.**  Stage 1 screens each candidate tile with
+    the quantized lower bound computed from a true int8×int8
+    ``dot_general`` accumulating in **int32** on the MXU.  Per-*block*
+    scales (``repro.quant.scalar.fit_block_scales``) make the dequantize a
+    single scalar multiply per (tile, dim-block) — the per-dim path in
+    ``quant_dco.py`` had to upcast every corpus element to f32 before the
+    MXU.  Queries are int8 too (per-(query, block) scales fitted from the
+    query itself, so they never clip), and the error band adds the query
+    and corpus halves: ``||q-o||_d >= ||q'-o'||_d - E_c(d) - E_q(d)``.
+  * **Fused fp32 re-screen.**  Stage-1 survivors are re-screened by the
+    exact blocked DADE test (same semantics as ``dade_dco.py``) in the same
+    kernel invocation; a tile whose candidates are all stage-1-pruned skips
+    the fp32 compute entirely (``@pl.when``).
+  * **On-device top-K.**  The running top-K and the DCO threshold r² live
+    in VMEM scratch and carry across the (probe, candidate-tile) grid axes,
+    so r tightens between waves without a host round-trip or an HBM
+    (Q, N)-shaped intermediate.
+
+Soundness: stage 1 prunes only candidates whose *lower bound* already fails
+the DADE test, so every pruned row would also have been rejected by the
+fp32 screen at the same checkpoint — the ``passed`` set equals the fp32
+screen's (no false prunes; see ``repro.quant.scalar`` for the bound).
+
+Honest-accounting notes (mirrors ``dade_dco.py`` §8.3): under the automatic
+pipeline the compiler still prefetches both the int8 and fp32 blocks of a
+tile; the ``@pl.when`` gates skip the MXU/VPU *work*.  The bytes the
+subsystem actually removes are the per-probe gather copies (eliminated
+structurally by the CSR layout) plus the semantic dims-consumed accounting
+reported in ``stats`` — the same quantity fig6/fig7 track for the host
+engines.  Tile shapes: compiled mode needs int8 tiles of at least
+(32, 128), so ``block_q >= 32`` and ``D_pad`` a multiple of 128 on real
+TPUs; interpret mode (CPU tests) accepts smaller tiles.
+
+The per-tile screen/merge helpers below are pure jnp functions shared with
+the ``ref.py`` oracle, so kernel-vs-oracle parity is structural, not
+statistical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+__all__ = ["ivf_scan_kernel_call"]
+
+
+# ---------------------------------------------------------------------------
+# Pure per-tile helpers (shared by the kernel body and the ref.py oracle).
+# ---------------------------------------------------------------------------
+
+
+def stage1_tile(qcodes, qscales, ccodes, bscales, eps, scale, rsq,
+                *, block_d: int, slack: float):
+    """int8×int8 lower-bound prefilter over one (BQ, BC) tile.
+
+    Args:
+      qcodes: (BQ, D) int8 query codes (per-query per-block scales).
+      qscales: (BQ, S) f32 query block scales t.
+      ccodes: (BC, D) int8 corpus codes (per-block scales).
+      bscales: (S,) f32 corpus block scales s.
+      eps, scale: (S,) blocked DADE table.
+      rsq: (BQ, 1) f32 frozen thresholds for this tile.
+    Returns (active (BQ, BC) bool stage-1 survivors, d8 (BQ, BC) f32 int8
+    dims consumed per row — the retirement checkpoint, dade-style).
+    """
+    s_count = qcodes.shape[1] // block_d
+    bq, bc = qcodes.shape[0], ccodes.shape[0]
+    psum = jnp.zeros((bq, bc), jnp.float32)
+    active = jnp.ones((bq, bc), bool)
+    d8 = jnp.zeros((bq, bc), jnp.float32)
+    ec2 = jnp.zeros((), jnp.float32)
+    eq2 = jnp.zeros((bq, 1), jnp.float32)
+    for s in range(s_count):
+        sl = slice(s * block_d, (s + 1) * block_d)
+        qc = qcodes[:, sl]
+        cc = ccodes[:, sl]
+        dot_i = jax.lax.dot_general(
+            qc, cc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+        )  # (BQ, BC) int32 on the MXU
+        t_q = qscales[:, s:s + 1]  # (BQ, 1)
+        s_b = bscales[s]
+        qn_i = jnp.sum(qc.astype(jnp.int32) ** 2, axis=1, keepdims=True)
+        cn_i = jnp.sum(cc.astype(jnp.int32) ** 2, axis=1, keepdims=True).T
+        qn = qn_i.astype(jnp.float32) * (t_q * t_q)
+        cn = cn_i.astype(jnp.float32) * (s_b * s_b)
+        dotf = dot_i.astype(jnp.float32) * (t_q * s_b)
+        psum = psum + jnp.maximum(qn + cn - 2.0 * dotf, 0.0)
+        # Cumulative error bands: corpus (scalar) + query (per row).
+        ec2 = ec2 + block_d * (s_b * 0.5) ** 2
+        eq2 = eq2 + block_d * (t_q * 0.5) ** 2
+        eband = jnp.sqrt(ec2) + jnp.sqrt(eq2)  # (BQ, 1)
+        d8 = d8 + jnp.where(active, float(block_d), 0.0)
+        root = jnp.maximum(jnp.sqrt(psum) - eband, 0.0)
+        lb = root * root * (1.0 - slack) * scale[s]
+        thresh = (1.0 + eps[s]) ** 2 * rsq
+        # The lower bound never exceeds the exact partial distance, so
+        # rejecting is sound at every checkpoint, the last included.
+        active = active & ~(lb > thresh)
+    return active, d8
+
+
+def stage2_tile(q, c, eps, scale, rsq, active0, *, block_d: int):
+    """Blocked fp32 DADE screen of the stage-1 survivors in one tile.
+
+    Same checkpoint/retire semantics as ``dade_dco.py`` (per-block clamp,
+    reject at non-terminal checkpoints, survivors retire exact).  Rows with
+    ``active0`` False (stage-1 pruned) consume no fp32 dims and never pass.
+    Returns (exact_sq (BQ, BC), passed (BQ, BC) bool, d32 (BQ, BC) f32).
+    """
+    s_count = q.shape[1] // block_d
+    bq, bc = q.shape[0], c.shape[0]
+    psum = jnp.zeros((bq, bc), jnp.float32)
+    active = active0
+    d32 = jnp.zeros((bq, bc), jnp.float32)
+    for s in range(s_count):
+        sl = slice(s * block_d, (s + 1) * block_d)
+        # Upcast per block: the serving corpus streams as bf16 (2 B/dim);
+        # accumulation stays f32 either way.
+        qb = q[:, sl].astype(jnp.float32)
+        cb = c[:, sl].astype(jnp.float32)
+        dot = jax.lax.dot_general(
+            qb, cb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        qn = jnp.sum(qb * qb, axis=1, keepdims=True)
+        cn = jnp.sum(cb * cb, axis=1, keepdims=True).T
+        psum = psum + jnp.maximum(qn + cn - 2.0 * dot, 0.0)
+        d32 = d32 + jnp.where(active, float(block_d), 0.0)
+        est = psum * scale[s]
+        thresh = (1.0 + eps[s]) ** 2 * rsq
+        is_last = s == s_count - 1
+        reject = active & (est > thresh) & (not is_last)
+        active = active & ~reject
+    passed = active & (psum <= rsq)
+    return psum, passed, d32
+
+
+def merge_topk_tile(top_sq, top_ids, new_sq, new_ids, *, k: int):
+    """Merge a (BQ, BC) candidate tile into the running (BQ, K) top-K.
+
+    Portable K-step selection (min + one-hot extract) instead of
+    ``lax.top_k`` so the same code lowers in Mosaic and interpret mode.
+    ``new_sq`` must already be inf for rows that must not enter (invalid,
+    failed, duplicate).  Returns (top_sq, top_ids) sorted ascending.
+    """
+    all_sq = jnp.concatenate([top_sq, new_sq], axis=1)
+    all_ids = jnp.concatenate([top_ids, jnp.broadcast_to(new_ids, new_sq.shape)], axis=1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, all_sq.shape, 1)
+    sq_cols, id_cols = [], []
+    for _ in range(k):
+        m = jnp.min(all_sq, axis=1, keepdims=True)  # (BQ, 1)
+        am = jnp.argmin(all_sq, axis=1).astype(jnp.int32)
+        onehot = iota == am[:, None]
+        sel = jnp.sum(jnp.where(onehot, all_ids, 0), axis=1, keepdims=True)
+        sel = jnp.where(jnp.isinf(m), jnp.int32(-1), sel)
+        sq_cols.append(m)
+        id_cols.append(sel)
+        all_sq = jnp.where(onehot, jnp.inf, all_sq)
+    return jnp.concatenate(sq_cols, axis=1), jnp.concatenate(id_cols, axis=1)
+
+
+def dup_mask(new_ids, top_ids, *, k: int):
+    """(BQ, BC) bool — candidate id already present in the running top-K.
+
+    Probed windows can overlap (offsets round down to tile boundaries and
+    adjacent buckets share tiles), so the same corpus row may be scanned
+    twice; without this mask it could occupy two top-K slots.  Checking
+    against the *current* top-K suffices: r never loosens, so a row that
+    fell out of the top-K can never re-enter.
+    """
+    dup = jnp.zeros(new_ids.shape, bool)
+    for j in range(k):
+        dup = dup | ((new_ids == top_ids[:, j:j + 1]) & (top_ids[:, j:j + 1] >= 0))
+    return dup
+
+
+# ---------------------------------------------------------------------------
+# Kernel
+# ---------------------------------------------------------------------------
+
+
+def _kernel(
+    # scalar prefetch
+    offs_ref,  # (q_tiles, P, T) i32 — candidate-tile offset per grid step;
+    # out-of-span steps of short buckets point at the sentinel tail, so a
+    # probe window costs exactly its own bucket, not the largest one
+    # inputs
+    qcodes_ref,  # (QT, D) int8 query codes
+    q_ref,  # (QT, D) f32 exact rotated queries
+    qscales_ref,  # (QT, S) f32 per-query block scales
+    rsq0_ref,  # (QT, 1) f32 seeded initial thresholds
+    codes_ref,  # (CT, D) int8 candidate codes (streamed from flat layout)
+    rows_ref,  # (CT, D) f32 candidate rows (same window)
+    ids_ref,  # (1, CT) i32 corpus row ids, -1 for tail padding
+    bscales_ref,  # (1, S) f32 corpus block scales
+    eps_ref,  # (1, S) f32
+    scale_ref,  # (1, S) f32
+    # outputs
+    top_sq_ref,  # (QT, K) f32
+    top_ids_ref,  # (QT, K) i32
+    stats_ref,  # (QT, 4) f32 — [int8 dims, fp32 dims, rows scanned, passed]
+    # scratch
+    top_sq_s,  # (QT, K) f32 VMEM
+    top_ids_s,  # (QT, K) i32 VMEM
+    rsq_s,  # (QT, 1) f32 VMEM
+    stats_s,  # (QT, 4) f32 VMEM
+    *,
+    num_probes: int,
+    cap_tiles: int,
+    k: int,
+    block_d: int,
+    slack: float,
+):
+    p = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when((p == 0) & (t == 0))
+    def _init():
+        top_sq_s[...] = jnp.full_like(top_sq_s, jnp.inf)
+        top_ids_s[...] = jnp.full_like(top_ids_s, -1)
+        rsq_s[...] = rsq0_ref[...]
+        stats_s[...] = jnp.zeros_like(stats_s)
+
+    ids = ids_ref[...]  # (1, CT)
+    valid = ids >= 0
+    validf = valid.astype(jnp.float32)
+    rsq = rsq_s[...]  # frozen for this tile (wave-synchronous semantics)
+    eps = eps_ref[0, :]
+    scale = scale_ref[0, :]
+
+    active8, d8 = stage1_tile(
+        qcodes_ref[...], qscales_ref[...], codes_ref[...], bscales_ref[0, :],
+        eps, scale, rsq, block_d=block_d, slack=slack,
+    )
+    d8_sum = jnp.sum(d8 * validf, axis=1, keepdims=True)  # (QT, 1)
+    nvalid = jnp.broadcast_to(
+        jnp.sum(validf, axis=1, keepdims=True), d8_sum.shape)
+    zero = jnp.zeros_like(d8_sum)
+    stats_s[...] += jnp.concatenate([d8_sum, zero, nvalid, zero], axis=1)
+
+    alive = jnp.sum((active8 & valid).astype(jnp.int32))
+
+    @pl.when(alive > 0)
+    def _stage2_and_merge():
+        exact_sq, passed, d32 = stage2_tile(
+            q_ref[...], rows_ref[...], eps, scale, rsq, active8, block_d=block_d
+        )
+        ok = passed & valid
+        d32_sum = jnp.sum(d32 * validf, axis=1, keepdims=True)
+        npass = jnp.sum(ok.astype(jnp.float32), axis=1, keepdims=True)
+        z = jnp.zeros_like(d32_sum)
+        stats_s[...] += jnp.concatenate([z, d32_sum, z, npass], axis=1)
+
+        dup = dup_mask(ids, top_ids_s[...], k=k)
+        new_sq = jnp.where(ok & ~dup, exact_sq, jnp.inf)
+        top_sq, top_ids = merge_topk_tile(
+            top_sq_s[...], top_ids_s[...], new_sq, ids, k=k
+        )
+        top_sq_s[...] = top_sq
+        top_ids_s[...] = top_ids
+        # Threshold tightens between waves *on device* — no host round-trip.
+        rsq_s[...] = jnp.minimum(rsq_s[...], top_sq[:, k - 1:k])
+
+    @pl.when((p == num_probes - 1) & (t == cap_tiles - 1))
+    def _finalize():
+        top_sq_ref[...] = top_sq_s[...]
+        top_ids_ref[...] = top_ids_s[...]
+        stats_ref[...] = stats_s[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_q", "block_c", "block_d", "cap_tiles",
+                     "slack", "interpret"),
+)
+def ivf_scan_kernel_call(
+    tile_offs: jax.Array,  # (q_tiles, P, cap_tiles) i32 per-step offsets
+    qcodes: jax.Array,  # (Q, D) int8
+    q_rot: jax.Array,  # (Q, D) f32
+    qscales: jax.Array,  # (Q, S) f32
+    r0_sq: jax.Array,  # (Q,) f32
+    flat_codes: jax.Array,  # (N_pad, D) int8 cluster-contiguous
+    flat_rot: jax.Array,  # (N_pad, D) f32
+    flat_ids: jax.Array,  # (N_pad,) i32, -1 tail padding
+    bscales: jax.Array,  # (S,) f32
+    eps: jax.Array,  # (S,) f32 blocked table
+    scale: jax.Array,  # (S,) f32
+    *,
+    k: int,
+    block_q: int = 32,
+    block_c: int = 128,
+    block_d: int = 128,
+    cap_tiles: int = 1,
+    slack: float = 1e-4,
+    interpret: bool = False,
+):
+    """Launch the fused IVF wave scan.  Shapes must be pre-padded:
+    Q % block_q == 0, N_pad % block_c == 0, D % block_d == 0, and every
+    offset in ``tile_offs`` must stay within N_pad//block_c (the wrapper in
+    ``repro.kernels.ops`` enforces all of this and builds the per-step
+    offset table).
+
+    Returns (top_sq (Q, K) f32 ascending, top_ids (Q, K) i32,
+    stats (Q, 4) f32 = [int8 dims, fp32 dims, rows scanned, passed rows]).
+    """
+    qn, dim = q_rot.shape
+    n_pad = flat_rot.shape[0]
+    s_count = dim // block_d
+    if qn % block_q or n_pad % block_c or dim % block_d:
+        raise ValueError(
+            f"shapes must be padded: Q={qn}%{block_q}, N={n_pad}%{block_c}, "
+            f"D={dim}%{block_d}"
+        )
+    if flat_codes.dtype != jnp.int8 or qcodes.dtype != jnp.int8:
+        raise ValueError("codes must be int8")
+    if eps.shape[0] != s_count or bscales.shape[0] != s_count:
+        raise ValueError(f"table/scales must have {s_count} block steps")
+    if not 1 <= k <= 128:
+        raise ValueError(f"k must be in [1, 128], got {k}")
+    q_tiles = qn // block_q
+    num_probes = tile_offs.shape[1]
+    if tile_offs.shape[:1] + tile_offs.shape[2:] != (q_tiles, cap_tiles):
+        raise ValueError(
+            f"tile_offs is {tile_offs.shape}, need ({q_tiles}, P, {cap_tiles})")
+
+    grid = (q_tiles, num_probes, cap_tiles)
+    kernel = functools.partial(
+        _kernel, num_probes=num_probes, cap_tiles=cap_tiles, k=k,
+        block_d=block_d, slack=slack,
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, dim), lambda i, p, t, offs: (i, 0)),
+            pl.BlockSpec((block_q, dim), lambda i, p, t, offs: (i, 0)),
+            pl.BlockSpec((block_q, s_count), lambda i, p, t, offs: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, p, t, offs: (i, 0)),
+            pl.BlockSpec((block_c, dim), lambda i, p, t, offs: (offs[i, p, t], 0)),
+            pl.BlockSpec((block_c, dim), lambda i, p, t, offs: (offs[i, p, t], 0)),
+            pl.BlockSpec((1, block_c), lambda i, p, t, offs: (0, offs[i, p, t])),
+            pl.BlockSpec((1, s_count), lambda i, p, t, offs: (0, 0)),
+            pl.BlockSpec((1, s_count), lambda i, p, t, offs: (0, 0)),
+            pl.BlockSpec((1, s_count), lambda i, p, t, offs: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_q, k), lambda i, p, t, offs: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, p, t, offs: (i, 0)),
+            pl.BlockSpec((block_q, 4), lambda i, p, t, offs: (i, 0)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 4), jnp.float32),
+        ],
+    )
+    out_shapes = (
+        jax.ShapeDtypeStruct((qn, k), jnp.float32),
+        jax.ShapeDtypeStruct((qn, k), jnp.int32),
+        jax.ShapeDtypeStruct((qn, 4), jnp.float32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        tile_offs.astype(jnp.int32),
+        qcodes,
+        q_rot.astype(jnp.float32),
+        qscales.astype(jnp.float32),
+        r0_sq.reshape(-1, 1).astype(jnp.float32),
+        flat_codes,
+        flat_rot,  # f32 or bf16 — stage 2 upcasts per block
+        flat_ids.reshape(1, -1).astype(jnp.int32),
+        bscales.reshape(1, -1).astype(jnp.float32),
+        eps.reshape(1, -1).astype(jnp.float32),
+        scale.reshape(1, -1).astype(jnp.float32),
+    )

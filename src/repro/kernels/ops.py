@@ -16,11 +16,46 @@ import numpy as np
 from repro.core.calibration import EpsilonTable
 from repro.core.estimators import Estimator
 from repro.kernels import dade_dco as _dade
+from repro.kernels import ivf_scan as _ivf_scan
 from repro.kernels import quant_dco as _quant
 from repro.kernels import ref as _ref
-from repro.quant.scalar import cum_err_sq
+from repro.quant.scalar import cum_err_sq, quantize_queries_block
 
-__all__ = ["dco_screen_kernel", "quant_screen_kernel", "block_table", "on_tpu"]
+__all__ = [
+    "dco_screen_kernel", "quant_screen_kernel", "ivf_scan_kernel",
+    "ivf_cap_tiles", "build_window_offsets", "block_table", "on_tpu",
+]
+
+
+def ivf_cap_tiles(max_bucket: int, block_c: int, *, starts_aligned: bool) -> int:
+    """Candidate tiles per probe window.  Aligned cluster starts (the
+    build-time CSR layout) need exactly ceil(max_bucket / block_c); unaligned
+    offsets round down to the tile grid, so the window grows by one tile of
+    slack to keep covering the whole bucket."""
+    if starts_aligned:
+        return max((max_bucket + block_c - 1) // block_c, 1)
+    return max((max_bucket + 2 * block_c - 2) // block_c, 1)
+
+
+def build_window_offsets(window_starts, window_rows, *, block_c: int,
+                         cap_tiles: int, n_pad: int):
+    """(QT, P) bucket row starts/sizes -> (QT, P, cap_tiles) per-step tile
+    offsets for the fused kernel's scalar-prefetch index maps.
+
+    Step t of a window points at its bucket's t-th candidate tile while
+    t < span (the tiles the bucket actually occupies, round-down slack
+    included) and at the all-sentinel tail tile otherwise — short buckets
+    cost their own rows, not ``cap_tiles`` worth.  The flat layout's tail
+    padding guarantees the last tile holds only sentinel rows."""
+    starts = window_starts.astype(jnp.int32)
+    rows = window_rows.astype(jnp.int32)
+    base = starts // block_c
+    span = (starts % block_c + rows + block_c - 1) // block_c  # tiles used
+    t_idx = jnp.arange(cap_tiles, dtype=jnp.int32)[None, None, :]
+    sentinel_tile = n_pad // block_c - 1
+    offs = jnp.where(t_idx < span[:, :, None], base[:, :, None] + t_idx,
+                     sentinel_tile)
+    return jnp.clip(offs, 0, sentinel_tile)
 
 _PAD_SENTINEL = 1e18  # huge-but-finite: pad rows prune at the first block
 
@@ -194,3 +229,99 @@ def quant_screen_kernel(
         pruned[:qn, :n].astype(bool),
         lb_dims[:qn, :n],
     )
+
+
+def _ivf_scan_call(tile_offs, qcodes, q, qscales, r0, flat_codes, flat_rot,
+                   flat_ids, bscales, eps, scale, k, block_q, block_c,
+                   block_d, cap_tiles, slack, interpret, use_ref):
+    if use_ref:
+        # The oracle replays the grid with host loops (concrete offsets),
+        # so it runs eagerly — test/debug path only.
+        return _ref.ivf_scan_ref(
+            tile_offs, qcodes, q, qscales, r0, flat_codes, flat_rot,
+            flat_ids, bscales, eps, scale, k=k, block_q=block_q,
+            block_c=block_c, block_d=block_d, cap_tiles=cap_tiles,
+            slack=slack,
+        )
+    return _ivf_scan.ivf_scan_kernel_call(
+        tile_offs, qcodes, q, qscales, r0, flat_codes, flat_rot, flat_ids,
+        bscales, eps, scale, k=k, block_q=block_q, block_c=block_c,
+        block_d=block_d, cap_tiles=cap_tiles, slack=slack,
+        interpret=interpret,
+    )
+
+
+def ivf_scan_kernel(
+    estimator: Estimator,
+    q_rot: jax.Array,  # (Q, D) rotated fp32 queries, tile-grouped by caller
+    window_starts: jax.Array,  # (ceil(Q/block_q), P) i32 flat ROW offsets
+    window_rows: jax.Array,  # (ceil(Q/block_q), P) i32 bucket sizes
+    flat_rot: jax.Array,  # (N_pad, D_pad) f32 cluster-contiguous corpus
+    flat_codes: jax.Array,  # (N_pad, D_pad) int8 per-block codes
+    flat_ids: jax.Array,  # (N_pad,) i32, -1 tail padding
+    bscales: jax.Array,  # (S,) f32 corpus per-block scales
+    r0_sq: jax.Array,  # (Q,) f32 seeded initial squared thresholds
+    *,
+    k: int,
+    max_bucket: int,
+    block_q: int = 32,
+    block_c: int = 128,
+    block_d: int = 128,
+    starts_aligned: bool = False,
+    slack: float = 1e-4,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+):
+    """Public entry for the fused IVF wave scan.
+
+    The caller (``repro.index.ivf.search_ivf_fused``) owns query→tile
+    grouping and probe selection; this wrapper owns padding, the blocked
+    epsilon table, per-(query, block) int8 query quantization, and the
+    row→tile offset table.  ``window_starts[i, p]`` / ``window_rows[i, p]``
+    are the flat row offset and size of the p-th bucket probed by query
+    tile i; the grid reserves ``ivf_cap_tiles(max_bucket, block_c, ...)``
+    steps per window but short buckets redirect their out-of-span steps to
+    the sentinel tail (``build_window_offsets``), so each probe costs its
+    own bucket's rows.  ``starts_aligned`` declares that every window start
+    is already a multiple of ``block_c`` (the aligned CSR build layout) —
+    windows then cover exactly their bucket; otherwise one slack tile
+    absorbs the round-down, and rows pulled in from a neighbouring cluster
+    are real candidates (screened soundly, counted in the byte stats).
+
+    Returns (top_sq (Q, K) ascending, top_ids (Q, K), stats (Q, 4) f32 =
+    [int8 dims, fp32 dims, rows scanned, passed rows]), cropped to Q.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    qn, dim = q_rot.shape
+    n_pad, d_pad = flat_rot.shape
+    if d_pad % block_d or bscales.shape[0] != d_pad // block_d:
+        raise ValueError(
+            f"flat corpus dim {d_pad} must be a multiple of block_d "
+            f"{block_d} with one block scale per block")
+    if n_pad % block_c:
+        raise ValueError(f"flat corpus rows {n_pad} % block_c {block_c} != 0")
+    cap_tiles = ivf_cap_tiles(max_bucket, block_c, starts_aligned=starts_aligned)
+    if cap_tiles > n_pad // block_c:
+        raise ValueError("flat corpus tail padding too small for max_bucket")
+
+    eps, scale, d_pad_tbl, _ = block_table(estimator.table, dim, block_d)
+    if d_pad_tbl != d_pad:
+        raise ValueError(
+            f"blocked table spans {d_pad_tbl} dims, flat corpus has {d_pad}")
+
+    q = _pad_axis(q_rot.astype(jnp.float32), 1, block_d, 0.0)
+    q = _pad_axis(q, 0, block_q, 0.0)
+    qcodes, qscales = quantize_queries_block(q, block_d)
+    r0 = _pad_axis(r0_sq.astype(jnp.float32), 0, block_q, 0.0)
+
+    tile_offs = build_window_offsets(
+        window_starts, window_rows, block_c=block_c, cap_tiles=cap_tiles,
+        n_pad=n_pad)
+
+    top_sq, top_ids, stats = _ivf_scan_call(
+        tile_offs, qcodes, q, qscales, r0, flat_codes, flat_rot, flat_ids,
+        bscales, eps, scale, k, block_q, block_c, block_d, cap_tiles, slack,
+        interpret, use_ref,
+    )
+    return top_sq[:qn], top_ids[:qn], stats[:qn]

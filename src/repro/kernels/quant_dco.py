@@ -16,10 +16,14 @@ traffic changes.  Rows the kernel marks ``pruned`` are definite rejects
 (no false prunes — see repro.quant.scalar); survivors are re-screened by
 the fp32 ``dade_dco`` path on exact rows.
 
-Note the kernel deliberately does NOT use an int8xint8 MXU product: the
-per-dimension scales (which keep the high-variance leading PCA dims
-precise) would have to be folded into both operands, and DCOs are bound by
-HBM bandwidth, not MXU throughput — the 4x byte reduction is the win.
+This kernel keeps the *per-dimension* scales (which preserve the
+high-variance leading PCA dims exactly) and therefore dequantizes to f32
+before the MXU — the right trade for the flat-scan screen it serves, where
+HBM bandwidth dominates and the 4x byte reduction is the win.  The true
+int8×int8 MXU path lives in ``ivf_scan.py``: per-*block* scales make the
+dequantize a scalar per (tile, dim-block), so the product accumulates in
+int32 on the MXU; its wider error band is absorbed into the lower-bound
+test (see repro.quant.scalar.fit_block_scales).
 """
 
 from __future__ import annotations

@@ -6,7 +6,12 @@ block-checkpoint schedule (d = (s+1)·DB), same MXU decomposition
 tests can assert elementwise equality, not just statistical agreement.
 ``quant_dco_ref`` does the same for the int8 lower-bound prefilter kernel
 (``quant_dco.quant_dco_kernel_call``): dequantize-then-decompose, identical
-lower-bound formula and retire rules.
+lower-bound formula and retire rules.  ``ivf_scan_ref`` replays the fused
+IVF wave-scan megakernel (``ivf_scan.ivf_scan_kernel_call``) grid step by
+grid step *with the kernel's own tile helpers*, so parity is structural;
+its optional trace exposes the per-wave frozen thresholds and pass masks
+the megakernel keeps in VMEM scratch, which the tests replay against
+``dco_screen_batch``.
 """
 
 from __future__ import annotations
@@ -16,7 +21,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-__all__ = ["dade_dco_ref", "quant_dco_ref"]
+__all__ = ["dade_dco_ref", "quant_dco_ref", "ivf_scan_ref"]
 
 
 @partial(jax.jit, static_argnames=("block_d",))
@@ -110,3 +115,101 @@ def quant_dco_ref(
     )[..., 0]
     lb_dims = ((retire_s + 1) * block_d).astype(jnp.int32)
     return lb_sq, pruned.astype(jnp.int32), lb_dims
+
+
+def ivf_scan_ref(
+    tile_offs: jax.Array,  # (q_tiles, P, cap_tiles) i32 per-step offsets
+    qcodes: jax.Array,  # (Q, D) int8
+    q_rot: jax.Array,  # (Q, D) f32
+    qscales: jax.Array,  # (Q, S) f32
+    r0_sq: jax.Array,  # (Q,) f32
+    flat_codes: jax.Array,  # (N_pad, D) int8
+    flat_rot: jax.Array,  # (N_pad, D) f32
+    flat_ids: jax.Array,  # (N_pad,) i32
+    bscales: jax.Array,  # (S,) f32
+    eps: jax.Array,  # (S,) f32
+    scale: jax.Array,  # (S,) f32
+    *,
+    k: int,
+    block_q: int,
+    block_c: int,
+    block_d: int,
+    cap_tiles: int,
+    slack: float = 1e-4,
+    return_trace: bool = False,
+):
+    """Oracle for the fused IVF wave-scan megakernel.
+
+    Pure-jnp replay of the (q_tiles, P, cap_tiles) grid using the kernel's
+    own ``stage1_tile`` / ``stage2_tile`` / ``merge_topk_tile`` helpers and
+    the same scratch-carry semantics (threshold frozen per tile, tightened
+    after the merge).  With ``return_trace`` additionally returns a list of
+    per-(tile, probe, ctile) records exposing the frozen r², the scanned
+    window, and the stage-1/stage-2 masks — the state the kernel keeps in
+    VMEM — so tests can replay each wave against ``dco_screen_batch``.
+    """
+    from repro.kernels.ivf_scan import (
+        dup_mask, merge_topk_tile, stage1_tile, stage2_tile,
+    )
+
+    qn, dim = q_rot.shape
+    q_tiles = qn // block_q
+    num_probes = tile_offs.shape[1]
+    top_sq = []
+    top_ids = []
+    stats = []
+    trace = []
+    for i in range(q_tiles):
+        qs = slice(i * block_q, (i + 1) * block_q)
+        t_sq = jnp.full((block_q, k), jnp.inf)
+        t_ids = jnp.full((block_q, k), -1, jnp.int32)
+        rsq = r0_sq[qs].reshape(-1, 1).astype(jnp.float32)
+        st = jnp.zeros((block_q, 4), jnp.float32)
+        for p in range(num_probes):
+            for t in range(cap_tiles):
+                off = int(tile_offs[i, p, t])
+                rows = slice(off * block_c, (off + 1) * block_c)
+                ids = flat_ids[rows].reshape(1, -1)
+                valid = ids >= 0
+                validf = valid.astype(jnp.float32)
+                rsq_frozen = rsq
+                active8, d8 = stage1_tile(
+                    qcodes[qs], qscales[qs], flat_codes[rows], bscales,
+                    eps, scale, rsq_frozen, block_d=block_d, slack=slack,
+                )
+                d8_sum = jnp.sum(d8 * validf, axis=1, keepdims=True)
+                nvalid = jnp.broadcast_to(
+                    jnp.sum(validf, axis=1, keepdims=True), d8_sum.shape)
+                zero = jnp.zeros_like(d8_sum)
+                st = st + jnp.concatenate([d8_sum, zero, nvalid, zero], axis=1)
+                alive = int(jnp.sum((active8 & valid).astype(jnp.int32)))
+                rec = dict(tile=i, probe=p, ctile=t, row_start=off * block_c,
+                           ids=ids[0], rsq=rsq_frozen[:, 0], active8=active8,
+                           valid=valid[0])
+                if alive > 0:
+                    exact_sq, passed, d32 = stage2_tile(
+                        q_rot[qs], flat_rot[rows], eps, scale, rsq_frozen,
+                        active8, block_d=block_d,
+                    )
+                    ok = passed & valid
+                    d32_sum = jnp.sum(d32 * validf, axis=1, keepdims=True)
+                    npass = jnp.sum(ok.astype(jnp.float32), axis=1, keepdims=True)
+                    z = jnp.zeros_like(d32_sum)
+                    st = st + jnp.concatenate([z, d32_sum, z, npass], axis=1)
+                    dup = dup_mask(ids, t_ids, k=k)
+                    new_sq = jnp.where(ok & ~dup, exact_sq, jnp.inf)
+                    t_sq, t_ids = merge_topk_tile(t_sq, t_ids, new_sq, ids, k=k)
+                    rsq = jnp.minimum(rsq, t_sq[:, k - 1:k])
+                    rec.update(passed=passed, exact_sq=exact_sq)
+                else:
+                    rec.update(passed=jnp.zeros_like(active8), exact_sq=None)
+                if return_trace:
+                    trace.append(rec)
+        top_sq.append(t_sq)
+        top_ids.append(t_ids)
+        stats.append(st)
+    out = (jnp.concatenate(top_sq, 0), jnp.concatenate(top_ids, 0),
+           jnp.concatenate(stats, 0))
+    if return_trace:
+        return out + (trace,)
+    return out

@@ -29,19 +29,57 @@ from repro.launch.mesh import shard_map
 from repro.quant.scalar import cum_err_sq
 from repro.distributed.collectives import hierarchical_topk
 
-__all__ = ["build_search_step", "search_input_specs"]
+__all__ = ["build_search_step", "search_input_specs", "autotune_refine_budget"]
+
+
+def autotune_refine_budget(scales, sample_rot, *, k: int, wave: int,
+                           num_queries: int = 32, safety: float = 1.5):
+    """Derive the per-wave exact-refine budget from the stage-1 band width.
+
+    The quantized wave scan admits to exact refinement every row whose
+    *lower bound* beats the running k-th distance r.  Rows that qualify but
+    lose are exactly those inside the bound band: d <= r + 2E(D), where
+    2E(D) is the upper-minus-lower bound width at full dimension (see
+    ``repro.quant.scalar``).  So the right budget is k (true entrants) plus
+    the expected number of in-band rows per wave — a data quantity, not a
+    constant.  Estimated here on a corpus sample with corpus rows as
+    pseudo-queries (offline, numpy): for each pseudo-query take its k-th
+    sample distance r̂ and count rows with d <= r̂ + 2E.
+
+    Returns (budget int in [k, wave], diagnostics dict with ``band_width``
+    (2E(D)) and ``in_band_frac``).
+    """
+    import numpy as np
+
+    sample = np.asarray(sample_rot, np.float32)
+    n = sample.shape[0]
+    scales = jnp.asarray(scales, jnp.float32)
+    e_band = float(jnp.sqrt(cum_err_sq(scales, jnp.asarray([scales.shape[0]]))[0]))
+    nq = min(num_queries, n)
+    qs = sample[:: max(n // nq, 1)][:nq]
+    d = np.sqrt(np.maximum(
+        np.sum(qs * qs, 1)[:, None] + np.sum(sample * sample, 1)[None, :]
+        - 2.0 * qs @ sample.T, 0.0))
+    kth = np.partition(d, k, axis=1)[:, k]  # k-th excluding self (d=0)
+    in_band = np.mean(d <= (kth[:, None] + 2.0 * e_band)) - (k + 1) / n
+    in_band = max(float(in_band), 0.0)
+    budget = int(np.clip(k + np.ceil(in_band * wave * safety), k, wave))
+    return budget, {"band_width": 2.0 * e_band, "in_band_frac": in_band}
 
 
 def _pad_dim(d: int, block: int) -> int:
     return (d + block - 1) // block * block
 
 
-def search_input_specs(svc: ServiceConfig, mesh, *, quant: str | None = None):
+def search_input_specs(svc: ServiceConfig, mesh, *, quant: str | None = None,
+                       fused: bool = False):
     """ShapeDtypeStructs + shardings for the search step.
 
     ``quant="int8"`` inserts (corpus_q int8, qscales f32) after the fp
     corpus: codes are sharded row-wise exactly like the corpus (every wave
-    streams them), scales are replicated (one f32 per dimension).
+    streams them), scales are replicated.  ``fused`` switches the code
+    layout to the megakernel's per-*block* quantization: one scale per
+    Δd-dim block (shape (s_steps,)) instead of one per dimension.
     """
     n_dev = mesh.devices.size
     d_pad = _pad_dim(svc.dim, svc.delta_d)
@@ -57,7 +95,8 @@ def search_input_specs(svc: ServiceConfig, mesh, *, quant: str | None = None):
     repl = NamedSharding(mesh, P())
     if quant == "int8":
         corpus_q = jax.ShapeDtypeStruct(corpus.shape, jnp.int8)
-        qscales = jax.ShapeDtypeStruct((d_pad,), jnp.float32)
+        qscales = jax.ShapeDtypeStruct(
+            (s_steps,) if fused else (d_pad,), jnp.float32)
         return (
             (corpus, corpus_q, qscales, queries, eps, scale, eps_lo),
             (row_shard, row_shard, repl, repl, repl, repl, repl),
@@ -70,7 +109,8 @@ def search_input_specs(svc: ServiceConfig, mesh, *, quant: str | None = None):
 
 def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
                       seed_waves: int = 1, quant: str | None = None,
-                      refine_per_wave: int | None = None):
+                      refine_per_wave: int | None = None,
+                      fused: bool | None = None):
     """Returns search_step(corpus_rot, queries_rot, eps, scale, eps_lo)
     -> (dists, ids); with ``quant="int8"``:
     search_step(corpus_rot, corpus_q, qscales, queries_rot, eps, scale,
@@ -82,12 +122,30 @@ def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
     candidates per wave (those whose bound beats the current threshold)
     touch the fp corpus for exact refinement.  Rows whose lower bound
     exceeds the running k-th distance provably cannot enter the top-K, so
-    the only recall exposure is the fixed refine budget (default 2k).
+    the only recall exposure is the refine budget — which the serving
+    driver autotunes from the stage-1 band width
+    (``autotune_refine_budget``); 2k is only the blind fallback when no
+    corpus sample is available.
+
+    ``fused`` routes the quantized wave scan through the fused wave-scan
+    megakernel (``repro.kernels.ivf_scan``): each wave is one bucket
+    window, the int8 stage is a true int8×int8 MXU product over
+    *block*-quantized codes (the corpus must then be encoded with
+    ``quantize_block`` and ``qscales`` carries one scale per Δd block),
+    survivors re-screen through the blockwise DADE schedule in-kernel, and
+    the local top-K / threshold stay in VMEM across waves.  Default
+    (None): megakernel on TPU, jnp wave scan elsewhere (the kernel runs
+    interpret mode off-TPU — correct but slow, so opt in explicitly from
+    tests).
     """
+    from repro.kernels.ops import on_tpu
+
     axes = tuple(mesh.axis_names)
     k = svc.k
     wave = svc.wave
     block_d = svc.delta_d
+    if fused is None:
+        fused = on_tpu()
     if refine_per_wave is None:
         refine_per_wave = getattr(svc, "refine_per_wave", 0) or 2 * k
     refine_per_wave = min(refine_per_wave, wave)
@@ -286,9 +344,56 @@ def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
         top_sq, top_ids = hierarchical_topk(top_sq, top_ids, tuple(reversed(axes)), k)
         return jnp.sqrt(jnp.maximum(top_sq, 0.0)), top_ids
 
+    def local_search_quant_fused(corpus, codes, bscales, queries, eps, scale,
+                                 eps_lo):
+        """Quantized per-shard scan through the fused megakernel.
+
+        Every wave is one bucket window of the flat shard; the kernel runs
+        the int8×int8 MXU prefilter + blockwise fp32 DADE re-screen and
+        carries the local top-K / threshold r² in VMEM across waves.
+        codes: (N_local, D) int8 *block*-quantized; bscales: (S,).
+        """
+        from repro.kernels.ivf_scan import ivf_scan_kernel_call
+        from repro.kernels.ops import on_tpu
+        from repro.quant.scalar import quantize_queries_block
+
+        n_local, dim = corpus.shape
+        q = queries.shape[0]
+        base = shard_base(n_local)
+        if wave % 128 or n_local % wave:
+            raise ValueError("fused scan needs wave % 128 == 0 and "
+                             "corpus_per_device % wave == 0")
+        block_q = 32 if on_tpu() else 8
+        if q % block_q:
+            raise ValueError(f"query_batch {q} % block_q {block_q} != 0")
+
+        r0 = seed_rsq(corpus, queries, eps) if two_phase else jnp.full(
+            (q,), jnp.inf)
+        qf = queries.astype(jnp.float32)
+        qcodes, qscales = quantize_queries_block(qf, block_d)
+        q_tiles = q // block_q
+        num_waves = n_local // wave
+        block_c = 128
+        cap_tiles = wave // block_c
+        base_tiles = jnp.arange(num_waves, dtype=jnp.int32) * cap_tiles
+        t_idx = jnp.arange(cap_tiles, dtype=jnp.int32)
+        offs = jnp.broadcast_to(
+            (base_tiles[None, :, None] + t_idx[None, None, :]),
+            (q_tiles, num_waves, cap_tiles))
+        flat_ids = jnp.arange(n_local, dtype=jnp.int32)
+        top_sq, top_ids, _ = ivf_scan_kernel_call(
+            offs, qcodes, qf, qscales, r0, codes, corpus, flat_ids,
+            bscales, eps, scale, k=k, block_q=block_q, block_c=block_c,
+            block_d=block_d, cap_tiles=cap_tiles,
+            interpret=not on_tpu())
+        top_ids = jnp.where(top_ids >= 0, base + top_ids, -1)
+        top_sq, top_ids = hierarchical_topk(
+            top_sq, top_ids, tuple(reversed(axes)), k)
+        return jnp.sqrt(jnp.maximum(top_sq, 0.0)), top_ids
+
     if quant == "int8":
         return shard_map(
-            local_search_quant,
+            local_search_quant_fused if fused else local_search_quant,
             mesh=mesh,
             in_specs=(P(axes, None), P(axes, None), P(), P(), P(), P(), P()),
             out_specs=(P(), P()),

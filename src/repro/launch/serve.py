@@ -29,12 +29,20 @@ def main() -> None:
                          "(repro.quant) with budgeted exact refinement")
     ap.add_argument("--refine-per-wave", type=int, default=0,
                     help="exact refinements per wave in --quant int8 mode "
-                         "(0 = auto: 2k)")
+                         "(0 = autotune from the stage-1 bound band width); "
+                         "the fused megakernel route has no refine budget — "
+                         "it re-screens survivors exactly in-kernel — so "
+                         "this flag is inert there")
+    ap.add_argument("--fused", default="auto", choices=["auto", "on", "off"],
+                    help="route the --quant int8 wave scan through the fused "
+                         "wave-scan megakernel (auto: TPU only; 'on' forces "
+                         "interpret mode off-TPU — correct but slow)")
     args = ap.parse_args()
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
 
+    import dataclasses
     import time
 
     import jax
@@ -64,19 +72,51 @@ def main() -> None:
     c_rot = np.pad(np.asarray(est.rotate(jnp.asarray(corpus))),
                    ((0, 0), (0, d_pad - svc.dim)))
 
+    from repro.kernels.ops import on_tpu
+
     quant = None if args.quant == "none" else args.quant
-    _, shardings = search_input_specs(svc, mesh, quant=quant)
-    step = jax.jit(build_search_step(svc, mesh, quant=quant),
+    fused = on_tpu() if args.fused == "auto" else args.fused == "on"
+    refine_note = ""
+    if quant == "int8":
+        if fused:
+            # Megakernel route: per-BLOCK codes (one scale per Δd-dim
+            # block) feed the int8×int8 MXU product; padded dims land in
+            # an all-zero block (scale 0) and contribute nothing.
+            from repro.quant import fit_block_scales, quantize_block
+
+            bscales = fit_block_scales(jnp.asarray(c_rot), svc.delta_d)
+            codes = quantize_block(jnp.asarray(c_rot), bscales, svc.delta_d)
+            qc_codes, qc_scales = codes, bscales
+            refine_note = " fused=megakernel"
+            if args.refine_per_wave:
+                refine_note += (f" refine_per_wave={args.refine_per_wave}"
+                                "(inert: fused route re-screens exactly)")
+        else:
+            # Quantize the padded rotated corpus; padded dims get zero
+            # scales (max-abs 0), so they contribute nothing to bounds or
+            # distances.
+            from repro.quant import quantize_corpus
+
+            qc = quantize_corpus(jnp.asarray(c_rot))
+            qc_codes, qc_scales = qc.codes, qc.scales
+            if args.refine_per_wave == 0:
+                from repro.launch.annservice import autotune_refine_budget
+
+                budget, diag = autotune_refine_budget(
+                    qc.scales, c_rot[:4096], k=svc.k, wave=svc.wave)
+                svc = dataclasses.replace(svc, refine_per_wave=budget)
+                refine_note = (f" refine_per_wave={budget}(auto,"
+                               f"band={diag['band_width']:.3g},"
+                               f"in_band={diag['in_band_frac']:.4f})")
+            else:
+                refine_note = f" refine_per_wave={args.refine_per_wave}(fixed)"
+    _, shardings = search_input_specs(svc, mesh, quant=quant, fused=fused)
+    step = jax.jit(build_search_step(svc, mesh, quant=quant, fused=fused),
                    in_shardings=shardings)
     corpus_dev = jax.device_put(c_rot.astype(np.dtype(svc.dtype)), shardings[0])
     if quant == "int8":
-        # Quantize the padded rotated corpus; padded dims get zero scales
-        # (max-abs 0), so they contribute nothing to bounds or distances.
-        from repro.quant import quantize_corpus
-
-        qc = quantize_corpus(jnp.asarray(c_rot))
-        codes_dev = jax.device_put(np.asarray(qc.codes), shardings[1])
-        scales_dev = jax.device_put(np.asarray(qc.scales), shardings[2])
+        codes_dev = jax.device_put(np.asarray(qc_codes), shardings[1])
+        scales_dev = jax.device_put(np.asarray(qc_scales), shardings[2])
 
     # Variable-size requests flow through the dynamic batcher; the compiled
     # step always sees the fixed (query_batch, D) shape.
@@ -115,7 +155,8 @@ def main() -> None:
           f"requests={len(reqs)} rows={total_q} "
           f"batches={sched.stats['batches']} "
           f"pad_frac={sched.stats['padded_rows']/max(sched.stats['rows'],1):.2f} "
-          f"QPS={total_q/dt:.0f} recall@{svc.k}={np.mean(recalls):.3f}")
+          f"QPS={total_q/dt:.0f} recall@{svc.k}={np.mean(recalls):.3f}"
+          f"{refine_note}")
 
 
 if __name__ == "__main__":

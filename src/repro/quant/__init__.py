@@ -16,12 +16,16 @@ The matching Pallas kernel lives in ``repro.kernels.quant_dco`` (oracle in
 from repro.quant.scalar import (
     QuantConfig,
     QuantizedCorpus,
+    block_err_cum,
     cum_err_sq,
     dequantize,
+    fit_block_scales,
     fit_scales,
     lower_bound_sq,
     quantize,
+    quantize_block,
     quantize_corpus,
+    quantize_queries_block,
     upper_bound_sq,
 )
 from repro.quant.screen import (
@@ -38,7 +42,11 @@ from repro.quant.screen import (
 __all__ = [
     "QuantConfig",
     "QuantizedCorpus",
+    "block_err_cum",
     "cum_err_sq",
+    "fit_block_scales",
+    "quantize_block",
+    "quantize_queries_block",
     "dequantize",
     "fit_scales",
     "lower_bound_sq",

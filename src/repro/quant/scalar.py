@@ -45,6 +45,10 @@ __all__ = [
     "lower_bound_sq",
     "upper_bound_sq",
     "wants_quant",
+    "fit_block_scales",
+    "quantize_block",
+    "block_err_cum",
+    "quantize_queries_block",
 ]
 
 # int8 code range is symmetric [-127, 127] (the -128 code is unused so the
@@ -169,6 +173,78 @@ def wants_quant(quant, estimator_quant) -> bool:
     was passed an explicit policy ("int8" or a QuantConfig) or the estimator
     already carries one (build_estimator normalizes strings into configs)."""
     return estimator_quant is not None or quant not in (None, "none")
+
+
+# ---------------------------------------------------------------------------
+# Per-BLOCK scales (repro.kernels.ivf_scan): one scale per contiguous
+# ``block_d``-dim slice instead of one per dimension.  The coarser scale
+# grid costs a little precision on the early PCA dims, but it is what makes
+# a true int8×int8 MXU product possible: within a block the dequantization
+# multiplier is a single scalar, so  q'·o' = t_b·s_b·(qc·oc)  where qc·oc
+# accumulates in int32 on the MXU and the f32 multiply happens once per
+# (tile, block) — the per-dim path had to upcast every operand element to
+# f32 *before* the MXU.  Queries are quantized symmetrically with their own
+# per-(query, block) scales fitted from the query itself (never clips), so
+# the triangle-inequality error band
+#
+#     ||q - o||_d  >=  ||q' - o'||_d - E_c(d) - E_q(d)
+#
+# (primes = dequantized, E_c/E_q the corpus/query cumulative bands) keeps
+# the no-false-prune guarantee of the per-dim path.
+# ---------------------------------------------------------------------------
+
+
+def _num_blocks(dim: int, block_d: int) -> int:
+    if dim % block_d:
+        raise ValueError(f"dim {dim} not a multiple of block_d {block_d}")
+    return dim // block_d
+
+
+def fit_block_scales(rot_corpus: jax.Array, block_d: int) -> jax.Array:
+    """(S,) symmetric scales, one per block of ``block_d`` contiguous dims.
+
+    s_b = max |x_d| over the corpus and the block's dims, / 127 — in-corpus
+    values never clip, so the per-dim error bound s_b/2 holds everywhere in
+    the block (the bound that E_c(d) and the no-false-prune proof rest on).
+    All-zero blocks (e.g. zero padding) get scale 0: codes 0, exact.
+    """
+    x = jnp.abs(rot_corpus.astype(jnp.float32))
+    s = _num_blocks(x.shape[-1], block_d)
+    max_abs = jnp.max(x.reshape(-1, s, block_d), axis=(0, 2))
+    return (max_abs / _QMAX).astype(jnp.float32)
+
+
+def quantize_block(x: jax.Array, bscales: jax.Array, block_d: int) -> jax.Array:
+    """Round to int8 codes under per-block scales (broadcast to per-dim)."""
+    per_dim = jnp.repeat(bscales, block_d)
+    return quantize(x, per_dim)
+
+
+def block_err_cum(bscales: jax.Array, *, block_d: int) -> jax.Array:
+    """(S,) cumulative error band E(s) = sqrt(sum_{b<=s} block_d·(s_b/2)^2)
+    at each block checkpoint d = (s+1)·block_d (worst case s_b/2 per dim)."""
+    e2 = jnp.cumsum(block_d * (bscales.astype(jnp.float32) * 0.5) ** 2)
+    return jnp.sqrt(e2)
+
+
+def quantize_queries_block(q_rot: jax.Array, block_d: int):
+    """Quantize a query batch with per-(query, block) symmetric scales.
+
+    Returns (codes (Q, D) int8, qscales (Q, S) f32).  Scales are fitted from
+    each query's own block maxima, so queries never clip and the per-dim
+    error bound t_qb/2 holds — the query-side half of the fused kernel's
+    lower-bound band.
+    """
+    q = q_rot.astype(jnp.float32)
+    qn, dim = q.shape
+    s = _num_blocks(dim, block_d)
+    blocks = q.reshape(qn, s, block_d)
+    t = jnp.max(jnp.abs(blocks), axis=2) / _QMAX  # (Q, S)
+    safe = jnp.where(t > 0.0, t, 1.0)
+    codes = jnp.round(blocks / safe[:, :, None])
+    codes = jnp.where(t[:, :, None] > 0.0, codes, 0.0)
+    codes = jnp.clip(codes, -_QMAX, _QMAX).astype(jnp.int8)
+    return codes.reshape(qn, dim), t.astype(jnp.float32)
 
 
 def upper_bound_sq(dq_psum: jax.Array, ecum_sq: jax.Array) -> jax.Array:

@@ -69,6 +69,24 @@ _SCRIPT = textwrap.dedent("""
         f"quant serving recall {recall_q} vs fp {recall}")
     print("OK quant_search", recall_q)
 
+    # ---- 1c. fused megakernel serving route (interpret mode off-TPU) --------
+    from repro.quant import fit_block_scales, quantize_block
+    _, sh_f = search_input_specs(svc, mesh, quant="int8", fused=True)
+    step_f = jax.jit(build_search_step(svc, mesh, quant="int8", fused=True),
+                     in_shardings=sh_f)
+    bscales = fit_block_scales(jnp.asarray(c_rot), svc.delta_d)
+    bcodes = quantize_block(jnp.asarray(c_rot), bscales, svc.delta_d)
+    dists_f, ids_f = step_f(
+        jax.device_put(c_rot, sh_f[0]),
+        jax.device_put(np.asarray(bcodes), sh_f[1]),
+        jax.device_put(np.asarray(bscales), sh_f[2]),
+        jnp.asarray(q_rot), eps, scale, eps_lo)
+    ids_f = np.asarray(ids_f)
+    recall_f = np.mean([len(set(ids_f[i]) & set(gt[i])) / 10 for i in range(16)])
+    assert recall_f >= recall - 0.02, (
+        f"fused serving recall {recall_f} vs fp {recall}")
+    print("OK fused_search", recall_f)
+
     # ---- 2. hierarchical_topk == flat global top-k --------------------------
     rng = np.random.default_rng(0)
     local = np.sort(rng.random((8, 4, 6)).astype(np.float32), axis=2)  # dev,Q,K
@@ -126,6 +144,6 @@ def test_distributed_semantics():
     )
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
     for marker in ("OK distributed_search", "OK quant_search",
-                   "OK hierarchical_topk",
+                   "OK fused_search", "OK hierarchical_topk",
                    "OK compressed_allreduce", "OK elastic_restore"):
         assert marker in r.stdout
