@@ -13,6 +13,14 @@ import numpy as np
 
 from repro.core import build_estimator, exact_knn
 from repro.data.pipeline import synthetic_queries, synthetic_vectors
+# Canonical byte accounting, re-exported so every figure script counts the
+# same way the host engines (repro.quant.screen) and the fused-scan stats
+# (repro.index.ivf.FusedScanStats) do — no per-figure hand-rolled counters.
+from repro.quant.accounting import (  # noqa: F401  (re-export)
+    fetched_tile_bytes,
+    stage2_skip_rate,
+    two_stage_bytes,
+)
 
 CORPUS_N = 20000
 DIM = 96

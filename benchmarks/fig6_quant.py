@@ -17,7 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, estimator, fixture, host_tables, recall, record
+from benchmarks.common import (
+    emit, estimator, fixture, host_tables, recall, record, two_stage_bytes,
+)
 from repro.core.dco_host import knn_search_host
 from repro.quant import quantize_corpus
 from repro.quant.screen import knn_search_quant_host
@@ -42,7 +44,7 @@ def main():
             ids, _, stats = knn_search_host(
                 q_rot[qi], c_rot, k, dims, eps, scale, wave=256)
             got_f.append(ids)
-            bytes_f += 4 * int(stats["avg_dims"] * len(c_rot))
+            bytes_f += int(two_stage_bytes(0, stats["avg_dims"] * len(c_rot)))
         dt_f = time.perf_counter() - t0
 
         # quantized two-stage --------------------------------------------

@@ -60,11 +60,15 @@ def main():
          f"int8_dims_frac={st.avg_int8_dims/d_pad:.3f};"
          f"fp32_dims_frac={st.avg_fp_dims/d_pad:.3f};"
          f"bytes_per_q={st.bytes_per_query:.0f};"
+         f"fetched_bytes_per_q={st.fetched_bytes_per_query:.0f};"
+         f"s2_skip_rate={st.s2_skip_rate:.3f};"
          f"rows_per_q={st.rows_per_query:.0f}")
     record("kernel_ivf_fused@p8",
            int8_dims_frac=st.avg_int8_dims / d_pad,
            fp32_dims_frac=st.avg_fp_dims / d_pad,
            bytes_per_query=st.bytes_per_query,
+           fetched_bytes_per_query=st.fetched_bytes_per_query,
+           s2_skip_rate=st.s2_skip_rate,
            rows_per_query=st.rows_per_query)
 
 

@@ -40,7 +40,12 @@ from repro.core.dco import dco_screen_batch
 from repro.core.estimators import Estimator, build_estimator
 from repro.core.topk import merge_topk
 from repro.index.kmeans import kmeans
-from repro.kernels.ops import ivf_scan_kernel
+from repro.kernels.ops import fused_fetch_totals, ivf_scan_kernel
+from repro.quant.accounting import (
+    ID_BYTES,
+    fetched_tile_bytes,
+    stage2_fetch_report,
+)
 from repro.quant.scalar import (
     QuantizedCorpus,
     fit_block_scales,
@@ -353,13 +358,24 @@ def search_ivf(
 
 
 class FusedScanStats(NamedTuple):
-    """Per-batch accounting from the fused wave scan (host-side floats)."""
+    """Per-batch accounting from the fused wave scan (host-side floats).
+
+    ``bytes_per_query`` is the semantic dims-consumed quantity tracked
+    since PR 1 (comparable across the BENCH_dco.json trajectory); the
+    ``fetched_*``/``s2_*`` fields are DMA-granular — what HBM actually
+    shipped under the demand-paged kernel, where a candidate tile whose
+    stage-1 survivor count is zero never pays its fp32 block."""
 
     avg_fp_dims: float  # fp32 dims consumed per scanned row
     avg_int8_dims: float  # int8 dims consumed per scanned row
     rows_per_query: float  # candidate rows screened per query
     bytes_per_query: float  # 1 B/int8 dim + 4 B/fp32 dim, corpus bytes only
     passed_per_query: float  # rows surviving the full screen per query
+    s1_tiles_fetched: float = 0.0  # int8 candidate tiles DMA'd for stage 1
+    s2_slabs_total: float = 0.0  # fp32 slabs a non-paged pipeline ships
+    s2_slabs_fetched: float = 0.0  # fp32 slabs actually DMA'd on demand
+    s2_skip_rate: float = 0.0  # 1 - fetched/total (fetch elision)
+    fetched_bytes_per_query: float = 0.0  # DMA-granular HBM bytes / query
 
 
 def search_ivf_fused(
@@ -471,6 +487,20 @@ def search_ivf_fused(
     d_pad = index.flat_rot.shape[1]
     seed_bytes = (index.capacity * index.qbuckets.shape[2]
                   + 4 * k * d_pad) if seed_r else 0
+    # DMA-granular accounting: the demand-paged kernel reports the int8
+    # tiles and fp32 slabs it actually shipped from HBM (fetch counters
+    # broadcast per query tile; fused_fetch_totals stride-samples them
+    # losslessly).  A non-paged pipeline would ship every slab of every
+    # scanned tile — that is the skip-rate denominator.
+    s1_tiles, s2_slabs = fused_fetch_totals(st, block_q)
+    block_d = index.scan_block_d
+    fp_itemsize = jnp.dtype(index.flat_rot.dtype).itemsize
+    s2_fetched_b, _, s2_skip, s2_total = stage2_fetch_report(
+        s1_tiles, s2_slabs, block_c=block_c, d_pad=d_pad, block_d=block_d,
+        fp_bytes=fp_itemsize)
+    fetched = fetched_tile_bytes(
+        s1_tiles, block_c=block_c, dims=d_pad, bytes_per_dim=1,
+        id_bytes=ID_BYTES) + s2_fetched_b
     fused_stats = FusedScanStats(
         avg_fp_dims=float(st[:, 1].sum()) / rows,
         avg_int8_dims=float(st[:, 0].sum()) / rows,
@@ -478,5 +508,10 @@ def search_ivf_fused(
         bytes_per_query=(float(st[:, 0].sum()) + 4.0 * float(st[:, 1].sum())
                          ) / qn + seed_bytes,
         passed_per_query=float(st[:, 3].sum()) / qn,
+        s1_tiles_fetched=s1_tiles,
+        s2_slabs_total=s2_total,
+        s2_slabs_fetched=s2_slabs,
+        s2_skip_rate=s2_skip,
+        fetched_bytes_per_query=fetched / qn + seed_bytes,
     )
     return dists, ids, fused_stats

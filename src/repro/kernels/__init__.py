@@ -3,16 +3,20 @@
 dade_dco.py -- blocked partial-distance screen (the paper's Algorithm 1 as a
 tile-granular VMEM-resident kernel); quant_dco.py -- int8 lower-bound
 prefilter (stage 1 of the quantized two-stage screen, 1 byte/dim of HBM
-traffic); ivf_scan.py -- fused IVF wave-scan megakernel (gather-free bucket
-streaming + int8×int8 MXU prefilter + fp32 re-screen + on-device top-K);
-ops.py -- jit'd public wrappers with padding + CPU interpret fallback;
-ref.py -- pure-jnp oracles.
+traffic); ivf_scan.py -- demand-paged fused IVF wave-scan megakernel
+(gather-free bucket streaming, manually double-buffered int8 DMA, fp32
+slabs fetched only for tiles with stage-1 survivors, on-device top-K);
+tiles.py -- the per-tile stage/merge helpers every kernel and oracle
+shares; ops.py -- jit'd public wrappers with padding + CPU interpret
+fallback; ref.py -- pure-jnp oracles (fetch decisions included).
 """
 
 from repro.kernels.ops import (
     block_table,
     dco_screen_kernel,
+    fused_fetch_totals,
     ivf_scan_kernel,
+    min_block_q,
     on_tpu,
     quant_screen_kernel,
 )
@@ -21,7 +25,9 @@ from repro.kernels.ref import dade_dco_ref, ivf_scan_ref, quant_dco_ref
 __all__ = [
     "block_table",
     "dco_screen_kernel",
+    "fused_fetch_totals",
     "ivf_scan_kernel",
+    "min_block_q",
     "quant_screen_kernel",
     "on_tpu",
     "dade_dco_ref",

@@ -1,7 +1,10 @@
 """Pallas API compatibility shims.
 
-``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` upstream;
-resolve whichever this jax build provides so the kernels lower on both.
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` upstream,
+and the HBM-resident ("let the kernel page it manually") memory space moved
+from ``pltpu.TPUMemorySpace.ANY`` to ``pltpu.ANY``/``pltpu.MemorySpace.ANY``
+across releases; resolve whichever this jax build provides so the kernels
+lower on both.
 """
 
 from __future__ import annotations
@@ -10,4 +13,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
-__all__ = ["CompilerParams"]
+if hasattr(pltpu, "ANY"):
+    ANY_MEMSPACE = pltpu.ANY
+elif hasattr(pltpu, "TPUMemorySpace"):
+    ANY_MEMSPACE = pltpu.TPUMemorySpace.ANY
+else:  # pragma: no cover - newest spelling
+    ANY_MEMSPACE = pltpu.MemorySpace.ANY
+
+__all__ = ["CompilerParams", "ANY_MEMSPACE"]

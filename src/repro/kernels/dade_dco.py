@@ -34,6 +34,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
+from repro.kernels.tiles import dade_threshold, mxu_block_sq
 
 __all__ = ["dade_dco_kernel_call"]
 
@@ -73,19 +74,12 @@ def _kernel(
     def _block():
         q = q_ref[...].astype(jnp.float32)  # (QT, DB)
         c = c_ref[...].astype(jnp.float32)  # (CT, DB)
-        dot = jax.lax.dot_general(
-            q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )  # (QT, CT)
-        qn = jnp.sum(q * q, axis=1, keepdims=True)  # (QT, 1)
-        cn = jnp.sum(c * c, axis=1, keepdims=True).T  # (1, CT)
-        block_sq = jnp.maximum(qn + cn - 2.0 * dot, 0.0)
-        new_psum = psum[...] + block_sq
+        new_psum = psum[...] + mxu_block_sq(q, c)
         psum[...] = new_psum
 
-        eps_s = eps_ref[0, s]
         scale_s = scale_ref[0, s]
         est = new_psum * scale_s
-        thresh = (1.0 + eps_s) ** 2 * rsq_ref[...]  # (QT, 1) -> bcast
+        thresh = dade_threshold(eps_ref[0, s], rsq_ref[...])  # (QT, 1) -> bcast
         is_active = active[...] > 0.0
         is_last = s == num_blocks - 1
         reject = jnp.logical_and(is_active, est > thresh)

@@ -24,7 +24,35 @@ from repro.quant.scalar import cum_err_sq, quantize_queries_block
 __all__ = [
     "dco_screen_kernel", "quant_screen_kernel", "ivf_scan_kernel",
     "ivf_cap_tiles", "build_window_offsets", "block_table", "on_tpu",
+    "min_block_q", "fused_fetch_totals",
 ]
+
+# Minimum second-to-minor tile dimension (sublane count) per operand byte
+# width for COMPILED Mosaic lowering; interpret mode accepts anything.
+_SUBLANE_MIN = {1: 32, 2: 16, 4: 8}
+
+
+def min_block_q(dtype=jnp.int8) -> int:
+    """Minimum query-tile rows for compiled-mode lowering.
+
+    The fused kernel's narrowest operand sets the sublane floor: int8 tiles
+    must be at least (32, 128) on real TPUs, so any launch carrying int8
+    codes needs ``block_q >= min_block_q(jnp.int8) == 32``.  Tests use this
+    to auto-select a legal tile instead of hardcoding the constraint."""
+    return _SUBLANE_MIN.get(jnp.dtype(dtype).itemsize, 8)
+
+
+def fused_fetch_totals(stats, block_q: int):
+    """(s1_tiles_fetched, s2_slabs_fetched) totals from fused-scan stats.
+
+    The kernel broadcasts its tile-level DMA counters (stats columns 4-5,
+    see ``ivf_scan.STATS_COLS``) to every query row of the tile, so the
+    first row of each query tile carries the exact per-tile totals —
+    stride-sampling is lossless even after the wrapper crops pad queries
+    (each tile keeps at least its first row)."""
+    st = np.asarray(stats)
+    first = st[::block_q]
+    return float(first[:, 5].sum()), float(first[:, 4].sum())
 
 
 def ivf_cap_tiles(max_bucket: int, block_c: int, *, starts_aligned: bool) -> int:
@@ -40,22 +68,23 @@ def ivf_cap_tiles(max_bucket: int, block_c: int, *, starts_aligned: bool) -> int
 def build_window_offsets(window_starts, window_rows, *, block_c: int,
                          cap_tiles: int, n_pad: int):
     """(QT, P) bucket row starts/sizes -> (QT, P, cap_tiles) per-step tile
-    offsets for the fused kernel's scalar-prefetch index maps.
+    offsets for the fused kernel's manual DMA stream.
 
     Step t of a window points at its bucket's t-th candidate tile while
     t < span (the tiles the bucket actually occupies, round-down slack
-    included) and at the all-sentinel tail tile otherwise — short buckets
-    cost their own rows, not ``cap_tiles`` worth.  The flat layout's tail
-    padding guarantees the last tile holds only sentinel rows."""
+    included) and carries ``-1`` otherwise — the demand-paged kernel ships
+    nothing for those steps (the PR-2 BlockSpec pipeline re-fetched the
+    sentinel tail tile once per probe), so short buckets cost their own
+    rows, not ``cap_tiles`` worth."""
     starts = window_starts.astype(jnp.int32)
     rows = window_rows.astype(jnp.int32)
     base = starts // block_c
     span = (starts % block_c + rows + block_c - 1) // block_c  # tiles used
     t_idx = jnp.arange(cap_tiles, dtype=jnp.int32)[None, None, :]
-    sentinel_tile = n_pad // block_c - 1
-    offs = jnp.where(t_idx < span[:, :, None], base[:, :, None] + t_idx,
-                     sentinel_tile)
-    return jnp.clip(offs, 0, sentinel_tile)
+    max_tile = n_pad // block_c - 1
+    return jnp.where(t_idx < span[:, :, None],
+                     jnp.clip(base[:, :, None] + t_idx, 0, max_tile),
+                     jnp.int32(-1))
 
 _PAD_SENTINEL = 1e18  # huge-but-finite: pad rows prune at the first block
 
@@ -280,19 +309,37 @@ def ivf_scan_kernel(
     row→tile offset table.  ``window_starts[i, p]`` / ``window_rows[i, p]``
     are the flat row offset and size of the p-th bucket probed by query
     tile i; the grid reserves ``ivf_cap_tiles(max_bucket, block_c, ...)``
-    steps per window but short buckets redirect their out-of-span steps to
-    the sentinel tail (``build_window_offsets``), so each probe costs its
-    own bucket's rows.  ``starts_aligned`` declares that every window start
+    steps per window but short buckets mark their out-of-span steps -1
+    (``build_window_offsets``) and the kernel ships nothing for them, so
+    each probe costs its own bucket's rows.  ``starts_aligned`` declares that every window start
     is already a multiple of ``block_c`` (the aligned CSR build layout) —
     windows then cover exactly their bucket; otherwise one slack tile
     absorbs the round-down, and rows pulled in from a neighbouring cluster
     are real candidates (screened soundly, counted in the byte stats).
 
-    Returns (top_sq (Q, K) ascending, top_ids (Q, K), stats (Q, 4) f32 =
-    [int8 dims, fp32 dims, rows scanned, passed rows]), cropped to Q.
+    The fp32 corpus is handed to the kernel UNBLOCKED: the demand-paged
+    megakernel keeps it HBM-resident and fetches a (block_c, D) landing
+    block only for tiles with stage-1 survivors, so stats columns 4-5
+    (``ivf_scan.STATS_COLS``) count the fp32/int8 tiles actually DMA'd —
+    ``fused_fetch_totals`` aggregates them for byte accounting.
+
+    Returns (top_sq (Q, K) ascending, top_ids (Q, K), stats (Q, 6) f32 =
+    [int8 dims, fp32 dims, rows scanned, passed rows, s2 tiles fetched,
+    s1 tiles fetched]), cropped to Q.
     """
     if interpret is None:
         interpret = not on_tpu()
+    if not interpret and not use_ref and block_q < min_block_q(jnp.int8):
+        raise ValueError(
+            f"compiled lowering needs block_q >= {min_block_q(jnp.int8)} "
+            f"(int8 sublane minimum), got {block_q}; interpret mode accepts "
+            f"smaller tiles")
+    if not interpret and not use_ref and block_d % 128:
+        raise ValueError(
+            f"compiled lowering needs block_d % 128 == 0 (the demand-paged "
+            f"stage-2 slab DMA must land on lane-aligned VMEM windows), got "
+            f"{block_d}; build the index with scan_block_d=128 or run "
+            f"interpret mode")
     qn, dim = q_rot.shape
     n_pad, d_pad = flat_rot.shape
     if d_pad % block_d or bscales.shape[0] != d_pad // block_d:

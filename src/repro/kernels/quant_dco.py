@@ -36,6 +36,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
+from repro.kernels.tiles import dade_threshold, lb_penalized, mxu_block_sq
 
 __all__ = ["quant_dco_kernel_call"]
 
@@ -80,20 +81,12 @@ def _kernel(
     def _block():
         q = q_ref[...].astype(jnp.float32)  # (QT, DB)
         cf = code_ref[...].astype(jnp.float32) * sc_ref[...]  # dequantize in VMEM
-        dot = jax.lax.dot_general(
-            q, cf, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )  # (QT, CT)
-        qn = jnp.sum(q * q, axis=1, keepdims=True)  # (QT, 1)
-        cn = jnp.sum(cf * cf, axis=1, keepdims=True).T  # (1, CT)
-        block_sq = jnp.maximum(qn + cn - 2.0 * dot, 0.0)
-        new_psum = psum[...] + block_sq
+        new_psum = psum[...] + mxu_block_sq(q, cf)
         psum[...] = new_psum
 
-        e_s = ecum_ref[0, s]
-        root = jnp.maximum(jnp.sqrt(new_psum) - e_s, 0.0)
-        lb = root * root * (1.0 - slack)
-        est = lb * scale_ref[0, s]
-        thresh = (1.0 + eps_ref[0, s]) ** 2 * rsq_ref[...]  # (QT, 1) -> bcast
+        est = lb_penalized(new_psum, ecum_ref[0, s], scale_ref[0, s],
+                           slack=slack)
+        thresh = dade_threshold(eps_ref[0, s], rsq_ref[...])  # (QT, 1) -> bcast
         is_active = active[...] > 0.0
         is_last = s == num_blocks - 1
         # lb <= exact partial distance, so rejecting is sound at EVERY

@@ -8,10 +8,14 @@ tests can assert elementwise equality, not just statistical agreement.
 (``quant_dco.quant_dco_kernel_call``): dequantize-then-decompose, identical
 lower-bound formula and retire rules.  ``ivf_scan_ref`` replays the fused
 IVF wave-scan megakernel (``ivf_scan.ivf_scan_kernel_call``) grid step by
-grid step *with the kernel's own tile helpers*, so parity is structural;
-its optional trace exposes the per-wave frozen thresholds and pass masks
-the megakernel keeps in VMEM scratch, which the tests replay against
-``dco_screen_batch``.
+grid step *with the kernel's own tile helpers* (``repro.kernels.tiles``),
+so parity is structural; it also models the demand-paged memory behaviour —
+the stage-1 same-offset DMA elision and the stage-2 fetch that only happens
+when the stage-1 survivor count is nonzero — so the fetch counters in
+``stats`` are asserted tile-by-tile, not just the screen results.  Its
+optional trace exposes the per-wave frozen thresholds, pass masks, and
+fetch decisions the megakernel keeps in VMEM scratch, which the tests
+replay against ``dco_screen_batch``.
 """
 
 from __future__ import annotations
@@ -20,6 +24,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.tiles import dade_threshold, lb_penalized
 
 __all__ = ["dade_dco_ref", "quant_dco_ref", "ivf_scan_ref"]
 
@@ -48,7 +54,7 @@ def dade_dco_ref(
     psum = jnp.cumsum(block_sq, axis=0)  # (S, Q, C)
 
     est_all = psum * scale[:, None, None]
-    thresh = (1.0 + eps[:, None, None]) ** 2 * r_sq[None, :, None]
+    thresh = dade_threshold(eps[:, None, None], r_sq[None, :, None])
     reject = est_all > thresh
     # Last block never "rejects" — survivors retire exact there.
     reject = reject.at[-1].set(False)
@@ -97,9 +103,9 @@ def quant_dco_ref(
     block_sq = jnp.maximum(qnorm + cnorm - 2.0 * dot, 0.0)
     psum = jnp.cumsum(block_sq, axis=0)  # (S, Q, C)
 
-    root = jnp.maximum(jnp.sqrt(psum) - ecum[:, None, None], 0.0)
-    est_all = root * root * (1.0 - slack) * scale[:, None, None]
-    thresh = (1.0 + eps[:, None, None]) ** 2 * r_sq[None, :, None]
+    est_all = lb_penalized(
+        psum, ecum[:, None, None], scale[:, None, None], slack=slack)
+    thresh = dade_threshold(eps[:, None, None], r_sq[None, :, None])
     # Rejecting is sound at every checkpoint, the last included.
     reject = est_all > thresh
 
@@ -138,17 +144,31 @@ def ivf_scan_ref(
     slack: float = 1e-4,
     return_trace: bool = False,
 ):
-    """Oracle for the fused IVF wave-scan megakernel.
+    """Oracle for the demand-paged fused IVF wave-scan megakernel.
 
     Pure-jnp replay of the (q_tiles, P, cap_tiles) grid using the kernel's
-    own ``stage1_tile`` / ``stage2_tile`` / ``merge_topk_tile`` helpers and
-    the same scratch-carry semantics (threshold frozen per tile, tightened
-    after the merge).  With ``return_trace`` additionally returns a list of
-    per-(tile, probe, ctile) records exposing the frozen r², the scanned
-    window, and the stage-1/stage-2 masks — the state the kernel keeps in
-    VMEM — so tests can replay each wave against ``dco_screen_batch``.
+    own ``repro.kernels.tiles`` helpers and the same scratch-carry semantics
+    (threshold frozen per tile, tightened after the merge).  The memory
+    behaviour of the manual pipeline is modelled exactly:
+
+      * steps with offset -1 (out-of-span window tail) are skipped — no
+        DMA, no screen, no stats;
+      * a real step whose offset equals the previous step's re-uses the
+        landed int8 buffer (``s1_tiles_fetched`` counts only fresh
+        offsets); and
+      * fp32 slabs are "fetched" per ``tiles.stage2_need`` — the first iff
+        the stage-1 survivor count is nonzero, later ones only while a
+        valid candidate is still active (``s2_slabs_fetched``) — the
+        elision the demand-paged kernel performs in hardware.
+
+    With ``return_trace`` additionally returns a list of per-(tile, probe,
+    ctile) records for the real steps, exposing the frozen r², the scanned
+    window, the stage-1/stage-2 masks, and the fetch decisions (``alive``,
+    ``fetched``, ``fresh``, ``slabs``) — the state the kernel keeps in
+    VMEM/SMEM — so tests can replay each wave against ``dco_screen_batch``
+    and assert that no tile with survivors is ever elided.
     """
-    from repro.kernels.ivf_scan import (
+    from repro.kernels.tiles import (
         dup_mask, merge_topk_tile, stage1_tile, stage2_tile,
     )
 
@@ -164,10 +184,15 @@ def ivf_scan_ref(
         t_sq = jnp.full((block_q, k), jnp.inf)
         t_ids = jnp.full((block_q, k), -1, jnp.int32)
         rsq = r0_sq[qs].reshape(-1, 1).astype(jnp.float32)
-        st = jnp.zeros((block_q, 4), jnp.float32)
+        st = jnp.zeros((block_q, 6), jnp.float32)
+        prev_off = None
         for p in range(num_probes):
             for t in range(cap_tiles):
                 off = int(tile_offs[i, p, t])
+                fresh = off >= 0 and (prev_off is None or off != prev_off)
+                prev_off = off
+                if off < 0:
+                    continue  # skipped step: the kernel ships nothing
                 rows = slice(off * block_c, (off + 1) * block_c)
                 ids = flat_ids[rows].reshape(1, -1)
                 valid = ids >= 0
@@ -181,26 +206,35 @@ def ivf_scan_ref(
                 nvalid = jnp.broadcast_to(
                     jnp.sum(validf, axis=1, keepdims=True), d8_sum.shape)
                 zero = jnp.zeros_like(d8_sum)
-                st = st + jnp.concatenate([d8_sum, zero, nvalid, zero], axis=1)
+                one = jnp.ones_like(d8_sum)
+                s1f = one if fresh else zero
+                st = st + jnp.concatenate(
+                    [d8_sum, zero, nvalid, zero, zero, s1f], axis=1)
                 alive = int(jnp.sum((active8 & valid).astype(jnp.int32)))
                 rec = dict(tile=i, probe=p, ctile=t, row_start=off * block_c,
                            ids=ids[0], rsq=rsq_frozen[:, 0], active8=active8,
-                           valid=valid[0])
+                           valid=valid[0], alive=alive, fetched=alive > 0,
+                           fresh=fresh, slabs=0.0)
                 if alive > 0:
-                    exact_sq, passed, d32 = stage2_tile(
+                    # The demand-paged kernel ships fp32 slabs only here,
+                    # and only while stage2_need keeps asking for them.
+                    exact_sq, passed, d32, slabs = stage2_tile(
                         q_rot[qs], flat_rot[rows], eps, scale, rsq_frozen,
-                        active8, block_d=block_d,
+                        active8, valid, block_d=block_d,
                     )
                     ok = passed & valid
                     d32_sum = jnp.sum(d32 * validf, axis=1, keepdims=True)
                     npass = jnp.sum(ok.astype(jnp.float32), axis=1, keepdims=True)
                     z = jnp.zeros_like(d32_sum)
-                    st = st + jnp.concatenate([z, d32_sum, z, npass], axis=1)
+                    slabs_col = jnp.broadcast_to(slabs, d32_sum.shape)
+                    st = st + jnp.concatenate(
+                        [z, d32_sum, z, npass, slabs_col, z], axis=1)
                     dup = dup_mask(ids, t_ids, k=k)
                     new_sq = jnp.where(ok & ~dup, exact_sq, jnp.inf)
                     t_sq, t_ids = merge_topk_tile(t_sq, t_ids, new_sq, ids, k=k)
                     rsq = jnp.minimum(rsq, t_sq[:, k - 1:k])
-                    rec.update(passed=passed, exact_sq=exact_sq)
+                    rec.update(passed=passed, exact_sq=exact_sq,
+                               slabs=float(slabs))
                 else:
                     rec.update(passed=jnp.zeros_like(active8), exact_sq=None)
                 if return_trace:

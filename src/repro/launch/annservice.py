@@ -29,7 +29,12 @@ from repro.launch.mesh import shard_map
 from repro.quant.scalar import cum_err_sq
 from repro.distributed.collectives import hierarchical_topk
 
-__all__ = ["build_search_step", "search_input_specs", "autotune_refine_budget"]
+__all__ = ["build_search_step", "search_input_specs", "autotune_refine_budget",
+           "FUSED_BLOCK_C"]
+
+# Candidate-tile rows of the fused megakernel route; serve.py's fetch
+# report normalizes its per-wave figures with the same constant.
+FUSED_BLOCK_C = 128
 
 
 def autotune_refine_budget(scales, sample_rot, *, k: int, wave: int,
@@ -110,7 +115,8 @@ def search_input_specs(svc: ServiceConfig, mesh, *, quant: str | None = None,
 def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
                       seed_waves: int = 1, quant: str | None = None,
                       refine_per_wave: int | None = None,
-                      fused: bool | None = None):
+                      fused: bool | None = None,
+                      with_stats: bool = False):
     """Returns search_step(corpus_rot, queries_rot, eps, scale, eps_lo)
     -> (dists, ids); with ``quant="int8"``:
     search_step(corpus_rot, corpus_q, qscales, queries_rot, eps, scale,
@@ -137,6 +143,12 @@ def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
     (None): megakernel on TPU, jnp wave scan elsewhere (the kernel runs
     interpret mode off-TPU — correct but slow, so opt in explicitly from
     tests).
+
+    ``with_stats`` (fused route only) appends a third output: a replicated
+    (6,) f32 vector of the megakernel's scan counters summed over shards
+    and queries (``repro.kernels.ivf_scan.STATS_COLS`` order) — the serving
+    driver turns columns 4-5 into the fetched-vs-skipped stage-2 byte
+    report per wave.
     """
     from repro.kernels.ops import on_tpu
 
@@ -366,6 +378,12 @@ def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
         block_q = 32 if on_tpu() else 8
         if q % block_q:
             raise ValueError(f"query_batch {q} % block_q {block_q} != 0")
+        if on_tpu() and block_d % 128:
+            raise ValueError(
+                f"fused TPU serving needs delta_d % 128 == 0 (demand-paged "
+                f"stage-2 slab DMA lands lane-aligned), got {block_d}; "
+                f"configure ServiceConfig(delta_d=128) or route "
+                f"fused=False")
 
         r0 = seed_rsq(corpus, queries, eps) if two_phase else jnp.full(
             (q,), jnp.inf)
@@ -373,7 +391,7 @@ def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
         qcodes, qscales = quantize_queries_block(qf, block_d)
         q_tiles = q // block_q
         num_waves = n_local // wave
-        block_c = 128
+        block_c = FUSED_BLOCK_C
         cap_tiles = wave // block_c
         base_tiles = jnp.arange(num_waves, dtype=jnp.int32) * cap_tiles
         t_idx = jnp.arange(cap_tiles, dtype=jnp.int32)
@@ -381,7 +399,7 @@ def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
             (base_tiles[None, :, None] + t_idx[None, None, :]),
             (q_tiles, num_waves, cap_tiles))
         flat_ids = jnp.arange(n_local, dtype=jnp.int32)
-        top_sq, top_ids, _ = ivf_scan_kernel_call(
+        top_sq, top_ids, stats = ivf_scan_kernel_call(
             offs, qcodes, qf, qscales, r0, codes, corpus, flat_ids,
             bscales, eps, scale, k=k, block_q=block_q, block_c=block_c,
             block_d=block_d, cap_tiles=cap_tiles,
@@ -389,18 +407,36 @@ def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
         top_ids = jnp.where(top_ids >= 0, base + top_ids, -1)
         top_sq, top_ids = hierarchical_topk(
             top_sq, top_ids, tuple(reversed(axes)), k)
-        return jnp.sqrt(jnp.maximum(top_sq, 0.0)), top_ids
+        dists = jnp.sqrt(jnp.maximum(top_sq, 0.0))
+        if not with_stats:
+            return dists, top_ids
+        # Tile-level fetch counters (cols 4-5) are broadcast to every query
+        # row of a tile; stride-sample the first row per tile (lossless)
+        # before summing, then reduce across shards.
+        scan = jnp.concatenate([
+            jnp.sum(stats[:, :4], axis=0),
+            jnp.sum(stats[::block_q, 4:], axis=0),
+        ])
+        for ax in axes:
+            scan = jax.lax.psum(scan, ax)
+        return dists, top_ids, scan
 
     if quant == "int8":
+        if with_stats and not fused:
+            raise ValueError(
+                "with_stats needs the fused megakernel route (fused=True): "
+                "only the demand-paged kernel reports fetch counters")
         return shard_map(
             local_search_quant_fused if fused else local_search_quant,
             mesh=mesh,
             in_specs=(P(axes, None), P(axes, None), P(), P(), P(), P(), P()),
-            out_specs=(P(), P()),
+            out_specs=(P(), P(), P()) if with_stats else (P(), P()),
             check_vma=False,
         )
     if quant not in (None, "none"):
         raise ValueError(f"unknown quant mode: {quant!r}")
+    if with_stats:
+        raise ValueError("with_stats needs quant='int8' with fused=True")
     return shard_map(
         local_search,
         mesh=mesh,

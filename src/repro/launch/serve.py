@@ -110,8 +110,12 @@ def main() -> None:
                                f"in_band={diag['in_band_frac']:.4f})")
             else:
                 refine_note = f" refine_per_wave={args.refine_per_wave}(fixed)"
+    # The demand-paged megakernel reports its fetch counters; surface the
+    # fetched-vs-skipped stage-2 bytes in the serve report on that route.
+    with_stats = quant == "int8" and fused
     _, shardings = search_input_specs(svc, mesh, quant=quant, fused=fused)
-    step = jax.jit(build_search_step(svc, mesh, quant=quant, fused=fused),
+    step = jax.jit(build_search_step(svc, mesh, quant=quant, fused=fused,
+                                     with_stats=with_stats),
                    in_shardings=shardings)
     corpus_dev = jax.device_put(c_rot.astype(np.dtype(svc.dtype)), shardings[0])
     if quant == "int8":
@@ -122,8 +126,14 @@ def main() -> None:
     # step always sees the fixed (query_batch, D) shape.
     from repro.runtime.scheduler import BatchScheduler
 
+    scan_totals = np.zeros((6,), np.float64)
+
     def fixed_step(batch_np):
-        if quant == "int8":
+        if with_stats:
+            d, i, st = step(corpus_dev, codes_dev, scales_dev,
+                            jnp.asarray(batch_np), eps, scale, eps_lo)
+            scan_totals[:] += np.asarray(st, np.float64)
+        elif quant == "int8":
             d, i = step(corpus_dev, codes_dev, scales_dev,
                         jnp.asarray(batch_np), eps, scale, eps_lo)
         else:
@@ -151,12 +161,31 @@ def main() -> None:
         recalls.append(np.mean([
             len(set(ids[i]) & set(gt[i])) / svc.k for i in range(len(gt))]))
     total_q = sum(len(g) for g in gts)
+    fetch_note = ""
+    if with_stats:
+        # Demand-paged stage 2: every scanned wave tile ships its int8
+        # block; fp32 moves in (128, Δd) slabs fetched only while stage 2
+        # still has active candidates.  A serving wave spans
+        # wave // 128 candidate tiles, so per-wave figures divide the tile
+        # counters accordingly.
+        from repro.launch.annservice import FUSED_BLOCK_C
+        from repro.quant.accounting import stage2_fetch_report
+
+        s1_tiles, s2_slabs = scan_totals[5], scan_totals[4]
+        fetched, skipped, skip, _ = stage2_fetch_report(
+            s1_tiles, s2_slabs, block_c=FUSED_BLOCK_C, d_pad=d_pad,
+            block_d=svc.delta_d, fp_bytes=np.dtype(svc.dtype).itemsize)
+        waves = max(s1_tiles / (svc.wave // FUSED_BLOCK_C), 1.0)
+        fetch_note = (
+            f" s2_fetched_B_per_wave={fetched/waves:.0f}"
+            f" s2_skipped_B_per_wave={skipped/waves:.0f}"
+            f" s2_skip_rate={skip:.3f}")
     print(f"method={args.method} quant={args.quant} devices={n_dev} corpus={n} "
           f"requests={len(reqs)} rows={total_q} "
           f"batches={sched.stats['batches']} "
           f"pad_frac={sched.stats['padded_rows']/max(sched.stats['rows'],1):.2f} "
           f"QPS={total_q/dt:.0f} recall@{svc.k}={np.mean(recalls):.3f}"
-          f"{refine_note}")
+          f"{refine_note}{fetch_note}")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,9 @@ scalar — per-dimension symmetric int8 encoding of the rotated corpus with
 screen — the two-stage screen: int8 lower-bound prefilter feeding the fp32
   DADE hypothesis-test screen (no false prunes — bit-identical ``passed``),
   plus host engines with honest byte accounting.
+accounting — the canonical byte accounting (semantic dims-consumed and
+  DMA-granular fetched bytes) shared by the host engines, the fused-scan
+  stats, and the benchmark figures.
 
 The matching Pallas kernel lives in ``repro.kernels.quant_dco`` (oracle in
 ``repro.kernels.ref``); index/serving integration in ``repro.index.*`` and
@@ -13,6 +16,11 @@ The matching Pallas kernel lives in ``repro.kernels.quant_dco`` (oracle in
 
 # NOTE: scalar must import before screen (screen -> repro.core -> estimators
 # -> quant.scalar; keeping scalar first makes that chain re-entrant).
+from repro.quant.accounting import (
+    fetched_tile_bytes,
+    stage2_skip_rate,
+    two_stage_bytes,
+)
 from repro.quant.scalar import (
     QuantConfig,
     QuantizedCorpus,
@@ -61,4 +69,7 @@ __all__ = [
     "quant_lb_screen",
     "two_stage_screen",
     "two_stage_screen_host",
+    "two_stage_bytes",
+    "fetched_tile_bytes",
+    "stage2_skip_rate",
 ]

@@ -1,0 +1,82 @@
+"""Canonical DCO byte accounting — the single source of truth.
+
+Every DADE result in this repo is ultimately a bytes-per-query claim (the
+paper's DCOs are memory-bound: the win is bytes *not read*).  Three
+consumers used to hand-roll their own counters — the host two-stage engines
+(``repro.quant.screen``), fig6, and fig7 — which is exactly how accounting
+definitions drift.  This module owns both accounting regimes:
+
+  * **semantic (dims-consumed)** — bytes implied by the dimensions each
+    row's screen actually consumed before retiring (1 B/int8 dim,
+    4 B/fp32 dim).  This is what the compaction host engines physically
+    read, and the PR-1/PR-2 trajectory quantity in ``BENCH_dco.json``.
+  * **fetched (DMA-granular)** — bytes HBM actually shipped, at the
+    granularities the demand-paged megakernel moves data in: every scanned
+    candidate tile pays its full int8 block (plus the id stream), and fp32
+    moves in (block_c, block_d) slabs fetched only while stage 2 still has
+    valid active candidates.  The stage-2 skip rate is the fraction of
+    slabs (out of tiles × slabs-per-tile) whose fetch was elided.
+
+``benchmarks.common`` re-exports these helpers for the figure scripts; the
+host engines import them directly (src must not depend on benchmarks).
+"""
+
+from __future__ import annotations
+
+INT8_BYTES = 1   # stage-1 code stream, bytes per dimension
+FP32_BYTES = 4   # stage-2 exact rows, bytes per dimension
+ID_BYTES = 4     # per-row id stream accompanying each scanned tile
+
+__all__ = [
+    "INT8_BYTES", "FP32_BYTES", "ID_BYTES",
+    "two_stage_bytes", "fetched_tile_bytes", "stage2_skip_rate",
+    "stage2_fetch_report",
+]
+
+
+def two_stage_bytes(int8_dims, fp_dims, *, int8_bytes: int = INT8_BYTES,
+                    fp_bytes: int = FP32_BYTES):
+    """Semantic (dims-consumed) bytes of a two-stage screen.
+
+    ``int8_dims`` / ``fp_dims`` are totals of dimensions consumed (arrays
+    or scalars); a pure-fp32 screen is ``two_stage_bytes(0, fp_dims)``.
+    """
+    return int8_dims * int8_bytes + fp_dims * fp_bytes
+
+
+def fetched_tile_bytes(blocks, *, block_c: int, dims: int,
+                       bytes_per_dim: int, id_bytes: int = 0):
+    """DMA-granular bytes of ``blocks`` fetched (block_c, dims) blocks.
+
+    For stage-1 tiles ``dims`` is the full padded dimension; for stage-2
+    slabs it is the kernel's ``block_d``.  ``id_bytes`` adds the per-row id
+    stream (int32) that rides along with stage-1 tiles; stage-2 fp32
+    fetches carry no ids.
+    """
+    return blocks * block_c * (dims * bytes_per_dim + id_bytes)
+
+
+def stage2_skip_rate(s2_slabs_fetched, s2_slabs_total) -> float:
+    """Fraction of fp32 slabs (tiles × slabs-per-tile) never fetched."""
+    if s2_slabs_total <= 0:
+        return 0.0
+    return max(0.0, 1.0 - float(s2_slabs_fetched) / float(s2_slabs_total))
+
+
+def stage2_fetch_report(s1_tiles, s2_slabs, *, block_c: int, d_pad: int,
+                        block_d: int, fp_bytes: int = FP32_BYTES):
+    """(fetched_bytes, skipped_bytes, skip_rate, slabs_total) of the
+    stage-2 slab stream.
+
+    One place turns the kernel's DMA counters (int8 tiles fetched, fp32
+    slabs fetched) into the fetched-vs-skipped stage-2 byte report, with
+    the repeated-step guard: a non-fresh step can re-fetch slabs without
+    adding an s1 tile, so the total never drops below the fetched count.
+    """
+    s2_total = max(s1_tiles * (d_pad // block_d), s2_slabs)
+    fetched = fetched_tile_bytes(
+        s2_slabs, block_c=block_c, dims=block_d, bytes_per_dim=fp_bytes)
+    skipped = fetched_tile_bytes(
+        s2_total - s2_slabs, block_c=block_c, dims=block_d,
+        bytes_per_dim=fp_bytes)
+    return fetched, skipped, stage2_skip_rate(s2_slabs, s2_total), s2_total

@@ -37,6 +37,7 @@ import numpy as np
 from repro.core.calibration import EpsilonTable
 from repro.core.dco import dco_screen_batch
 from repro.core.dco_host import dco_screen_host
+from repro.quant.accounting import two_stage_bytes
 from repro.quant.scalar import (
     DEFAULT_SLACK,
     QuantizedCorpus,
@@ -156,8 +157,14 @@ def two_stage_screen(
 
 
 def bytes_scanned(res: QuantScreenResult, *, fp_bytes: int = 4) -> jax.Array:
-    """Corpus bytes touched per (query, candidate): int8 stage + fp stage."""
-    return res.lb_dims.astype(jnp.int64) + res.dims_used.astype(jnp.int64) * fp_bytes
+    """Corpus bytes touched per (query, candidate): int8 stage + fp stage.
+
+    Delegates to the canonical accounting (``repro.quant.accounting``) so
+    the jnp screen, the host engines, and the benchmarks agree by
+    construction."""
+    return two_stage_bytes(res.lb_dims.astype(jnp.int64),
+                           res.dims_used.astype(jnp.int64),
+                           fp_bytes=fp_bytes)
 
 
 class QuantSearchStats(NamedTuple):
@@ -271,13 +278,13 @@ def two_stage_screen_host(
 
     active_idx = np.arange(c)
     psum = np.zeros((c,), np.float32)
-    bytes_total = 0
+    int8_dims_read = 0
     prev_d = 0
     for s in range(s_count):
         d = int(dims[s])
         blk = codes[active_idx, prev_d:d].astype(np.float32) * scales[prev_d:d] - q_rot[prev_d:d]
         psum[active_idx] += np.einsum("cd,cd->c", blk, blk)
-        bytes_total += blk.size  # 1 byte per int8 dim read
+        int8_dims_read += blk.size  # one int8 code per dim read
         lb = np.maximum(np.sqrt(np.maximum(psum[active_idx], 0.0)) - ecum[s], 0.0) ** 2
         lb *= (1.0 - slack) * float(scale[s])
         thresh = (1.0 + float(eps[s])) ** 2 * r_sq
@@ -298,10 +305,10 @@ def two_stage_screen_host(
         est_sq[active_idx] = ref.est_sq
         passed[active_idx] = ref.passed
         dims_used[active_idx] = ref.dims_used
-        bytes_total += 4 * int(ref.dims_used.sum())
     return HostQuantResult(
         est_sq=est_sq, passed=passed, dims_used=dims_used, lb_dims=lb_dims,
-        bytes_scanned=bytes_total,
+        bytes_scanned=int(two_stage_bytes(int8_dims_read,
+                                          int(dims_used.sum()))),
     )
 
 
