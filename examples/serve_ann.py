@@ -1,11 +1,17 @@
 """End-to-end driver (the paper's kind is serving): a batched DADE vector
-search service over a device-sharded corpus, with fault-tolerant index
-persistence and request batching.
+search service over a device-sharded *int8-quantized* corpus, with
+fault-tolerant index persistence and request batching.
 
     PYTHONPATH=src python examples/serve_ann.py --devices 8 --requests 5
 
 Uses the same ``search_step`` the multi-pod dry-run lowers at 512 chips,
-scaled to host devices (forced via XLA_FLAGS before jax import).
+scaled to host devices (forced via XLA_FLAGS before jax import).  The
+corpus is served through the quantized two-stage route (``quant="int8"``:
+1 byte/dim wave streams + a band-width-autotuned exact-refine budget); on
+TPU the step routes through the fused wave-scan megakernel
+(``--fused auto``), off-TPU it runs the sharded jnp wave scan.  CI runs
+this file in its smoke step; the recall assert at the bottom is the
+contract.
 """
 import argparse
 import os
@@ -19,6 +25,9 @@ ap.add_argument("--corpus-per-device", type=int, default=16384)
 ap.add_argument("--dim", type=int, default=96)
 ap.add_argument("--k", type=int, default=10)
 ap.add_argument("--batch", type=int, default=64)
+ap.add_argument("--fused", default="auto", choices=["auto", "on", "off"],
+                help="route the int8 wave scan through the fused megakernel "
+                     "(auto: TPU only; interpret mode off-TPU is slow)")
 args = ap.parse_args()
 
 os.environ.setdefault(
@@ -45,7 +54,8 @@ def main():
     mesh = make_mesh_compat((n_dev,), ("data",))
     svc = ServiceConfig(
         corpus_per_device=args.corpus_per_device, dim=args.dim,
-        query_batch=args.batch, k=args.k, delta_d=32, wave=4096)
+        query_batch=args.batch, k=args.k, delta_d=32, wave=4096,
+        quant="int8")
 
     n = n_dev * svc.corpus_per_device
     print(f"[ingest] corpus {n}x{svc.dim} over {n_dev} devices")
@@ -56,21 +66,51 @@ def main():
     c_rot = np.asarray(est.rotate(jnp.asarray(corpus)))
     c_rot = np.pad(c_rot, ((0, 0), (0, d_pad - svc.dim)))
 
-    # persist the index (transform + rotated corpus) like a real service
+    from repro.kernels.ops import on_tpu
+    from repro.launch.annservice import autotune_refine_budget
+
+    fused = on_tpu() if args.fused == "auto" else args.fused == "on"
+    if fused:
+        # Megakernel route: per-BLOCK int8 codes feed the int8×int8 MXU
+        # prefilter; survivors re-screen exactly in-kernel.
+        from repro.quant import fit_block_scales, quantize_block
+
+        qscales = fit_block_scales(jnp.asarray(c_rot), svc.delta_d)
+        codes = quantize_block(jnp.asarray(c_rot), qscales, svc.delta_d)
+        print("[ingest] int8 per-block codes (fused megakernel route)")
+    else:
+        # Sharded jnp wave scan: per-dim int8 codes + an exact-refine
+        # budget autotuned from the quantization band width.
+        from repro.quant import quantize_corpus
+
+        qc = quantize_corpus(jnp.asarray(c_rot))
+        codes, qscales = qc.codes, qc.scales
+        budget, diag = autotune_refine_budget(
+            qc.scales, c_rot[:4096], k=svc.k, wave=svc.wave)
+        svc = dataclasses.replace(svc, refine_per_wave=budget)
+        print(f"[ingest] int8 per-dim codes, refine budget {budget} "
+              f"(band width {diag['band_width']:.3g})")
+
+    # persist the index (transform + codes + rotated corpus) like a real
+    # service — the int8 mirror is part of the servable state.
     ckpt = CheckpointManager("/tmp/dade_index", async_save=False, keep=1)
     ckpt.save(0, {"basis": est.transform.basis, "eps": eps,
-                  "scale": scale, "eps_lo": eps_lo})
+                  "scale": scale, "eps_lo": eps_lo,
+                  "qscales": jnp.asarray(qscales)})
 
-    (corpus_sds, *_), shardings = search_input_specs(
-        dataclasses.replace(svc, dim=d_pad - 2 * 0), mesh)
-    step = jax.jit(build_search_step(svc, mesh), in_shardings=shardings)
+    _, shardings = search_input_specs(svc, mesh, quant="int8", fused=fused)
+    step = jax.jit(build_search_step(svc, mesh, quant="int8", fused=fused),
+                   in_shardings=shardings)
 
     corpus_dev = jax.device_put(c_rot, shardings[0])
+    codes_dev = jax.device_put(np.asarray(codes), shardings[1])
+    scales_dev = jax.device_put(np.asarray(qscales), shardings[2])
     print("[serve] warmup compile...")
     q0 = synthetic_queries(svc.query_batch, svc.dim, corpus, seed=99)
     q_rot = np.pad(np.asarray(est.rotate(jnp.asarray(q0))),
                    ((0, 0), (0, d_pad - svc.dim)))
-    step(corpus_dev, jnp.asarray(q_rot), eps, scale, eps_lo)[0].block_until_ready()
+    step(corpus_dev, codes_dev, scales_dev, jnp.asarray(q_rot), eps, scale,
+         eps_lo)[0].block_until_ready()
 
     total_q, t_total = 0, 0.0
     last = None
@@ -79,7 +119,8 @@ def main():
         q_rot = np.pad(np.asarray(est.rotate(jnp.asarray(q))),
                        ((0, 0), (0, d_pad - svc.dim)))
         t0 = time.perf_counter()
-        dists, ids = step(corpus_dev, jnp.asarray(q_rot), eps, scale, eps_lo)
+        dists, ids = step(corpus_dev, codes_dev, scales_dev,
+                          jnp.asarray(q_rot), eps, scale, eps_lo)
         dists.block_until_ready()
         dt = time.perf_counter() - t0
         total_q += svc.query_batch

@@ -1,7 +1,10 @@
 """Vector indexes with pluggable DCO methods (IVF / graph / flat)."""
 
 from repro.index.flat import FlatIndex, build_flat, search_flat
-from repro.index.graph import GraphIndex, build_graph, search_graph
+from repro.index.graph import (
+    GraphIndex, GraphScanStats, build_graph, search_graph,
+    search_graph_beam_host, search_graph_fused,
+)
 from repro.index.ivf import (
     FusedScanStats, IVFIndex, build_ivf, search_ivf, search_ivf_fused,
 )
@@ -9,7 +12,8 @@ from repro.index.kmeans import assign, kmeans
 
 __all__ = [
     "FlatIndex", "build_flat", "search_flat",
-    "GraphIndex", "build_graph", "search_graph",
+    "GraphIndex", "GraphScanStats", "build_graph", "search_graph",
+    "search_graph_fused", "search_graph_beam_host",
     "IVFIndex", "build_ivf", "search_ivf", "search_ivf_fused",
     "FusedScanStats",
     "assign", "kmeans",

@@ -14,12 +14,31 @@ worst distance is the DCO threshold r.  ``decoupled=True`` reproduces the
 HNSW++ optimization of [20]: the DCO threshold comes from a K-sized result
 set instead of the ef-sized beam (tighter r, more pruning), with estimated
 distances ordering the beam.
+
+Batched beam scan (the megakernel engine): ``search_graph_fused`` replaces
+the per-query greedy loop with a *wave-synchronous* frontier expansion over
+the whole query batch.  Queries are grouped into tiles (sorted along the
+leading PCA coordinate so a tile's walks stay coherent); each wave, every
+tile's frontier — the best unexpanded entries of its queries' beam
+windows — becomes one slab of candidate tiles in the *adjacency-flat*
+layout (node v's neighbour rows stored contiguously at rows
+``[v·A, (v+1)·A)``, A = ``adj_block``), and ONE Pallas launch
+(``repro.kernels.graph_scan``) screens the whole slab for the whole batch:
+int8×int8 MXU prefilter, demand-paged fp32 DADE re-screen, and the
+ef-sized beam window + DCO threshold r² carried in VMEM scratch — seeded
+from the previous wave and returned for the next.  The host only commits
+frontier/expansion-set updates between waves.  ``search_graph_beam_host``
+runs the identical wave schedule through the pure-jnp oracle (the host
+two-stage graph screen) — results are bit-identical by construction, so
+the engines differ only in what HBM ships (see ``GraphScanStats``'s three
+byte ledgers).
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -27,10 +46,27 @@ import numpy as np
 
 from repro.core.dco import dco_screen
 from repro.core.estimators import Estimator, build_estimator
-from repro.quant.scalar import QuantizedCorpus, quantize_corpus, wants_quant
+from repro.kernels.ops import fused_fetch_totals, graph_scan_kernel
+from repro.quant.accounting import (
+    ID_BYTES,
+    fetched_tile_bytes,
+    row_gather_bytes,
+    stage2_fetch_report,
+    two_stage_bytes,
+)
+from repro.quant.scalar import (
+    QuantizedCorpus,
+    fit_block_scales,
+    quantize_block,
+    quantize_corpus,
+    wants_quant,
+)
 from repro.quant.screen import two_stage_screen
 
-__all__ = ["GraphIndex", "build_graph", "search_graph"]
+__all__ = ["GraphIndex", "build_graph", "search_graph",
+           "search_graph_fused", "search_graph_beam_host", "GraphScanStats"]
+
+_SENTINEL = 1e18
 
 
 @jax.tree_util.register_pytree_node_class
@@ -43,6 +79,18 @@ class GraphIndex:
     # Optional int8 mirror of corpus_rot (repro.quant two-stage screen).
     corpus_q: jax.Array | None = None  # (N, D) int8
     qscales: jax.Array | None = None  # (D,)
+    # Adjacency-flat layout for the fused beam-scan megakernel (quant
+    # builds): node v's neighbour rows live contiguously at rows
+    # [v*adj_block, (v+1)*adj_block) — expanding v streams exactly one
+    # candidate tile, no gather copy.  Pad slots: rot sentinel, codes 0,
+    # ids -1.  Codes use per-*block* scales (the int8×int8 MXU dequantize).
+    adj_rot: jax.Array | None = None  # (N*adj_block, D_pad) f32
+    adj_codes: jax.Array | None = None  # (N*adj_block, D_pad) int8
+    adj_ids: jax.Array | None = None  # (N*adj_block,) int32, -1 padding
+    gscales: jax.Array | None = None  # (D_pad // scan_block_d,) f32
+    # Static layout metadata (hashable aux data, not arrays).
+    adj_block: int = 0
+    scan_block_d: int = 0
 
     @property
     def degree(self) -> int:
@@ -52,14 +100,20 @@ class GraphIndex:
     def has_quant(self) -> bool:
         return self.corpus_q is not None
 
+    @property
+    def has_fused(self) -> bool:
+        return self.adj_codes is not None
+
     def tree_flatten(self):
         return ((self.estimator, self.corpus_rot, self.neighbors, self.entry,
-                 self.corpus_q, self.qscales), None)
+                 self.corpus_q, self.qscales, self.adj_rot, self.adj_codes,
+                 self.adj_ids, self.gscales),
+                (self.adj_block, self.scan_block_d))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        del aux
-        return cls(*children)
+        adj_block, scan_block_d = aux
+        return cls(*children, adj_block=adj_block, scan_block_d=scan_block_d)
 
 
 def _greedy_search_np(rot, adj, entry, q, ef):
@@ -120,8 +174,27 @@ def build_graph(
     key: jax.Array | None = None,
     estimator: Estimator | None = None,
     quant: str | None = None,
+    scan_block_d: int | None = None,
+    adj_block: int | None = None,
+    adj_dtype: str = "float32",
     **est_kwargs,
 ) -> GraphIndex:
+    """Build the NSW graph.  Host-side (one-time, offline).
+
+    ``quant="int8"`` (or an estimator carrying a QuantConfig) additionally
+    stores the per-dim int8 corpus mirror (two-stage screen, threshold
+    seeding) AND the adjacency-flat layout feeding the fused beam-scan
+    megakernel: each node's neighbour rows (fp32 + per-block int8 codes +
+    ids) are laid out contiguously in a block of ``adj_block`` rows, so
+    expanding a node streams one tile — no gather.  ``adj_block`` defaults
+    to ``m`` rounded up to the int8 sublane floor (32) so the layout is
+    compiled-mode legal; ``scan_block_d`` is the kernel's dimension-block
+    width (default: the estimator's Δd; production TPU runs want 128).
+    ``adj_dtype="bfloat16"`` stores the adjacency rows at 2 B/dim — the
+    serving configuration (stage 2 upcasts per block and accumulates f32,
+    the same convention the sharded corpus serves under); fp32 is the
+    default so oracle distances stay bit-comparable to ``corpus_rot``.
+    """
     if key is None:
         key = jax.random.PRNGKey(0)
     data = jnp.asarray(data, jnp.float32)
@@ -191,9 +264,49 @@ def build_graph(
         final[v, : nbrs.size] = nbrs
     entry = int(np.argmin(np.einsum("nd,nd->n", rot - rot.mean(0), rot - rot.mean(0))))
     corpus_q = qscales = None
+    adj_rot = adj_codes = adj_ids = gscales = None
+    a_block = block_d = 0
     if wants_quant(quant, estimator.quant):
         qc = quantize_corpus(jnp.asarray(rot))
         corpus_q, qscales = qc.codes, qc.scales
+
+        # Adjacency-flat layout for the fused beam-scan megakernel: one
+        # tile of ``a_block`` rows per node holding its neighbours'
+        # vectors/codes/ids (layout decision recorded in ROADMAP: gather
+        # granularity is the whole neighbour block, replicated per node —
+        # ~a_block/m × corpus memory — because it turns every frontier
+        # expansion into a single aligned DMA).  a_block defaults to m
+        # rounded up to the int8 sublane floor so the codes tile lowers
+        # compiled; dims are zero-padded to the block grid like the IVF
+        # CSR layout.
+        if scan_block_d is None:
+            block_d = int(np.asarray(estimator.table.dims)[0])
+        else:
+            block_d = int(scan_block_d)
+        dim = rot.shape[1]
+        d_pad = (dim + block_d - 1) // block_d * block_d
+        if adj_block is None:
+            a_block = (max(m, 1) + 31) // 32 * 32  # int8 sublane grid
+        else:
+            a_block = int(adj_block)
+        if a_block < m:
+            raise ValueError(f"adj_block {a_block} < graph degree m {m}")
+        rot_pad = np.zeros((n, d_pad), np.float32)
+        rot_pad[:, :dim] = rot
+        gscales = np.asarray(fit_block_scales(jnp.asarray(rot_pad), block_d))
+        codes_blk = np.asarray(
+            quantize_block(jnp.asarray(rot_pad), jnp.asarray(gscales), block_d))
+        adt = jnp.dtype(adj_dtype)
+        adj_rot = np.full((n * a_block, d_pad), _SENTINEL, np.float32)
+        adj_codes = np.zeros((n * a_block, d_pad), np.int8)
+        adj_ids = np.full((n * a_block,), -1, np.int32)
+        for v in range(n):
+            nbrs = final[v][final[v] >= 0]
+            a = v * a_block
+            adj_rot[a: a + len(nbrs)] = rot_pad[nbrs]
+            adj_codes[a: a + len(nbrs)] = codes_blk[nbrs]
+            adj_ids[a: a + len(nbrs)] = nbrs
+        adj_rot = jnp.asarray(adj_rot).astype(adt)
     return GraphIndex(
         estimator=estimator,
         corpus_rot=jnp.asarray(rot),
@@ -201,11 +314,17 @@ def build_graph(
         entry=jnp.asarray(entry, jnp.int32),
         corpus_q=corpus_q,
         qscales=qscales,
+        adj_rot=None if adj_rot is None else jnp.asarray(adj_rot),
+        adj_codes=None if adj_codes is None else jnp.asarray(adj_codes),
+        adj_ids=None if adj_ids is None else jnp.asarray(adj_ids, jnp.int32),
+        gscales=None if gscales is None else jnp.asarray(gscales, jnp.float32),
+        adj_block=a_block,
+        scan_block_d=block_d,
     )
 
 
 @partial(jax.jit, static_argnames=("k", "ef", "max_steps", "decoupled",
-                                   "use_quant", "seed_r"))
+                                   "use_quant", "seed_r", "with_stats"))
 def search_graph(
     index: GraphIndex,
     queries: jax.Array,  # (Q, D) original space
@@ -216,12 +335,18 @@ def search_graph(
     decoupled: bool = True,
     use_quant: bool = False,
     seed_r: bool = False,
+    with_stats: bool = False,
 ):
     """Batched (vmapped) DCO beam search.
 
     Returns (dists (Q,K), ids (Q,K), avg_dims (Q,) mean dims per screened
-    candidate).  ``decoupled`` selects the HNSW++-style threshold (r from the
-    K-sized result set) vs HNSW+ (r from the ef-sized beam).
+    candidate); ``with_stats`` widens the third output to a (Q, 3) array
+    of [avg_dims, rows_screened, expansion_steps] per query — fig8 turns
+    rows into the row-granular gather ledger this engine's HBM traffic
+    follows (every expansion gathers its whole (M, D) neighbour block
+    before the screen runs).  ``decoupled`` selects the HNSW++-style
+    threshold (r from the K-sized result set) vs HNSW+ (r from the
+    ef-sized beam).
 
     ``use_quant`` screens each expansion through the two-stage quantized
     screen.  The result-set gating (``passed``) is identical to fp32 (no
@@ -357,6 +482,320 @@ def search_graph(
         w_sq, c_sq, c_ids, top_sq, top_ids, visited, steps, dims_acc, rows_acc = state
         avg = dims_acc.astype(jnp.float32) / jnp.maximum(
             rows_acc.astype(jnp.float32), 1.0)
-        return jnp.sqrt(jnp.maximum(top_sq, 0.0)), top_ids, avg
+        extra = jnp.stack([avg, rows_acc.astype(jnp.float32),
+                           steps.astype(jnp.float32)])
+        return jnp.sqrt(jnp.maximum(top_sq, 0.0)), top_ids, avg, extra
 
-    return jax.vmap(one)(q_rot, r_seed)
+    dists, ids, avg, extra = jax.vmap(one)(q_rot, r_seed)
+    return (dists, ids, extra) if with_stats else (dists, ids, avg)
+
+
+class GraphScanStats(NamedTuple):
+    """Per-batch accounting from the batched beam scan (host-side floats).
+
+    Three byte ledgers, one trajectory (fused and host beam engines are
+    bit-identical, so the ledgers are directly comparable):
+
+      * ``bytes_per_query`` — semantic dims-consumed (1 B/int8 dim +
+        4 B/fp32 dim actually consumed before retirement), the PR-1
+        trajectory quantity.
+      * ``fetched_bytes_per_query`` — DMA-granular: what HBM ships under
+        the demand-paged megakernel (full int8 tiles + id stream + fp32
+        slabs fetched while stage 2 stayed active).
+      * ``gather_bytes_per_query`` — row-granular: what the host two-stage
+        gather engine ships for the same trajectory (every screened
+        neighbour row's full fp32 + int8 dims + id; gathers cannot read
+        partial rows).  This is the honest cost of the pre-megakernel
+        graph path and fig8's baseline quantity.
+    """
+
+    waves: float  # kernel launches (frontier waves) until convergence
+    expansions_per_query: float  # candidate tiles streamed / query
+    rows_per_query: float  # valid neighbour rows screened / query
+    avg_int8_dims: float  # int8 dims consumed per screened row
+    avg_fp_dims: float  # fp32 dims consumed per screened row
+    passed_per_query: float  # rows surviving the full screen / query
+    bytes_per_query: float  # semantic dims-consumed ledger
+    fetched_bytes_per_query: float  # DMA-granular megakernel ledger
+    gather_bytes_per_query: float  # row-granular host-gather ledger
+    s1_tiles_fetched: float = 0.0  # int8 adjacency tiles DMA'd
+    s2_slabs_total: float = 0.0  # fp32 slabs a non-paged pipeline ships
+    s2_slabs_fetched: float = 0.0  # fp32 slabs actually DMA'd on demand
+    s2_skip_rate: float = 0.0  # 1 - fetched/total (fetch elision)
+
+
+def _beam_seed_rsq(index: GraphIndex, q_rot: jax.Array, k: int) -> jax.Array:
+    """Seed threshold from the entry point's int8-prescreened neighbourhood
+    (same arithmetic as ``search_graph(seed_r=True)``): verify the k
+    apparent-nearest exactly and widen the k-th by the first-checkpoint
+    overshoot band.  Sound floor — the k verified rows are real corpus
+    rows, so the final k-th distance can only be smaller."""
+    table = index.estimator.table
+    m = index.degree
+    nbrs0 = index.neighbors[index.entry]  # (M,)
+    nvalid = nbrs0 >= 0
+    codes0 = index.corpus_q[jnp.maximum(nbrs0, 0)]
+    deq0 = codes0.astype(jnp.float32) * index.qscales[None, :]
+    approx = jnp.sum((deq0[None, :, :] - q_rot[:, None, :]) ** 2, axis=-1)
+    approx = jnp.where(nvalid[None, :], approx, jnp.inf)  # (Q, M)
+    kk = min(k, m)
+    _, sel = jax.lax.top_k(-approx, kk)
+    rows0 = index.corpus_rot[jnp.maximum(nbrs0, 0)][sel]  # (Q, kk, D)
+    exact0 = jnp.sum((rows0 - q_rot[:, None, :]) ** 2, axis=-1)
+    kth = jnp.max(exact0, axis=1) * (1.0 + table.eps[0]) ** 2
+    enough = (jnp.sum(nvalid) >= k) & (kk == k)
+    return jnp.where(enough, kth, jnp.inf)
+
+
+def _select_wave(top_sq, top_ids, expanded, route_sq, *, q_tiles, block_q,
+                 qn, expand, ef):
+    """One wave's frontier: per query, its ``expand`` best unexpanded beam
+    entries *that still beat the query's DCO threshold* — the batched
+    analogue of the greedy walk's termination (a window entry whose exact
+    distance exceeds r cannot improve the result, and under the decoupled
+    screen its neighbours would all be pruned anyway; entries are sorted
+    ascending, so the first miss ends the query's scan).  Per tile, the
+    deduplicated union: a node any tile query proposes is screened for the
+    WHOLE tile, so it is marked expanded at tile granularity (the decision
+    record in ROADMAP).  Returns a list of node lists, one per tile
+    (empty = tile converged)."""
+    picked = []
+    for t in range(q_tiles):
+        sel: list[int] = []
+        seen: set[int] = set()
+        exp_t = expanded[t]
+        for qi in range(t * block_q, min((t + 1) * block_q, qn)):
+            budget = expand
+            for j in range(ef):
+                v = int(top_ids[qi, j])
+                if v < 0 or not np.isfinite(top_sq[qi, j]):
+                    break
+                if top_sq[qi, j] > route_sq[qi]:
+                    break  # sorted ascending: nothing below can qualify
+                if exp_t[v]:
+                    continue
+                if v not in seen:
+                    seen.add(v)
+                    sel.append(v)
+                budget -= 1
+                if budget == 0:
+                    break
+        for v in sel:
+            exp_t[v] = True
+        picked.append(sel)
+    return picked
+
+
+def _beam_scan(
+    index: GraphIndex,
+    queries: jax.Array,
+    *,
+    k: int,
+    ef: int,
+    expand: int,
+    block_q: int,
+    max_waves: int,
+    seed_r: bool,
+    decoupled: bool,
+    route_mult: float,
+    interpret: bool | None,
+    use_ref: bool,
+):
+    """Shared wave driver for the fused and host beam engines.
+
+    Host-side numpy orchestration: frontier selection, tile-granular
+    expansion marking, and wave-count bookkeeping; everything per-candidate
+    — screening, beam maintenance, threshold tightening — happens in the
+    one launch per wave (``kernels.graph_scan``, or its oracle when
+    ``use_ref``).  Wave step counts are rounded up to powers of two (the
+    kernel skips -1 steps) so the number of distinct compiled shapes stays
+    logarithmic in the frontier size.
+    """
+    if not index.has_fused:
+        raise ValueError(
+            "batched beam scan needs build_graph(..., quant='int8')")
+    if not 1 <= k <= ef:
+        raise ValueError(f"need 1 <= k <= ef, got k={k} ef={ef}")
+    thresh_col = (k - 1) if decoupled else (ef - 1)
+    est = index.estimator
+    q = queries.astype(jnp.float32)
+    q_rot = est.rotate(q)
+    qn, dim = q_rot.shape
+    n = index.corpus_rot.shape[0]
+
+    # Tile coherence: sort queries along the leading (max-variance) PCA
+    # coordinate so a tile's walks traverse overlapping graph regions and
+    # the per-tile frontier union stays small.
+    order = jnp.argsort(q_rot[:, 0])
+    inv = jnp.argsort(order)
+    q_sorted = np.asarray(q_rot[order])
+    q_tiles = (qn + block_q - 1) // block_q
+    q_pad = q_tiles * block_q
+    q_sorted = np.pad(q_sorted, ((0, q_pad - qn), (0, 0)))
+
+    entry = int(index.entry)
+    d_entry = np.asarray(jnp.sum(
+        (index.corpus_rot[entry][None, :] - q_sorted[:qn]) ** 2, axis=1))
+    top_sq = np.full((q_pad, ef), np.inf, np.float32)
+    top_ids = np.full((q_pad, ef), -1, np.int32)
+    top_sq[:qn, 0] = d_entry
+    top_ids[:qn, 0] = entry
+
+    # Pad rows carry r²=0 (everything prunes, window never fills); real
+    # rows floor the threshold with the optional seeded r².
+    seed_vec = np.zeros((q_pad,), np.float32)
+    if seed_r:
+        seed_vec[:qn] = np.asarray(
+            _beam_seed_rsq(index, jnp.asarray(q_sorted[:qn]), k))
+    else:
+        seed_vec[:qn] = np.inf
+
+    expanded = np.zeros((q_tiles, n), bool)
+    sem = np.zeros((4,), np.float64)  # stats cols 0-3 summed over waves
+    s1_tiles = s2_slabs = 0.0
+    waves = 0
+    while waves < max_waves:
+        r0 = np.minimum(seed_vec, top_sq[:, thresh_col])
+        if waves == 0:
+            # Bootstrap: the entry point is expanded unconditionally (its
+            # own distance may exceed a seeded threshold, but its
+            # neighbourhood is what fills the window).
+            picked = [[entry] for _ in range(q_tiles)]
+            expanded[:, entry] = True
+        else:
+            # The routing radius widens the proposal gate beyond the DCO
+            # threshold (squared-distance multiplier): entries past r
+            # cannot enter the result, but expanding them reaches
+            # neighbourhoods the tight walk would miss — the beam-width
+            # dial of the batched engine.
+            picked = _select_wave(top_sq, top_ids, expanded,
+                                  r0 * route_mult, q_tiles=q_tiles,
+                                  block_q=block_q, qn=qn, expand=expand,
+                                  ef=ef)
+        width = max(len(s) for s in picked)
+        if width == 0:
+            break  # no window entry can improve any query's result
+        steps = 1 << (width - 1).bit_length()  # pow2-bucketed shapes
+        offs = np.full((q_tiles, steps), -1, np.int32)
+        for t, sel in enumerate(picked):
+            offs[t, : len(sel)] = sel  # node id == tile offset (adj layout)
+        t_sq, t_ids, st = graph_scan_kernel(
+            est, jnp.asarray(q_sorted), jnp.asarray(offs),
+            jnp.asarray(top_sq), jnp.asarray(top_ids), jnp.asarray(r0),
+            index.adj_rot, index.adj_codes, index.adj_ids, index.gscales,
+            ef=ef, thresh_col=thresh_col, block_q=block_q,
+            block_c=index.adj_block, block_d=index.scan_block_d,
+            interpret=interpret, use_ref=use_ref)
+        top_sq = np.asarray(t_sq, np.float32)
+        top_ids = np.asarray(t_ids, np.int32)
+        st = np.asarray(st)
+        sem += st[:qn, :4].sum(axis=0)
+        w_s1, w_s2 = fused_fetch_totals(st, block_q)
+        s1_tiles += w_s1
+        s2_slabs += w_s2
+        waves += 1
+
+    dists = np.sqrt(np.maximum(top_sq[:qn], 0.0))[np.asarray(inv)][:, :k]
+    ids = top_ids[:qn][np.asarray(inv)][:, :k]
+
+    rows = max(float(sem[2]), 1.0)
+    d_pad = index.adj_rot.shape[1]
+    fp_bytes = jnp.dtype(index.adj_rot.dtype).itemsize  # f32 or bf16 rows
+    # Seeding streams the entry's int8 neighbour block + k exact rows per
+    # query before wave 0 — count those corpus bytes in every ledger.
+    seed_bytes = (index.degree * dim + 4 * k * dim) if seed_r else 0
+    s2_fetched_b, _, s2_skip, s2_total = stage2_fetch_report(
+        s1_tiles, s2_slabs, block_c=index.adj_block, d_pad=d_pad,
+        block_d=index.scan_block_d, fp_bytes=fp_bytes)
+    fetched = fetched_tile_bytes(
+        s1_tiles, block_c=index.adj_block, dims=d_pad, bytes_per_dim=1,
+        id_bytes=ID_BYTES) + s2_fetched_b
+    stats = GraphScanStats(
+        waves=float(waves),
+        expansions_per_query=s1_tiles / qn,
+        rows_per_query=rows / qn,
+        avg_int8_dims=float(sem[0]) / rows,
+        avg_fp_dims=float(sem[1]) / rows,
+        passed_per_query=float(sem[3]) / qn,
+        bytes_per_query=float(two_stage_bytes(
+            sem[0], sem[1], fp_bytes=fp_bytes)) / qn + seed_bytes,
+        fetched_bytes_per_query=fetched / qn + seed_bytes,
+        gather_bytes_per_query=row_gather_bytes(
+            rows, dims=dim, fp_bytes=fp_bytes) / qn + seed_bytes,
+        s1_tiles_fetched=s1_tiles,
+        s2_slabs_total=s2_total,
+        s2_slabs_fetched=s2_slabs,
+        s2_skip_rate=s2_skip,
+    )
+    return jnp.asarray(dists), jnp.asarray(ids), stats
+
+
+def search_graph_fused(
+    index: GraphIndex,
+    queries: jax.Array,
+    *,
+    k: int = 10,
+    ef: int = 48,
+    expand: int = 2,
+    block_q: int = 8,
+    max_waves: int = 64,
+    seed_r: bool = False,
+    decoupled: bool = True,
+    route_mult: float = 1.0,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+):
+    """Batched graph search through the fused beam-scan megakernel.
+
+    Wave-synchronous frontier expansion: each wave, every query tile's
+    ``expand`` best unexpanded beam entries become one slab of adjacency
+    tiles and ONE Pallas launch screens the slab for the whole batch (int8
+    MXU prefilter → demand-paged fp32 DADE re-screen → on-device beam/
+    threshold maintenance, carried across waves).  Needs
+    ``build_graph(..., quant="int8")``.  Returns (dists (Q, K),
+    ids (Q, K), GraphScanStats).
+
+    Note the expansion semantics are per *tile*: a node any of the tile's
+    queries proposes is screened (and marked expanded) for all of them —
+    extra candidates for the others, amortized HBM traffic for everyone.
+    ``block_q=8`` keeps tiles coherent on CPU; 32 is the compiled-mode
+    minimum (``ops.min_block_q``).  ``decoupled=True`` (default) takes the
+    DCO threshold from the K-th best of the window — the paper's
+    HNSW++-style decoupling: only candidates that could enter the final
+    top-K pass the screen, so the beam stays k-sized-churn small and
+    stage 2 elides most slabs; ``decoupled=False`` uses the EF-th
+    (HNSW+ semantics, a wider beam at more bytes).  ``route_mult`` widens
+    the frontier proposal gate to ``route_mult · r²`` without touching the
+    screen threshold — the recall/bytes dial the fig8 sweep turns (an
+    entry past r cannot enter the result but can route the walk).
+    """
+    return _beam_scan(index, queries, k=k, ef=ef, expand=expand,
+                      block_q=block_q, max_waves=max_waves, seed_r=seed_r,
+                      decoupled=decoupled, route_mult=route_mult,
+                      interpret=interpret, use_ref=use_ref)
+
+
+def search_graph_beam_host(
+    index: GraphIndex,
+    queries: jax.Array,
+    *,
+    k: int = 10,
+    ef: int = 48,
+    expand: int = 2,
+    block_q: int = 8,
+    max_waves: int = 64,
+    seed_r: bool = False,
+    decoupled: bool = True,
+    route_mult: float = 1.0,
+):
+    """The host two-stage graph screen: the identical wave schedule run
+    through the pure-jnp oracle (gathered neighbour blocks, same
+    ``kernels.tiles`` arithmetic) — the batched-graph analogue of the PR-1
+    host engines.  Results are bit-identical to ``search_graph_fused``;
+    the honest cost difference is the ledger: this engine's HBM traffic is
+    ``gather_bytes_per_query`` (row-granular gathers), the megakernel's is
+    ``fetched_bytes_per_query`` (tile/slab DMA with stage-2 elision)."""
+    return _beam_scan(index, queries, k=k, ef=ef, expand=expand,
+                      block_q=block_q, max_waves=max_waves, seed_r=seed_r,
+                      decoupled=decoupled, route_mult=route_mult,
+                      interpret=None, use_ref=True)

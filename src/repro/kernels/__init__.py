@@ -6,6 +6,9 @@ prefilter (stage 1 of the quantized two-stage screen, 1 byte/dim of HBM
 traffic); ivf_scan.py -- demand-paged fused IVF wave-scan megakernel
 (gather-free bucket streaming, manually double-buffered int8 DMA, fp32
 slabs fetched only for tiles with stage-1 survivors, on-device top-K);
+graph_scan.py -- fused graph beam-scan megakernel (one launch per frontier
+wave, resumable on-device beam window seeded/returned across launches,
+same manual-DMA pipeline over the adjacency-flat layout);
 tiles.py -- the per-tile stage/merge helpers every kernel and oracle
 shares; ops.py -- jit'd public wrappers with padding + CPU interpret
 fallback; ref.py -- pure-jnp oracles (fetch decisions included).
@@ -15,22 +18,30 @@ from repro.kernels.ops import (
     block_table,
     dco_screen_kernel,
     fused_fetch_totals,
+    graph_scan_kernel,
     ivf_scan_kernel,
     min_block_q,
     on_tpu,
     quant_screen_kernel,
 )
-from repro.kernels.ref import dade_dco_ref, ivf_scan_ref, quant_dco_ref
+from repro.kernels.ref import (
+    dade_dco_ref,
+    graph_scan_ref,
+    ivf_scan_ref,
+    quant_dco_ref,
+)
 
 __all__ = [
     "block_table",
     "dco_screen_kernel",
     "fused_fetch_totals",
     "ivf_scan_kernel",
+    "graph_scan_kernel",
     "min_block_q",
     "quant_screen_kernel",
     "on_tpu",
     "dade_dco_ref",
     "ivf_scan_ref",
+    "graph_scan_ref",
     "quant_dco_ref",
 ]

@@ -3,6 +3,22 @@
 Handles padding to tile boundaries, table resampling to the kernel's
 block-checkpoint schedule, and the CPU fallback (interpret mode) so the same
 call-site code runs in tests/benchmarks on this host and compiles for TPU.
+
+Shape/alignment contract (every fused-kernel entry point enforces these and
+fails fast with the offending value — see ``docs/ARCHITECTURE.md`` for the
+rationale behind each):
+
+  * ``block_q >= min_block_q(int8) == 32`` in compiled (non-interpret)
+    mode — the int8 sublane floor of the Mosaic tile grid; interpret mode
+    accepts any tile.
+  * ``block_d % 128 == 0`` in compiled mode — the demand-paged stage-2
+    slab DMA must land on lane-aligned VMEM windows.
+  * ``block_c >= 32`` for the graph kernel in compiled mode — the int8
+    candidate tile's sublane floor (the IVF path's fixed 128 satisfies it
+    by construction; the adjacency build pads neighbour blocks up to it).
+  * offset tables (``build_window_offsets`` / the beam driver's wave
+    offsets) use sentinel ``-1`` for steps that must ship nothing; every
+    non-negative offset must stay inside the flat layout's tile count.
 """
 
 from __future__ import annotations
@@ -16,6 +32,7 @@ import numpy as np
 from repro.core.calibration import EpsilonTable
 from repro.core.estimators import Estimator
 from repro.kernels import dade_dco as _dade
+from repro.kernels import graph_scan as _graph_scan
 from repro.kernels import ivf_scan as _ivf_scan
 from repro.kernels import quant_dco as _quant
 from repro.kernels import ref as _ref
@@ -23,8 +40,8 @@ from repro.quant.scalar import cum_err_sq, quantize_queries_block
 
 __all__ = [
     "dco_screen_kernel", "quant_screen_kernel", "ivf_scan_kernel",
-    "ivf_cap_tiles", "build_window_offsets", "block_table", "on_tpu",
-    "min_block_q", "fused_fetch_totals",
+    "graph_scan_kernel", "ivf_cap_tiles", "build_window_offsets",
+    "block_table", "on_tpu", "min_block_q", "fused_fetch_totals",
 ]
 
 # Minimum second-to-minor tile dimension (sublane count) per operand byte
@@ -370,5 +387,126 @@ def ivf_scan_kernel(
         tile_offs, qcodes, q, qscales, r0, flat_codes, flat_rot, flat_ids,
         bscales, eps, scale, k, block_q, block_c, block_d, cap_tiles, slack,
         interpret, use_ref,
+    )
+    return top_sq[:qn], top_ids[:qn], stats[:qn]
+
+
+def _graph_scan_call(step_offs, qcodes, q, qscales, top0_sq, top0_ids, r0,
+                     adj_codes, adj_rot, adj_ids, bscales, eps, scale, ef,
+                     thresh_col, block_q, block_c, block_d, slack, interpret,
+                     use_ref):
+    if use_ref:
+        # The oracle replays the grid with host loops (concrete offsets),
+        # so it runs eagerly — test/debug path and the host beam engine.
+        return _ref.graph_scan_ref(
+            step_offs, qcodes, q, qscales, top0_sq, top0_ids, r0,
+            adj_codes, adj_rot, adj_ids, bscales, eps, scale, ef=ef,
+            thresh_col=thresh_col, block_q=block_q, block_c=block_c,
+            block_d=block_d, slack=slack,
+        )
+    return _graph_scan.graph_scan_kernel_call(
+        step_offs, qcodes, q, qscales, top0_sq, top0_ids, r0, adj_codes,
+        adj_rot, adj_ids, bscales, eps, scale, ef=ef, thresh_col=thresh_col,
+        block_q=block_q, block_c=block_c, block_d=block_d, slack=slack,
+        interpret=interpret,
+    )
+
+
+def graph_scan_kernel(
+    estimator: Estimator,
+    q_rot: jax.Array,  # (Q, D) rotated fp32 queries, tile-grouped by caller
+    step_offs: jax.Array,  # (ceil(Q/block_q), steps) i32 TILE offsets, -1 skip
+    top0_sq: jax.Array,  # (Q, EF) f32 beam window carried across waves
+    top0_ids: jax.Array,  # (Q, EF) i32
+    r0_sq: jax.Array,  # (Q,) f32 thresholds carried across waves
+    adj_rot: jax.Array,  # (N_adj, D_pad) f32 adjacency-flat neighbour rows
+    adj_codes: jax.Array,  # (N_adj, D_pad) int8 per-block codes
+    adj_ids: jax.Array,  # (N_adj,) i32, -1 per-block padding
+    bscales: jax.Array,  # (S,) f32 corpus per-block scales
+    *,
+    ef: int,
+    thresh_col: int | None = None,
+    block_q: int = 8,
+    block_c: int = 32,
+    block_d: int = 32,
+    slack: float = 1e-4,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+):
+    """Public entry for one fused graph beam-scan wave.
+
+    The caller (``repro.index.graph``'s beam driver) owns the frontier: it
+    writes one expanded node's tile offset per step of ``step_offs`` (node
+    v's neighbour block is tile v of the adjacency-flat layout, so offsets
+    ARE node ids when ``block_c == adj_block``) and sentinel ``-1`` for
+    steps past a tile's frontier — the kernel ships nothing for those.
+    This wrapper owns padding, the blocked epsilon table, and per-(query,
+    block) int8 query quantization.
+
+    Shape/alignment contract (module docstring has the full list):
+    compiled (non-interpret) mode fails fast unless
+    ``block_q >= min_block_q(int8)``, ``block_c >= min_block_q(int8)``
+    (both int8 sublane floors) and ``block_d % 128 == 0`` (lane-aligned
+    stage-2 slab DMA); every error names the offending value.  ``ef`` is
+    the on-device window size (<= 128, the top-K merge bound);
+    ``thresh_col`` selects which window column feeds the DCO threshold
+    (``k-1`` = the paper's HNSW++-style decoupled threshold, the default
+    ``ef-1`` = the coupled HNSW+ variant); queries are
+    padded to ``block_q`` rows with inf/-1 window entries and r²=0, so pad
+    rows prune instantly and never touch the outputs.
+
+    Returns (top_sq (Q, EF) ascending, top_ids (Q, EF), stats (Q, 6) f32 =
+    ``ivf_scan.STATS_COLS``), cropped to Q — feed top/r² back in to
+    continue the beam next wave.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    if not interpret and not use_ref and block_q < min_block_q(jnp.int8):
+        raise ValueError(
+            f"compiled lowering needs block_q >= {min_block_q(jnp.int8)} "
+            f"(int8 sublane minimum), got block_q={block_q}; interpret mode "
+            f"accepts smaller tiles")
+    if not interpret and not use_ref and block_c < min_block_q(jnp.int8):
+        raise ValueError(
+            f"compiled lowering needs block_c >= {min_block_q(jnp.int8)} "
+            f"(int8 sublane minimum for the adjacency candidate tile), got "
+            f"block_c={block_c}; rebuild the graph with adj_block >= "
+            f"{min_block_q(jnp.int8)} or run interpret mode")
+    if not interpret and not use_ref and block_d % 128:
+        raise ValueError(
+            f"compiled lowering needs block_d % 128 == 0 (the demand-paged "
+            f"stage-2 slab DMA must land on lane-aligned VMEM windows), got "
+            f"block_d={block_d}; build the graph with scan_block_d=128 or "
+            f"run interpret mode")
+    qn, dim = q_rot.shape
+    n_adj, d_pad = adj_rot.shape
+    if d_pad % block_d or bscales.shape[0] != d_pad // block_d:
+        raise ValueError(
+            f"adjacency dim {d_pad} must be a multiple of block_d "
+            f"{block_d} with one block scale per block")
+    if n_adj % block_c:
+        raise ValueError(f"adjacency rows {n_adj} % block_c {block_c} != 0")
+
+    eps, scale, d_pad_tbl, _ = block_table(estimator.table, dim, block_d)
+    if d_pad_tbl != d_pad:
+        raise ValueError(
+            f"blocked table spans {d_pad_tbl} dims, adjacency has {d_pad}")
+
+    q = _pad_axis(q_rot.astype(jnp.float32), 1, block_d, 0.0)
+    q = _pad_axis(q, 0, block_q, 0.0)
+    qcodes, qscales = quantize_queries_block(q, block_d)
+    # Pad rows carry an empty window and r²=0: every candidate's lower
+    # bound exceeds 0, so they prune at the first checkpoint and their
+    # window stays inf/-1 end to end.
+    t_sq = _pad_axis(top0_sq.astype(jnp.float32), 0, block_q, jnp.inf)
+    t_ids = _pad_axis(top0_ids.astype(jnp.int32), 0, block_q, -1)
+    r0 = _pad_axis(r0_sq.astype(jnp.float32), 0, block_q, 0.0)
+
+    if thresh_col is None:
+        thresh_col = ef - 1
+    top_sq, top_ids, stats = _graph_scan_call(
+        step_offs.astype(jnp.int32), qcodes, q, qscales, t_sq, t_ids, r0,
+        adj_codes, adj_rot, adj_ids, bscales, eps, scale, ef, thresh_col,
+        block_q, block_c, block_d, slack, interpret, use_ref,
     )
     return top_sq[:qn], top_ids[:qn], stats[:qn]

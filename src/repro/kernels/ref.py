@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.kernels.tiles import dade_threshold, lb_penalized
 
-__all__ = ["dade_dco_ref", "quant_dco_ref", "ivf_scan_ref"]
+__all__ = ["dade_dco_ref", "quant_dco_ref", "ivf_scan_ref", "graph_scan_ref"]
 
 
 @partial(jax.jit, static_argnames=("block_d",))
@@ -239,6 +239,127 @@ def ivf_scan_ref(
                     rec.update(passed=jnp.zeros_like(active8), exact_sq=None)
                 if return_trace:
                     trace.append(rec)
+        top_sq.append(t_sq)
+        top_ids.append(t_ids)
+        stats.append(st)
+    out = (jnp.concatenate(top_sq, 0), jnp.concatenate(top_ids, 0),
+           jnp.concatenate(stats, 0))
+    if return_trace:
+        return out + (trace,)
+    return out
+
+
+def graph_scan_ref(
+    step_offs: jax.Array,  # (q_tiles, steps) i32 per-step tile offsets
+    qcodes: jax.Array,  # (Q, D) int8
+    q_rot: jax.Array,  # (Q, D) f32
+    qscales: jax.Array,  # (Q, S) f32
+    top0_sq: jax.Array,  # (Q, EF) f32 beam window carried across waves
+    top0_ids: jax.Array,  # (Q, EF) i32
+    r0_sq: jax.Array,  # (Q,) f32
+    adj_codes: jax.Array,  # (N_adj, D) int8 adjacency-flat
+    adj_rot: jax.Array,  # (N_adj, D) f32
+    adj_ids: jax.Array,  # (N_adj,) i32
+    bscales: jax.Array,  # (S,) f32
+    eps: jax.Array,  # (S,) f32
+    scale: jax.Array,  # (S,) f32
+    *,
+    ef: int,
+    thresh_col: int | None = None,
+    block_q: int,
+    block_c: int,
+    block_d: int,
+    slack: float = 1e-4,
+    return_trace: bool = False,
+):
+    """Oracle for the fused graph beam-scan megakernel (one wave).
+
+    Pure-jnp replay of the (q_tiles, steps) grid using the kernel's own
+    ``repro.kernels.tiles`` helpers and the same scratch-carry semantics:
+    the beam window / threshold are SEEDED from ``top0``/``r0_sq`` (the
+    state the previous wave's launch returned), frozen per expansion, and
+    tightened after each merge.  The manual pipeline's memory behaviour is
+    modelled exactly as in ``ivf_scan_ref``: -1 steps ship nothing, a step
+    repeating the previous offset reuses the landed buffer
+    (``s1_tiles_fetched`` counts fresh offsets only), and fp32 slabs are
+    fetched per ``tiles.stage2_need``.
+
+    With ``return_trace`` additionally returns per-(tile, step) records for
+    the real steps exposing the frozen r², the scanned neighbour block, the
+    stage-1/stage-2 masks, and the fetch decisions (``alive``, ``fetched``,
+    ``fresh``, ``slabs``) — so tests can replay each expansion against
+    ``dco_screen_batch`` and assert fetch soundness per wave.
+    """
+    from repro.kernels.tiles import (
+        dup_mask, merge_topk_tile, stage1_tile, stage2_tile,
+    )
+
+    qn, dim = q_rot.shape
+    if thresh_col is None:
+        thresh_col = ef - 1
+    q_tiles = qn // block_q
+    num_steps = step_offs.shape[1]
+    top_sq = []
+    top_ids = []
+    stats = []
+    trace = []
+    for i in range(q_tiles):
+        qs = slice(i * block_q, (i + 1) * block_q)
+        t_sq = jnp.asarray(top0_sq[qs], jnp.float32)
+        t_ids = jnp.asarray(top0_ids[qs], jnp.int32)
+        rsq = r0_sq[qs].reshape(-1, 1).astype(jnp.float32)
+        st = jnp.zeros((block_q, 6), jnp.float32)
+        prev_off = None
+        for s in range(num_steps):
+            off = int(step_offs[i, s])
+            fresh = off >= 0 and (prev_off is None or off != prev_off)
+            prev_off = off
+            if off < 0:
+                continue  # skipped step: the kernel ships nothing
+            rows = slice(off * block_c, (off + 1) * block_c)
+            ids = adj_ids[rows].reshape(1, -1)
+            valid = ids >= 0
+            validf = valid.astype(jnp.float32)
+            rsq_frozen = rsq
+            active8, d8 = stage1_tile(
+                qcodes[qs], qscales[qs], adj_codes[rows], bscales,
+                eps, scale, rsq_frozen, block_d=block_d, slack=slack,
+            )
+            d8_sum = jnp.sum(d8 * validf, axis=1, keepdims=True)
+            nvalid = jnp.broadcast_to(
+                jnp.sum(validf, axis=1, keepdims=True), d8_sum.shape)
+            zero = jnp.zeros_like(d8_sum)
+            one = jnp.ones_like(d8_sum)
+            s1f = one if fresh else zero
+            st = st + jnp.concatenate(
+                [d8_sum, zero, nvalid, zero, zero, s1f], axis=1)
+            alive = int(jnp.sum((active8 & valid).astype(jnp.int32)))
+            rec = dict(tile=i, step=s, row_start=off * block_c,
+                       ids=ids[0], rsq=rsq_frozen[:, 0], active8=active8,
+                       valid=valid[0], alive=alive, fetched=alive > 0,
+                       fresh=fresh, slabs=0.0)
+            if alive > 0:
+                exact_sq, passed, d32, slabs = stage2_tile(
+                    q_rot[qs], adj_rot[rows], eps, scale, rsq_frozen,
+                    active8, valid, block_d=block_d,
+                )
+                ok = passed & valid
+                d32_sum = jnp.sum(d32 * validf, axis=1, keepdims=True)
+                npass = jnp.sum(ok.astype(jnp.float32), axis=1, keepdims=True)
+                z = jnp.zeros_like(d32_sum)
+                slabs_col = jnp.broadcast_to(slabs, d32_sum.shape)
+                st = st + jnp.concatenate(
+                    [z, d32_sum, z, npass, slabs_col, z], axis=1)
+                dup = dup_mask(ids, t_ids, k=ef)
+                new_sq = jnp.where(ok & ~dup, exact_sq, jnp.inf)
+                t_sq, t_ids = merge_topk_tile(t_sq, t_ids, new_sq, ids, k=ef)
+                rsq = jnp.minimum(rsq, t_sq[:, thresh_col:thresh_col + 1])
+                rec.update(passed=passed, exact_sq=exact_sq,
+                           slabs=float(slabs))
+            else:
+                rec.update(passed=jnp.zeros_like(active8), exact_sq=None)
+            if return_trace:
+                trace.append(rec)
         top_sq.append(t_sq)
         top_ids.append(t_ids)
         stats.append(st)

@@ -2,8 +2,10 @@
 
 One module owns the arithmetic that the correctness guarantees rest on, so
 the int8 prefilter kernel (``quant_dco.py``), the fused IVF megakernel
-(``ivf_scan.py``), the fp32 screen kernel (``dade_dco.py``) and the pure-jnp
-oracles (``ref.py``) cannot drift apart:
+(``ivf_scan.py``), the fused graph beam-scan megakernel
+(``graph_scan.py``), the fp32 screen kernel (``dade_dco.py``) and the
+pure-jnp oracles (``ref.py``) cannot drift apart (the stage-helper
+contract table lives in ``docs/ARCHITECTURE.md`` §2):
 
   * ``mxu_block_sq`` — the MXU-friendly ``||q-o||² = qn + cn − 2 q·oᵀ``
     decomposition with the ``max(·, 0)`` clamp, f32 accumulation.
@@ -175,8 +177,10 @@ def merge_topk_tile(top_sq, top_ids, new_sq, new_ids, *, k: int):
 
     Portable K-step selection (min + one-hot extract) instead of
     ``lax.top_k`` so the same code lowers in Mosaic and interpret mode.
-    ``new_sq`` must already be inf for rows that must not enter (invalid,
-    failed, duplicate).  Returns (top_sq, top_ids) sorted ascending.
+    The loop unrolls K times, which bounds K at 128 (the megakernel
+    wrappers enforce ``1 <= k/ef <= 128``).  ``new_sq`` must already be
+    inf for rows that must not enter (invalid, failed, duplicate).
+    Returns (top_sq, top_ids) sorted ascending.
     """
     all_sq = jnp.concatenate([top_sq, new_sq], axis=1)
     all_ids = jnp.concatenate([top_ids, jnp.broadcast_to(new_ids, new_sq.shape)], axis=1)

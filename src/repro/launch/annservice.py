@@ -29,8 +29,8 @@ from repro.launch.mesh import shard_map
 from repro.quant.scalar import cum_err_sq
 from repro.distributed.collectives import hierarchical_topk
 
-__all__ = ["build_search_step", "search_input_specs", "autotune_refine_budget",
-           "FUSED_BLOCK_C"]
+__all__ = ["build_search_step", "build_graph_engine", "search_input_specs",
+           "autotune_refine_budget", "FUSED_BLOCK_C"]
 
 # Candidate-tile rows of the fused megakernel route; serve.py's fetch
 # report normalizes its per-wave figures with the same constant.
@@ -70,6 +70,42 @@ def autotune_refine_budget(scales, sample_rot, *, k: int, wave: int,
     in_band = max(float(in_band), 0.0)
     budget = int(np.clip(k + np.ceil(in_band * wave * safety), k, wave))
     return budget, {"band_width": 2.0 * e_band, "in_band_frac": in_band}
+
+
+def build_graph_engine(index, *, k: int, ef: int = 48, expand: int = 2,
+                       block_q: int | None = None, seed_r: bool = False,
+                       with_stats: bool = False):
+    """Serving engine for the ``--index graph`` route.
+
+    Wraps the batched beam-scan megakernel (``index.graph
+    .search_graph_fused``) behind the scheduler-shaped step the serving
+    driver expects: ``step(batch_np) -> (dists, ids[, GraphScanStats])``
+    as numpy arrays.  The graph walk is wave-synchronous with host-side
+    frontier commits, so — unlike the flat/IVF routes — it is not a single
+    shard_mapped jit step: the engine runs per host replica and the
+    batcher amortizes launches across requests (sharding the *corpus* of a
+    graph walk is a recorded ROADMAP follow-up; queries shard trivially
+    across replicas).  ``block_q`` defaults to the compiled-mode sublane
+    floor on TPU and 8 elsewhere (tile coherence beats lane occupancy in
+    interpret mode).
+    """
+    from repro.index.graph import search_graph_fused
+    from repro.kernels.ops import min_block_q, on_tpu
+
+    import numpy as np
+
+    if block_q is None:
+        block_q = min_block_q(jnp.int8) if on_tpu() else 8
+
+    def step(batch_np):
+        d, i, st = search_graph_fused(
+            index, jnp.asarray(batch_np), k=k, ef=ef, expand=expand,
+            block_q=block_q, seed_r=seed_r)
+        if with_stats:
+            return np.asarray(d), np.asarray(i), st
+        return np.asarray(d), np.asarray(i)
+
+    return step
 
 
 def _pad_dim(d: int, block: int) -> int:

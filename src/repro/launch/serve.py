@@ -24,6 +24,17 @@ def main() -> None:
     ap.add_argument("--method", default="dade",
                     choices=["dade", "adsampling", "fdscanning"])
     ap.add_argument("--p-s", type=float, default=0.02)
+    ap.add_argument("--index", default="flat", choices=["flat", "graph"],
+                    help="flat: sharded wave scan over the whole corpus "
+                         "(the default paper workload); graph: NSW index "
+                         "served through the batched beam-scan megakernel "
+                         "(host-built, implies --quant int8; corpus size "
+                         "is the O(N·ef·M) build's budget)")
+    ap.add_argument("--ef", type=int, default=48,
+                    help="beam width of the --index graph route")
+    ap.add_argument("--expand", type=int, default=2,
+                    help="frontier expansions per query per wave "
+                         "(--index graph)")
     ap.add_argument("--quant", default="none", choices=["none", "int8"],
                     help="int8: stream the corpus as 1-byte codes per wave "
                          "(repro.quant) with budgeted exact refinement")
@@ -73,6 +84,60 @@ def main() -> None:
                    ((0, 0), (0, d_pad - svc.dim)))
 
     from repro.kernels.ops import on_tpu
+
+    def request_recalls(reqs, gts):
+        """Mean recall@k per drained request vs its exact ground truth."""
+        return [
+            np.mean([len(set(req.result[1][i]) & set(gt[i])) / svc.k
+                     for i in range(len(gt))])
+            for req, gt in zip(reqs, gts)]
+
+    if args.index == "graph":
+        # Batched beam-scan route: host-built NSW graph, one megakernel
+        # launch per frontier wave, host frontier commits between waves.
+        # Per-replica engine (no shard_map — ROADMAP records corpus-sharded
+        # graph serving as a follow-up), fed by the same dynamic batcher.
+        from repro.index.graph import build_graph
+        from repro.launch.annservice import build_graph_engine
+        from repro.runtime.scheduler import BatchScheduler
+
+        gidx = build_graph(corpus, estimator=est, m=16,
+                           ef_construction=max(2 * args.ef, 64),
+                           quant="int8")
+        engine = build_graph_engine(gidx, k=svc.k, ef=args.ef,
+                                    expand=args.expand, with_stats=True)
+        g_stats = []
+
+        def g_step(batch_np):
+            d, i, st = engine(batch_np)
+            g_stats.append(st)
+            return d, i
+
+        sched = BatchScheduler(g_step, batch_size=svc.query_batch)
+        rng = np.random.default_rng(9)
+        reqs, gts = [], []
+        for r in range(args.requests):
+            nq = int(rng.integers(svc.query_batch // 2, 2 * svc.query_batch))
+            q = synthetic_queries(nq, svc.dim, corpus, seed=100 + r)
+            reqs.append(sched.submit(np.asarray(q, np.float32)))
+            _, gt = exact_knn(jnp.asarray(q), jnp.asarray(corpus), svc.k)
+            gts.append(np.asarray(gt))
+        t0 = time.perf_counter()
+        sched.drain()
+        dt = time.perf_counter() - t0
+        recalls = request_recalls(reqs, gts)
+        total_q = sum(len(g) for g in gts)
+        waves = sum(st.waves for st in g_stats)
+        fetched = np.mean([st.fetched_bytes_per_query for st in g_stats])
+        gather = np.mean([st.gather_bytes_per_query for st in g_stats])
+        skip = np.mean([st.s2_skip_rate for st in g_stats])
+        print(f"method={args.method} index=graph corpus={n} "
+              f"requests={len(reqs)} rows={total_q} ef={args.ef} "
+              f"expand={args.expand} QPS={total_q/dt:.0f} "
+              f"recall@{svc.k}={np.mean(recalls):.3f} waves={waves:.0f} "
+              f"fetched_B_per_q={fetched:.0f} "
+              f"host_gather_B_per_q={gather:.0f} s2_skip_rate={skip:.3f}")
+        return
 
     quant = None if args.quant == "none" else args.quant
     fused = on_tpu() if args.fused == "auto" else args.fused == "on"
@@ -155,11 +220,7 @@ def main() -> None:
     done = sched.drain()
     dt = time.perf_counter() - t0
     assert len(done) == len(reqs)
-    recalls = []
-    for req, gt in zip(reqs, gts):
-        ids = req.result[1]
-        recalls.append(np.mean([
-            len(set(ids[i]) & set(gt[i])) / svc.k for i in range(len(gt))]))
+    recalls = request_recalls(reqs, gts)
     total_q = sum(len(g) for g in gts)
     fetch_note = ""
     if with_stats:

@@ -16,6 +16,13 @@ definitions drift.  This module owns both accounting regimes:
     moves in (block_c, block_d) slabs fetched only while stage 2 still has
     valid active candidates.  The stage-2 skip rate is the fraction of
     slabs (out of tiles × slabs-per-tile) whose fetch was elided.
+  * **gathered (row-granular)** — bytes a host *gather* engine ships for
+    the same screen: gathers cannot read partial rows, so every screened
+    candidate costs its full fp32 + int8 dims plus the id, whatever the
+    screen later consumed.  This is the honest cost of the pre-megakernel
+    graph path (``index.graph.search_graph`` materializes each expansion's
+    ``(M, D)`` neighbour block before screening it) and the baseline the
+    beam-scan engine is measured against in fig8.
 
 ``benchmarks.common`` re-exports these helpers for the figure scripts; the
 host engines import them directly (src must not depend on benchmarks).
@@ -29,8 +36,8 @@ ID_BYTES = 4     # per-row id stream accompanying each scanned tile
 
 __all__ = [
     "INT8_BYTES", "FP32_BYTES", "ID_BYTES",
-    "two_stage_bytes", "fetched_tile_bytes", "stage2_skip_rate",
-    "stage2_fetch_report",
+    "two_stage_bytes", "fetched_tile_bytes", "row_gather_bytes",
+    "stage2_skip_rate", "stage2_fetch_report",
 ]
 
 
@@ -54,6 +61,20 @@ def fetched_tile_bytes(blocks, *, block_c: int, dims: int,
     fetches carry no ids.
     """
     return blocks * block_c * (dims * bytes_per_dim + id_bytes)
+
+
+def row_gather_bytes(rows, *, dims: int, fp_bytes: int = FP32_BYTES,
+                     int8_bytes: int = INT8_BYTES, id_bytes: int = ID_BYTES):
+    """Row-granular bytes of a host gather engine screening ``rows``
+    candidates of ``dims`` dimensions.
+
+    A gather materializes whole rows before the screen runs, so each
+    candidate pays its full fp32 row, its full int8 code row (the
+    two-stage engines stream both), and its id — independent of how many
+    dimensions the screen then consumed.  The graph beam-scan ledger
+    (``index.graph.GraphScanStats.gather_bytes_per_query``) uses this as
+    the honest host-two-stage baseline quantity."""
+    return rows * (dims * (fp_bytes + int8_bytes) + id_bytes)
 
 
 def stage2_skip_rate(s2_slabs_fetched, s2_slabs_total) -> float:
