@@ -12,6 +12,11 @@ TPU the step routes through the fused wave-scan megakernel
 (``--fused auto``), off-TPU it runs the sharded jnp wave scan.  CI runs
 this file in its smoke step; the recall assert at the bottom is the
 contract.
+
+``docs/SERVING.md`` is the full serving guide — every ``serve.py`` flag
+(including the graph route's ``--graph-shards`` corpus-sharded walk),
+what each stats-report field means in ``quant/accounting.py`` ledger
+terms, and a worked sharded-graph launch.
 """
 import argparse
 import os

@@ -25,13 +25,29 @@ layout (node v's neighbour rows stored contiguously at rows
 ``[v·A, (v+1)·A)``, A = ``adj_block``), and ONE Pallas launch
 (``repro.kernels.graph_scan``) screens the whole slab for the whole batch:
 int8×int8 MXU prefilter, demand-paged fp32 DADE re-screen, and the
-ef-sized beam window + DCO threshold r² carried in VMEM scratch — seeded
-from the previous wave and returned for the next.  The host only commits
-frontier/expansion-set updates between waves.  ``search_graph_beam_host``
-runs the identical wave schedule through the pure-jnp oracle (the host
-two-stage graph screen) — results are bit-identical by construction, so
-the engines differ only in what HBM ships (see ``GraphScanStats``'s three
-byte ledgers).
+ef-sized beam window + DCO threshold r² + packed visited bitmap carried
+in VMEM scratch — seeded from the previous wave and returned for the
+next.  The host selects the frontier between waves but never *marks*
+expansions: the kernel owns the mask (bit v of the per-tile bitmap set as
+node v's tile streams through), the host only reads the returned bitmap.
+``search_graph_beam_host`` runs the identical wave schedule through the
+pure-jnp oracle (the host two-stage graph screen) — results are
+bit-identical by construction, so the engines differ only in what HBM
+ships (see ``GraphScanStats``'s three byte ledgers).
+
+Sharded serving (``search_graph_sharded``): the corpus-sharded walk.  The
+adjacency-flat slab is split into ``num_shards`` contiguous node ranges;
+each wave, every shard screens only the frontier nodes it owns (one
+kernel launch per shard over its local slab, thresholds FROZEN at the
+wave-start r² — ``tighten=False``), and between waves the per-query beam
+windows and visited bitmaps of all shards are all-gathered and merged
+(``merge_shard_windows``: EF-best distinct-by-id; bitmaps OR).  Because a
+frozen-threshold wave is order-independent and the merge is the global
+EF-best over the union, the S-shard walk is bit-identical to the
+single-host walk for every S — the acceptance property the tests and
+fig9 assert against ``num_shards=1, use_ref=True`` (the single-host beam
+oracle).  ``launch.annservice.build_sharded_graph_engine`` runs the same
+wave step across a real device mesh via ``shard_map``.
 """
 
 from __future__ import annotations
@@ -46,10 +62,16 @@ import numpy as np
 
 from repro.core.dco import dco_screen
 from repro.core.estimators import Estimator, build_estimator
-from repro.kernels.ops import fused_fetch_totals, graph_scan_kernel
+from repro.kernels.ops import (
+    fused_fetch_totals,
+    graph_scan_kernel,
+    graph_vis_words,
+    unpack_vis,
+)
 from repro.quant.accounting import (
     ID_BYTES,
     fetched_tile_bytes,
+    frontier_exchange_bytes,
     row_gather_bytes,
     stage2_fetch_report,
     two_stage_bytes,
@@ -64,7 +86,9 @@ from repro.quant.scalar import (
 from repro.quant.screen import two_stage_screen
 
 __all__ = ["GraphIndex", "build_graph", "search_graph",
-           "search_graph_fused", "search_graph_beam_host", "GraphScanStats"]
+           "search_graph_fused", "search_graph_beam_host", "GraphScanStats",
+           "search_graph_sharded", "GraphShardedStats",
+           "merge_shard_windows", "shard_graph_nodes"]
 
 _SENTINEL = 1e18
 
@@ -556,9 +580,11 @@ def _select_wave(top_sq, top_ids, expanded, route_sq, *, q_tiles, block_q,
     screen its neighbours would all be pruned anyway; entries are sorted
     ascending, so the first miss ends the query's scan).  Per tile, the
     deduplicated union: a node any tile query proposes is screened for the
-    WHOLE tile, so it is marked expanded at tile granularity (the decision
-    record in ROADMAP).  Returns a list of node lists, one per tile
-    (empty = tile converged)."""
+    WHOLE tile, at tile granularity (the decision record in
+    docs/ARCHITECTURE.md §3).  Pure selection — ``expanded`` (unpacked
+    from the device-owned visited bitmap the previous wave returned) is
+    only read; the KERNEL marks this wave's picks as it streams them.
+    Returns a list of node lists, one per tile (empty = tile converged)."""
     picked = []
     for t in range(q_tiles):
         sel: list[int] = []
@@ -580,54 +606,25 @@ def _select_wave(top_sq, top_ids, expanded, route_sq, *, q_tiles, block_q,
                 budget -= 1
                 if budget == 0:
                     break
-        for v in sel:
-            exp_t[v] = True
         picked.append(sel)
     return picked
 
 
-def _beam_scan(
-    index: GraphIndex,
-    queries: jax.Array,
-    *,
-    k: int,
-    ef: int,
-    expand: int,
-    block_q: int,
-    max_waves: int,
-    seed_r: bool,
-    decoupled: bool,
-    route_mult: float,
-    interpret: bool | None,
-    use_ref: bool,
-):
-    """Shared wave driver for the fused and host beam engines.
-
-    Host-side numpy orchestration: frontier selection, tile-granular
-    expansion marking, and wave-count bookkeeping; everything per-candidate
-    — screening, beam maintenance, threshold tightening — happens in the
-    one launch per wave (``kernels.graph_scan``, or its oracle when
-    ``use_ref``).  Wave step counts are rounded up to powers of two (the
-    kernel skips -1 steps) so the number of distinct compiled shapes stays
-    logarithmic in the frontier size.
-    """
-    if not index.has_fused:
-        raise ValueError(
-            "batched beam scan needs build_graph(..., quant='int8')")
-    if not 1 <= k <= ef:
-        raise ValueError(f"need 1 <= k <= ef, got k={k} ef={ef}")
-    thresh_col = (k - 1) if decoupled else (ef - 1)
+def _prep_wave_state(index: GraphIndex, queries: jax.Array, *, k: int,
+                     ef: int, block_q: int, seed_r: bool):
+    """Shared prologue of the single-host and sharded beam drivers: rotate
+    and tile-sort the queries, seed the window with the entry point, and
+    (optionally) the threshold floor.  Returns everything host-side."""
     est = index.estimator
     q = queries.astype(jnp.float32)
     q_rot = est.rotate(q)
-    qn, dim = q_rot.shape
-    n = index.corpus_rot.shape[0]
+    qn = q_rot.shape[0]
 
     # Tile coherence: sort queries along the leading (max-variance) PCA
     # coordinate so a tile's walks traverse overlapping graph regions and
     # the per-tile frontier union stays small.
     order = jnp.argsort(q_rot[:, 0])
-    inv = jnp.argsort(order)
+    inv = np.asarray(jnp.argsort(order))
     q_sorted = np.asarray(q_rot[order])
     q_tiles = (qn + block_q - 1) // block_q
     q_pad = q_tiles * block_q
@@ -649,10 +646,84 @@ def _beam_scan(
             _beam_seed_rsq(index, jnp.asarray(q_sorted[:qn]), k))
     else:
         seed_vec[:qn] = np.inf
+    return inv, q_sorted, q_tiles, q_pad, qn, entry, top_sq, top_ids, seed_vec
 
-    expanded = np.zeros((q_tiles, n), bool)
+
+def _run_wave_loop(
+    index: GraphIndex,
+    queries: jax.Array,
+    *,
+    k: int,
+    ef: int,
+    expand: int,
+    block_q: int,
+    max_waves: int,
+    seed_r: bool,
+    decoupled: bool,
+    route_mult: float,
+    num_shards: int,
+    tighten: bool,
+    interpret: bool | None,
+    use_ref: bool,
+    wave_step=None,
+):
+    """THE wave driver — every beam engine (single-replica fused/host,
+    host-simulated sharded, mesh-backed sharded) runs this one loop, so
+    frontier selection, wave accounting, and state carry cannot drift
+    between engines.
+
+    Host-side numpy orchestration: frontier selection and wave-count
+    bookkeeping; everything per-candidate — screening, beam maintenance,
+    threshold handling (tightened in-wave when ``tighten``, frozen at the
+    wave start otherwise — the sharded schedule), expansion marking (the
+    packed visited bitmap carried in the wave state) — happens in the one
+    launch per wave per shard (``kernels.graph_scan``, or its oracle when
+    ``use_ref``; ``wave_step`` swaps in the ``shard_map``'d device step).
+    Wave step counts are rounded up to powers of two (the kernel skips -1
+    steps) so the number of distinct compiled shapes stays logarithmic in
+    the frontier size.  With more than one shard, windows merge via
+    ``merge_shard_windows`` and bitmaps OR between waves; one shard skips
+    the merge (it is the identity there).
+
+    Returns ``(dists, ids, acc)`` with ``acc`` the raw accounting the
+    public drivers turn into ``GraphScanStats``/``GraphShardedStats``:
+    waves, stats cols 0-3 (``sem``), per-shard s1/s2 fetch counters,
+    exchange bytes, and the query count.
+    """
+    if not index.has_fused:
+        raise ValueError(
+            "batched beam scan needs build_graph(..., quant='int8')")
+    if not 1 <= k <= ef:
+        raise ValueError(f"need 1 <= k <= ef, got k={k} ef={ef}")
+    thresh_col = (k - 1) if decoupled else (ef - 1)
+    est = index.estimator
+    n = index.corpus_rot.shape[0]
+    ranges = shard_graph_nodes(n, num_shards)
+    a_block = index.adj_block
+    inv, q_sorted, q_tiles, q_pad, qn, entry, top_sq, top_ids, seed_vec = \
+        _prep_wave_state(index, queries, k=k, ef=ef, block_q=block_q,
+                         seed_r=seed_r)
+
+    # The expansion mask lives ON DEVICE: a packed per-query-tile bitmap
+    # carried through the kernel like the beam window.  The host reads it
+    # back for frontier selection but never writes a mark.
+    words = graph_vis_words(n)
+    vis = np.zeros((q_tiles, words), np.int32)
+    if wave_step is None:
+        if num_shards == 1:
+            slabs = [(index.adj_rot, index.adj_codes, index.adj_ids)]
+        else:
+            slabs = [
+                (index.adj_rot[b * a_block: (b + c) * a_block],
+                 index.adj_codes[b * a_block: (b + c) * a_block],
+                 index.adj_ids[b * a_block: (b + c) * a_block])
+                for b, c in ranges
+            ]
+
     sem = np.zeros((4,), np.float64)  # stats cols 0-3 summed over waves
-    s1_tiles = s2_slabs = 0.0
+    s1_tiles = np.zeros((num_shards,), np.float64)
+    s2_slabs = np.zeros((num_shards,), np.float64)
+    exch_bytes = 0.0
     waves = 0
     while waves < max_waves:
         r0 = np.minimum(seed_vec, top_sq[:, thresh_col])
@@ -661,14 +732,13 @@ def _beam_scan(
             # own distance may exceed a seeded threshold, but its
             # neighbourhood is what fills the window).
             picked = [[entry] for _ in range(q_tiles)]
-            expanded[:, entry] = True
         else:
             # The routing radius widens the proposal gate beyond the DCO
             # threshold (squared-distance multiplier): entries past r
             # cannot enter the result, but expanding them reaches
             # neighbourhoods the tight walk would miss — the beam-width
             # dial of the batched engine.
-            picked = _select_wave(top_sq, top_ids, expanded,
+            picked = _select_wave(top_sq, top_ids, unpack_vis(vis, n),
                                   r0 * route_mult, q_tiles=q_tiles,
                                   block_q=block_q, qn=qn, expand=expand,
                                   ef=ef)
@@ -679,24 +749,92 @@ def _beam_scan(
         offs = np.full((q_tiles, steps), -1, np.int32)
         for t, sel in enumerate(picked):
             offs[t, : len(sel)] = sel  # node id == tile offset (adj layout)
-        t_sq, t_ids, st = graph_scan_kernel(
-            est, jnp.asarray(q_sorted), jnp.asarray(offs),
-            jnp.asarray(top_sq), jnp.asarray(top_ids), jnp.asarray(r0),
-            index.adj_rot, index.adj_codes, index.adj_ids, index.gscales,
-            ef=ef, thresh_col=thresh_col, block_q=block_q,
-            block_c=index.adj_block, block_d=index.scan_block_d,
-            interpret=interpret, use_ref=use_ref)
+        # Scatter the frontier: each shard sees only the nodes it owns,
+        # localized to its slab (same step positions, -1 elsewhere).
+        offs_sh = np.full((num_shards, q_tiles, steps), -1, np.int32)
+        for s, (b, c) in enumerate(ranges):
+            own = (offs >= b) & (offs < b + c)
+            offs_sh[s] = np.where(own, offs - b, -1)
+
+        if wave_step is not None:
+            t_sq, t_ids, t_vis, st_sh = wave_step(
+                offs_sh, q_sorted, top_sq, top_ids, r0, vis)
+        else:
+            g_sq, g_ids, g_vis, g_st = [], [], [], []
+            for s, (b, c) in enumerate(ranges):
+                a_rot, a_codes, a_ids = slabs[s]
+                sq_s, id_s, st_s, vis_s = graph_scan_kernel(
+                    est, jnp.asarray(q_sorted), jnp.asarray(offs_sh[s]),
+                    jnp.asarray(top_sq), jnp.asarray(top_ids),
+                    jnp.asarray(r0), a_rot, a_codes, a_ids, index.gscales,
+                    jnp.asarray(vis), vis_base=b, vis_nodes=n,
+                    ef=ef, thresh_col=thresh_col, block_q=block_q,
+                    block_c=a_block, block_d=index.scan_block_d,
+                    tighten=tighten, interpret=interpret, use_ref=use_ref)
+                g_sq.append(jnp.asarray(sq_s))
+                g_ids.append(jnp.asarray(id_s))
+                g_vis.append(np.asarray(vis_s, np.int32))
+                g_st.append(np.asarray(st_s))
+            if num_shards == 1:
+                t_sq, t_ids, t_vis = g_sq[0], g_ids[0], g_vis[0]
+            else:
+                t_sq, t_ids = merge_shard_windows(
+                    jnp.stack(g_sq), jnp.stack(g_ids), ef=ef)
+                t_vis = g_vis[0]
+                for v in g_vis[1:]:
+                    t_vis = t_vis | v
+            st_sh = np.stack(g_st)
+
         top_sq = np.asarray(t_sq, np.float32)
         top_ids = np.asarray(t_ids, np.int32)
-        st = np.asarray(st)
-        sem += st[:qn, :4].sum(axis=0)
-        w_s1, w_s2 = fused_fetch_totals(st, block_q)
-        s1_tiles += w_s1
-        s2_slabs += w_s2
+        vis = np.asarray(t_vis, np.int32)
+        st_sh = np.asarray(st_sh)
+        for s in range(num_shards):
+            sem += st_sh[s][:qn, :4].sum(axis=0)
+            w1, w2 = fused_fetch_totals(st_sh[s], block_q)
+            s1_tiles[s] += w1
+            s2_slabs[s] += w2
+        exch_bytes += frontier_exchange_bytes(
+            num_shards=num_shards, queries=q_pad, ef=ef,
+            vis_words=q_tiles * words, q_tiles=q_tiles, steps=steps)
         waves += 1
 
-    dists = np.sqrt(np.maximum(top_sq[:qn], 0.0))[np.asarray(inv)][:, :k]
-    ids = top_ids[:qn][np.asarray(inv)][:, :k]
+    dists = np.sqrt(np.maximum(top_sq[:qn], 0.0))[inv][:, :k]
+    ids = top_ids[:qn][inv][:, :k]
+    acc = dict(waves=waves, sem=sem, s1_tiles=s1_tiles, s2_slabs=s2_slabs,
+               exch_bytes=exch_bytes, qn=qn)
+    return dists, ids, acc
+
+
+def _beam_scan(
+    index: GraphIndex,
+    queries: jax.Array,
+    *,
+    k: int,
+    ef: int,
+    expand: int,
+    block_q: int,
+    max_waves: int,
+    seed_r: bool,
+    decoupled: bool,
+    route_mult: float,
+    interpret: bool | None,
+    use_ref: bool,
+):
+    """The single-replica beam engines: the shared wave loop
+    (``_run_wave_loop`` with one shard and in-wave threshold tightening)
+    plus the ``GraphScanStats`` ledger epilogue."""
+    dim = queries.shape[1]
+    dists, ids, acc = _run_wave_loop(
+        index, queries, k=k, ef=ef, expand=expand, block_q=block_q,
+        max_waves=max_waves, seed_r=seed_r, decoupled=decoupled,
+        route_mult=route_mult, num_shards=1, tighten=True,
+        interpret=interpret, use_ref=use_ref)
+    qn = acc["qn"]
+    sem = acc["sem"]
+    waves = acc["waves"]
+    s1_tiles = float(acc["s1_tiles"].sum())
+    s2_slabs = float(acc["s2_slabs"].sum())
 
     rows = max(float(sem[2]), 1.0)
     d_pad = index.adj_rot.shape[1]
@@ -799,3 +937,233 @@ def search_graph_beam_host(
                       block_q=block_q, max_waves=max_waves, seed_r=seed_r,
                       decoupled=decoupled, route_mult=route_mult,
                       interpret=None, use_ref=True)
+
+
+# ---------------------------------------------------------------------------
+# Sharded beam-scan serving: cross-shard frontier exchange
+# ---------------------------------------------------------------------------
+
+
+def shard_graph_nodes(n: int, num_shards: int):
+    """Contiguous node ranges of the corpus-sharded walk: shard s owns
+    nodes ``[s·(n/S), (s+1)·(n/S))`` — and therefore rows
+    ``[base·adj_block, (base+count)·adj_block)`` of the adjacency-flat
+    slab, so the device sharding boundary always lands on a node boundary.
+    Fails fast, naming the offending values, when the split is uneven."""
+    if num_shards < 1:
+        raise ValueError(
+            f"sharded graph serving needs num_shards >= 1, got "
+            f"num_shards={num_shards}")
+    if n % num_shards:
+        raise ValueError(
+            f"sharded graph serving needs the node count to split evenly "
+            f"across shards: corpus nodes n={n} % num_shards={num_shards} "
+            f"!= 0 (pad the corpus or pick a shard count that divides it)")
+    per = n // num_shards
+    return [(s * per, per) for s in range(num_shards)]
+
+
+def merge_shard_windows(g_sq: jax.Array, g_ids: jax.Array, *, ef: int):
+    """Cross-shard beam-window merge: (S, Q, EF) per-shard windows ->
+    (Q, EF) global window, the EF best *distinct* ids by distance.
+
+    Pure jnp so the same arithmetic runs inside the ``shard_map``'d wave
+    step (after ``all_gather``) and in the host-simulated sharded driver —
+    the two paths cannot drift.  Determinism/invariance properties the
+    sharded walk rests on:
+
+      * entries are ordered by a STABLE sort on distance with the shard
+        index as the implicit tie-break (concatenation order), so the
+        merge is deterministic for any gather order the mesh produces;
+      * duplicates (the carried-in window appears in every shard's output;
+        a node admitted by two shards carries bit-identical distances —
+        its replicated adjacency rows are byte-equal copies) keep the
+        first occurrence, so merged values never depend on which shard
+        reported them;
+      * for S=1 the merge is the identity (the kernel window is already
+        ascending and duplicate-free), which is why the single-host oracle
+        run IS the ``num_shards=1`` run.
+
+    Known tie caveat: two DISTINCT node ids at exactly equal fp32 distance
+    competing for the EF-th slot are ordered by shard here but by in-launch
+    insertion order on a single shard, so bit-identity across shard counts
+    is guaranteed only up to exact-distance ties between different nodes
+    (duplicate corpus rows under different ids).  Ties of the same id are
+    fully handled; float corpora make cross-id ties measure-zero and the
+    deterministic fixtures never hit one.
+    """
+    s, qn2, ef2 = g_sq.shape
+    if ef2 != ef:
+        raise ValueError(
+            f"shard windows carry ef={ef2} columns, merge asked for "
+            f"ef={ef}")
+    sq = jnp.moveaxis(g_sq, 0, 1).reshape(qn2, s * ef)
+    ids = jnp.moveaxis(g_ids, 0, 1).reshape(qn2, s * ef)
+    order = jnp.argsort(sq, axis=1, stable=True)
+    sq_s = jnp.take_along_axis(sq, order, axis=1)
+    ids_s = jnp.take_along_axis(ids, order, axis=1)
+    # dup[q, j]: some i < j (distance order) holds the same real id — keep
+    # the first.  Sort-based, not pairwise: a stable sort by id makes
+    # equal ids adjacent IN DISTANCE ORDER (stability preserves the
+    # incoming order within each id group), so flagging everything equal
+    # to its predecessor marks exactly the non-first occurrences; the
+    # inverse permutation scatters the flags back.  O(SE log SE) per
+    # query instead of the (Q, SE, SE) equality cube.
+    order_id = jnp.argsort(ids_s, axis=1, stable=True)
+    by_id = jnp.take_along_axis(ids_s, order_id, axis=1)
+    adj_dup = jnp.concatenate(
+        [jnp.zeros((qn2, 1), bool),
+         (by_id[:, 1:] == by_id[:, :-1]) & (by_id[:, 1:] >= 0)], axis=1)
+    inv_id = jnp.argsort(order_id, axis=1, stable=True)
+    dup = jnp.take_along_axis(adj_dup, inv_id, axis=1)
+    sq_d = jnp.where(dup, jnp.inf, sq_s)
+    ids_d = jnp.where(dup, -1, ids_s)
+    order2 = jnp.argsort(sq_d, axis=1, stable=True)
+    return (jnp.take_along_axis(sq_d, order2, axis=1)[:, :ef],
+            jnp.take_along_axis(ids_d, order2, axis=1)[:, :ef])
+
+
+class GraphShardedStats(NamedTuple):
+    """Per-batch accounting of the corpus-sharded beam scan.
+
+    The fetch ledgers are PER SHARD (what each shard's HBM shipped — the
+    quantity a capacity planner needs, since shards fetch concurrently)
+    plus their sum; the exchange ledger counts the cross-shard frontier
+    traffic (``repro.quant.accounting.frontier_exchange_bytes``: the
+    all-gathered windows/r²/bitmaps and the scattered frontier offsets).
+    Totals match the single-host walk exactly — splitting a frozen wave
+    across shards moves bytes between ledgers, it does not create or
+    destroy work — which fig9 asserts.
+    """
+
+    waves: float  # frontier waves until convergence (shard-count-invariant)
+    num_shards: int
+    rows_per_query: float  # valid neighbour rows screened / query (all shards)
+    passed_per_query: float  # rows surviving the full screen / query
+    bytes_per_query: float  # semantic dims-consumed ledger, summed
+    fetched_bytes_per_query: float  # DMA ledger summed over shards
+    shard_fetched_bytes_per_query: tuple  # per-shard DMA ledger
+    shard_s1_tiles_fetched: tuple  # per-shard int8 adjacency tiles DMA'd
+    shard_s2_slabs_fetched: tuple  # per-shard fp slabs DMA'd on demand
+    s2_skip_rate: float  # fetch elision over all shards
+    exchange_bytes_per_wave: float  # cross-shard frontier traffic / wave
+    exchange_bytes_per_query: float  # total exchange / query
+
+
+def _beam_scan_sharded(
+    index: GraphIndex,
+    queries: jax.Array,
+    *,
+    k: int,
+    ef: int,
+    expand: int,
+    block_q: int,
+    max_waves: int,
+    seed_r: bool,
+    decoupled: bool,
+    route_mult: float,
+    num_shards: int,
+    interpret: bool | None,
+    use_ref: bool,
+    wave_step=None,
+):
+    """The corpus-sharded engines: the shared wave loop
+    (``_run_wave_loop`` with the wave-start threshold FROZEN —
+    ``tighten=False`` — and cross-shard window/bitmap merges between
+    waves) plus the ``GraphShardedStats`` ledger epilogue.  ``wave_step``
+    (built by ``launch.annservice.build_sharded_graph_engine``) replaces
+    the host-simulated per-shard launches with one ``shard_map``'d device
+    step — identical arithmetic, so the two paths return identical
+    results."""
+    dim = queries.shape[1]
+    dists, ids, acc = _run_wave_loop(
+        index, queries, k=k, ef=ef, expand=expand, block_q=block_q,
+        max_waves=max_waves, seed_r=seed_r, decoupled=decoupled,
+        route_mult=route_mult, num_shards=num_shards, tighten=False,
+        interpret=interpret, use_ref=use_ref, wave_step=wave_step)
+    qn = acc["qn"]
+    sem = acc["sem"]
+    waves = acc["waves"]
+    s1_tiles = acc["s1_tiles"]
+    s2_slabs = acc["s2_slabs"]
+    exch_bytes = acc["exch_bytes"]
+    a_block = index.adj_block
+
+    rows = max(float(sem[2]), 1.0)
+    d_pad = index.adj_rot.shape[1]
+    fp_bytes = jnp.dtype(index.adj_rot.dtype).itemsize
+    seed_bytes = (index.degree * dim + 4 * k * dim) if seed_r else 0
+    shard_fetched = []
+    s2_total_all = 0.0
+    for s in range(num_shards):
+        s2_fetched_b, _, _, s2_total = stage2_fetch_report(
+            s1_tiles[s], s2_slabs[s], block_c=a_block, d_pad=d_pad,
+            block_d=index.scan_block_d, fp_bytes=fp_bytes)
+        s2_total_all += s2_total
+        shard_fetched.append(
+            (fetched_tile_bytes(s1_tiles[s], block_c=a_block, dims=d_pad,
+                                bytes_per_dim=1, id_bytes=ID_BYTES)
+             + s2_fetched_b) / qn)
+    skip = (1.0 - float(s2_slabs.sum()) / s2_total_all) if s2_total_all \
+        else 0.0
+    stats = GraphShardedStats(
+        waves=float(waves),
+        num_shards=num_shards,
+        rows_per_query=rows / qn,
+        passed_per_query=float(sem[3]) / qn,
+        bytes_per_query=float(two_stage_bytes(
+            sem[0], sem[1], fp_bytes=fp_bytes)) / qn + seed_bytes,
+        fetched_bytes_per_query=float(sum(shard_fetched)) + seed_bytes,
+        shard_fetched_bytes_per_query=tuple(shard_fetched),
+        shard_s1_tiles_fetched=tuple(s1_tiles.tolist()),
+        shard_s2_slabs_fetched=tuple(s2_slabs.tolist()),
+        s2_skip_rate=skip,
+        exchange_bytes_per_wave=exch_bytes / max(waves, 1),
+        exchange_bytes_per_query=exch_bytes / qn,
+    )
+    return jnp.asarray(dists), jnp.asarray(ids), stats
+
+
+def search_graph_sharded(
+    index: GraphIndex,
+    queries: jax.Array,
+    *,
+    num_shards: int,
+    k: int = 10,
+    ef: int = 48,
+    expand: int = 2,
+    block_q: int = 8,
+    max_waves: int = 64,
+    seed_r: bool = False,
+    decoupled: bool = True,
+    route_mult: float = 1.0,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+    wave_step=None,
+):
+    """Corpus-sharded batched graph search: the global walk split over
+    ``num_shards`` contiguous node ranges with cross-shard frontier
+    exchange between waves.
+
+    Wave semantics differ from ``search_graph_fused`` in exactly one way:
+    the DCO threshold is FROZEN at the wave-start r² for the whole wave
+    (``tighten=False`` in the kernel) instead of tightening after every
+    expansion, because a frozen wave is order-independent — shard A
+    screening its expansions concurrently with shard B must commute.  The
+    payoff is shard-count invariance: for every ``num_shards`` (1
+    included) the walk visits the same nodes, fills the same windows, and
+    returns bit-identical ids — so ``num_shards=1, use_ref=True`` (the
+    single-host beam oracle on the unsharded slab) is the acceptance
+    comparator for any sharded run, kernel or mesh-backed
+    (``launch.annservice.build_sharded_graph_engine`` passes
+    ``wave_step``).  Frozen waves trade a few extra screened rows for the
+    commutativity; the per-shard fetch ledgers and the exchange ledger in
+    ``GraphShardedStats`` price both sides.
+
+    Returns (dists (Q, K), ids (Q, K), GraphShardedStats).
+    """
+    return _beam_scan_sharded(
+        index, queries, k=k, ef=ef, expand=expand, block_q=block_q,
+        max_waves=max_waves, seed_r=seed_r, decoupled=decoupled,
+        route_mult=route_mult, num_shards=num_shards, interpret=interpret,
+        use_ref=use_ref, wave_step=wave_step)

@@ -7,8 +7,9 @@ traffic); ivf_scan.py -- demand-paged fused IVF wave-scan megakernel
 (gather-free bucket streaming, manually double-buffered int8 DMA, fp32
 slabs fetched only for tiles with stage-1 survivors, on-device top-K);
 graph_scan.py -- fused graph beam-scan megakernel (one launch per frontier
-wave, resumable on-device beam window seeded/returned across launches,
-same manual-DMA pipeline over the adjacency-flat layout);
+wave; the beam window, threshold, and packed visited bitmap are
+seeded/returned across launches, same manual-DMA pipeline over the
+adjacency-flat layout; frozen-threshold mode for the sharded walk);
 tiles.py -- the per-tile stage/merge helpers every kernel and oracle
 shares; ops.py -- jit'd public wrappers with padding + CPU interpret
 fallback; ref.py -- pure-jnp oracles (fetch decisions included).
@@ -19,10 +20,12 @@ from repro.kernels.ops import (
     dco_screen_kernel,
     fused_fetch_totals,
     graph_scan_kernel,
+    graph_vis_words,
     ivf_scan_kernel,
     min_block_q,
     on_tpu,
     quant_screen_kernel,
+    unpack_vis,
 )
 from repro.kernels.ref import (
     dade_dco_ref,
@@ -37,6 +40,8 @@ __all__ = [
     "fused_fetch_totals",
     "ivf_scan_kernel",
     "graph_scan_kernel",
+    "graph_vis_words",
+    "unpack_vis",
     "min_block_q",
     "quant_screen_kernel",
     "on_tpu",

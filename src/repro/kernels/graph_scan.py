@@ -37,6 +37,26 @@ to "probe a data-dependent frontier":
     fetched only while ``tiles.stage2_need`` reports valid active
     candidates).  An expansion whose whole neighbour block is stage-1
     pruned pays zero fp32 bytes.
+  * **Device-side visited bitmap.**  The per-query-tile expansion mask is
+    a packed int32 bitmap (bit v set = node v expanded for this tile)
+    carried in the wave state exactly like the beam window: seeded from
+    ``vis0``, OR-updated in VMEM scratch as each real step expands its
+    node, and returned as an output.  The host never marks expansions —
+    it only *reads* the returned bitmap when selecting the next frontier,
+    which is what lets commits happen per shard per wave under sharded
+    serving (the scalar-prefetched ``vis_base`` shifts local tile offsets
+    into the global node id space, so every shard marks the same global
+    bitmap).  Marking changes no results — re-screens were already sound
+    (r never loosens, ``dup_mask`` blocks double admission); the bitmap
+    only moves who owns the mask.
+  * **Frozen-threshold (sharded) mode.**  ``tighten=False`` skips the
+    in-wave r² tightening after each merge: every expansion of the launch
+    screens at the carried-in wave-start threshold, so a wave's result is
+    independent of the order its expansions are screened in — the
+    property that makes an S-shard walk (each shard screening its own
+    subset of the wave, windows merged between waves) bit-identical to
+    the single-host walk.  Default ``tighten=True`` keeps the PR-4
+    single-host semantics (tighter screens, fewer bytes).
 
 Soundness is inherited: stage 1 prunes only candidates whose lower bound
 already fails the DADE test at threshold r² (the EF-th best so far, or the
@@ -54,11 +74,18 @@ lowering additionally needs ``block_q >= ops.min_block_q(int8) == 32``,
 ``block_c >= 32`` (int8 sublane floor — the adjacency build pads neighbour
 blocks up to it) and ``block_d % 128 == 0`` (lane-aligned stage-2 slab DMA).
 
-Scratch layout (identical to ``ivf_scan`` plus the seeded window):
+Scratch layout (identical to ``ivf_scan`` plus the seeded window and the
+visited bitmap):
 
     codes_buf (2, BC, D) int8  — stage-1 double buffer (slots alternate)
     rows_buf  (BC, D) fp       — stage-2 landing buffer, filled slab-wise
-    slot_s    (1, 1) i32 SMEM  — which codes_buf slot holds this step's tile
+    slot_s    (1, 2) i32 SMEM  — [0]: codes_buf slot holding this step's
+                                 tile; [1]: offset of the last tile whose
+                                 DMA was issued (-1 before the first) — the
+                                 cross-gap reuse cursor: a real step whose
+                                 offset matches it re-screens the landed
+                                 buffer even if -1 gap steps intervened
+    vis_s     (1, W) i32 VMEM  — packed visited bitmap for this query tile
     sem8      DMA (2,)         — one semaphore per stage-1 slot
     sem32     DMA ()           — stage-2 slab semaphore (sequential)
 """
@@ -86,6 +113,8 @@ def _kernel(
     # scalar prefetch
     offs_ref,  # (q_tiles, steps) i32 — candidate-tile offset per grid step;
     # steps past this wave's frontier carry -1 (skipped entirely)
+    base_ref,  # (1,) i32 — global node id of local tile 0 (shard base);
+    # 0 when the slab is the whole corpus
     # inputs
     qcodes_ref,  # (QT, D) int8 query codes
     q_ref,  # (QT, D) f32 exact rotated queries
@@ -93,6 +122,7 @@ def _kernel(
     top0_sq_ref,  # (QT, EF) f32 — beam window carried in from the last wave
     top0_ids_ref,  # (QT, EF) i32
     rsq0_ref,  # (QT, 1) f32 thresholds carried in (min of seed and EF-th)
+    vis0_ref,  # (1, W) i32 — packed visited bitmap carried in
     codes_hbm,  # (N_adj, D) int8 adjacency-flat codes — HBM-resident (ANY)
     rows_hbm,  # (N_adj, D) fp adjacency-flat rows — HBM-resident (ANY)
     ids_ref,  # (1, BC) i32 neighbour ids of this step's tile, -1 padding
@@ -103,14 +133,16 @@ def _kernel(
     top_sq_ref,  # (QT, EF) f32
     top_ids_ref,  # (QT, EF) i32
     stats_ref,  # (QT, 6) f32 — see STATS_COLS
+    vis_ref,  # (1, W) i32 — bitmap with this wave's expansions marked
     # scratch
     top_sq_s,  # (QT, EF) f32 VMEM
     top_ids_s,  # (QT, EF) i32 VMEM
     rsq_s,  # (QT, 1) f32 VMEM
     stats_s,  # (QT, 6) f32 VMEM
+    vis_s,  # (1, W) i32 VMEM — visited bitmap carried across the wave
     codes_buf,  # (2, BC, D) int8 VMEM — stage-1 double buffer
     rows_buf,  # (BC, D) fp VMEM — stage-2 landing buffer
-    slot_s,  # (1, 1) i32 SMEM — codes_buf slot holding this step's tile
+    slot_s,  # (1, 2) i32 SMEM — [slot cursor, last issued offset]
     sem8,  # DMA (2,) — stage-1 per-slot semaphores
     sem32,  # DMA () — stage-2 slab semaphore
     *,
@@ -120,6 +152,7 @@ def _kernel(
     block_c: int,
     block_d: int,
     slack: float,
+    tighten: bool,
 ):
     i = pl.program_id(0)
     step = pl.program_id(1)
@@ -139,31 +172,42 @@ def _kernel(
 
     @pl.when(step == 0)
     def _init():
-        # Resume the beam: the window and threshold carried in from the
-        # previous wave (or the entry-point seed at wave 0) land in scratch.
+        # Resume the beam: the window, threshold, and visited bitmap carried
+        # in from the previous wave (or the entry-point seed at wave 0) land
+        # in scratch.
         top_sq_s[...] = top0_sq_ref[...]
         top_ids_s[...] = top0_ids_ref[...]
         rsq_s[...] = rsq0_ref[...]
+        vis_s[...] = vis0_ref[...]
         stats_s[...] = jnp.zeros_like(stats_s)
         slot_s[0, 0] = 0
+        slot_s[0, 1] = -1  # no tile issued yet
 
     @pl.when((step == 0) & real)
     def _warmup():
         codes_dma(0, step).start()  # wave 0's tile into slot 0
 
     cur = slot_s[0, 0]
-    # A real step whose offset equals the previous step's re-screens the
-    # landed buffer (the driver dedups a wave's expansions, but the logic
-    # stays identical to ivf_scan so the oracle models one rule).
-    prev = jnp.maximum(step - 1, 0)
-    fresh = real & jnp.logical_or(step == 0, off != off_at(prev))
+    # Cross-gap buffer reuse: a real step whose offset equals the last
+    # *issued* offset (not merely the previous step's — gap steps carry -1
+    # and issue nothing) re-screens the landed buffer.  The reuse cursor
+    # lives in SMEM and the oracle mirrors the same rule, so the fetch
+    # counters stay bit-comparable.
+    last = slot_s[0, 1]
+    fresh = real & (off != last)
+    # The tile resident (or inbound) in ``cur`` after this step: unchanged
+    # by gap steps, this step's offset otherwise.
+    resident = jnp.where(real, off, last)
 
     # Issue the NEXT real tile's int8 copy into the other slot before
     # waiting on the current one — stage-1 DMA overlaps this step's
-    # screen work, exactly the ivf_scan pipeline.
+    # screen work, exactly the ivf_scan pipeline.  The prefetch predicate
+    # compares against ``resident`` (the reuse cursor's next value), so a
+    # window ending in gap steps does not force a refetch of a tile that
+    # is still landed.
     nxt = jnp.minimum(step + 1, num_steps - 1)
     nxt_fresh = ((step + 1 < num_steps) & (off_at(nxt) >= 0)
-                 & (off_at(nxt) != off))
+                 & (off_at(nxt) != resident))
 
     @pl.when(nxt_fresh)
     def _prefetch():
@@ -173,6 +217,20 @@ def _kernel(
     @pl.when(fresh)
     def _land():
         codes_dma(cur, step).wait()
+
+    slot_s[0, 1] = resident
+
+    @pl.when(real)
+    def _mark_expanded():
+        # Set bit (off + base) of the packed per-tile bitmap: the expansion
+        # commit the host driver used to perform.  base shifts local slab
+        # offsets into the global node id space under sharded serving.
+        goff = off + base_ref[0]
+        word = goff // 32
+        bit = jax.lax.rem(goff, 32)
+        iota_w = jax.lax.broadcasted_iota(jnp.int32, vis_s.shape, 1)
+        vis_s[...] = vis_s[...] | jnp.where(
+            iota_w == word, jnp.left_shift(jnp.int32(1), bit), jnp.int32(0))
 
     @pl.when(real)
     def _screen_tile():
@@ -252,21 +310,26 @@ def _kernel(
             # r² = the (thresh_col+1)-th best of the window — the K-th for
             # the paper's HNSW++-style decoupled threshold (default), the
             # EF-th for the coupled variant; tightens across the wave's
-            # expansions on device, no host round-trip.
-            rsq_s[...] = jnp.minimum(
-                rsq_s[...], top_sq[:, thresh_col:thresh_col + 1])
+            # expansions on device, no host round-trip.  Sharded mode
+            # (tighten=False) freezes the wave-start threshold instead:
+            # tightening then happens only at the cross-shard merge, so the
+            # wave is order-independent and shard-count-invariant.
+            if tighten:
+                rsq_s[...] = jnp.minimum(
+                    rsq_s[...], top_sq[:, thresh_col:thresh_col + 1])
 
     @pl.when(step == num_steps - 1)
     def _finalize():
         top_sq_ref[...] = top_sq_s[...]
         top_ids_ref[...] = top_ids_s[...]
         stats_ref[...] = stats_s[...]
+        vis_ref[...] = vis_s[...]
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("ef", "thresh_col", "block_q", "block_c", "block_d",
-                     "slack", "interpret"),
+                     "slack", "tighten", "interpret"),
 )
 def graph_scan_kernel_call(
     step_offs: jax.Array,  # (q_tiles, steps) i32 per-step tile offsets
@@ -276,12 +339,14 @@ def graph_scan_kernel_call(
     top0_sq: jax.Array,  # (Q, EF) f32 beam window carried across waves
     top0_ids: jax.Array,  # (Q, EF) i32
     r0_sq: jax.Array,  # (Q,) f32 thresholds carried across waves
+    vis0: jax.Array,  # (q_tiles, W) i32 packed visited bitmap carried in
     adj_codes: jax.Array,  # (N_adj, D) int8 adjacency-flat
     adj_rot: jax.Array,  # (N_adj, D) f32/bf16 adjacency-flat
     adj_ids: jax.Array,  # (N_adj,) i32, -1 per-block padding
     bscales: jax.Array,  # (S,) f32
     eps: jax.Array,  # (S,) f32 blocked table
     scale: jax.Array,  # (S,) f32
+    vis_base: jax.Array | int = 0,  # () i32 global node id of local tile 0
     *,
     ef: int,
     thresh_col: int | None = None,
@@ -289,6 +354,7 @@ def graph_scan_kernel_call(
     block_c: int = 32,
     block_d: int = 128,
     slack: float = 1e-4,
+    tighten: bool = True,
     interpret: bool = False,
 ):
     """Launch one beam-scan wave.  Shapes must be pre-padded/aligned:
@@ -297,11 +363,15 @@ def graph_scan_kernel_call(
     (the wrapper ``repro.kernels.ops.graph_scan_kernel`` enforces this and
     owns padding/quantization).  ``adj_codes``/``adj_rot`` are passed
     UNBLOCKED — they stay HBM-resident and the kernel pages expansion tiles
-    in manually.
+    in manually.  ``vis0`` is the per-query-tile packed visited bitmap (bit
+    ``vis_base + off`` marks local tile ``off`` expanded); the wrapper owns
+    its sizing (words padded to the lane grid).
 
     Returns (top_sq (Q, EF) f32 ascending, top_ids (Q, EF) i32,
-    stats (Q, 6) f32 — see ``STATS_COLS``); feed top/stats back in as the
-    next wave's ``top0``/``r0_sq`` to continue the beam.
+    stats (Q, 6) f32 — see ``STATS_COLS``, vis (q_tiles, W) i32); feed
+    top/r²/vis back in as the next wave's carried state to continue the
+    beam.  ``tighten=False`` freezes the screen threshold at ``r0_sq`` for
+    the whole launch (sharded wave semantics — see the module docstring).
     """
     qn, dim = q_rot.shape
     if thresh_col is None:
@@ -335,23 +405,34 @@ def graph_scan_kernel_call(
     if step_offs.shape != (q_tiles, num_steps):
         raise ValueError(
             f"step_offs is {step_offs.shape}, need ({q_tiles}, steps)")
+    vis_words = vis0.shape[1]
+    if vis0.shape != (q_tiles, vis_words) or vis0.dtype != jnp.int32:
+        raise ValueError(
+            f"visited bitmap is {vis0.shape} {vis0.dtype}, need "
+            f"({q_tiles}, words) int32")
+    if not interpret and vis_words % 128:
+        raise ValueError(
+            f"compiled lowering needs the visited bitmap word count to be a "
+            f"multiple of 128 (lane-aligned i32 blocks), got {vis_words}; "
+            f"size it with repro.kernels.ops.graph_vis_words")
 
     grid = (q_tiles, num_steps)
     kernel = functools.partial(
         _kernel, num_steps=num_steps, ef=ef, thresh_col=thresh_col,
-        block_c=block_c, block_d=block_d, slack=slack,
+        block_c=block_c, block_d=block_d, slack=slack, tighten=tighten,
     )
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_q, dim), lambda i, s, offs: (i, 0)),
-            pl.BlockSpec((block_q, dim), lambda i, s, offs: (i, 0)),
-            pl.BlockSpec((block_q, s_count), lambda i, s, offs: (i, 0)),
-            pl.BlockSpec((block_q, ef), lambda i, s, offs: (i, 0)),
-            pl.BlockSpec((block_q, ef), lambda i, s, offs: (i, 0)),
-            pl.BlockSpec((block_q, 1), lambda i, s, offs: (i, 0)),
+            pl.BlockSpec((block_q, dim), lambda i, s, offs, base: (i, 0)),
+            pl.BlockSpec((block_q, dim), lambda i, s, offs, base: (i, 0)),
+            pl.BlockSpec((block_q, s_count), lambda i, s, offs, base: (i, 0)),
+            pl.BlockSpec((block_q, ef), lambda i, s, offs, base: (i, 0)),
+            pl.BlockSpec((block_q, ef), lambda i, s, offs, base: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, s, offs, base: (i, 0)),
+            pl.BlockSpec((1, vis_words), lambda i, s, offs, base: (i, 0)),
             # The adjacency streams are NOT pipelined by BlockSpec: the
             # kernel pages them manually (int8 double-buffered, fp32 slabs
             # on demand), so a fully-pruned expansion ships no fp32 bytes.
@@ -361,25 +442,28 @@ def graph_scan_kernel_call(
             # tile 0, which the kernel never reads (gap steps are fully
             # predicated out via ``real``).
             pl.BlockSpec((1, block_c),
-                         lambda i, s, offs: (0, jnp.maximum(offs[i, s], 0))),
-            pl.BlockSpec((1, s_count), lambda i, s, offs: (0, 0)),
-            pl.BlockSpec((1, s_count), lambda i, s, offs: (0, 0)),
-            pl.BlockSpec((1, s_count), lambda i, s, offs: (0, 0)),
+                         lambda i, s, offs, base:
+                         (0, jnp.maximum(offs[i, s], 0))),
+            pl.BlockSpec((1, s_count), lambda i, s, offs, base: (0, 0)),
+            pl.BlockSpec((1, s_count), lambda i, s, offs, base: (0, 0)),
+            pl.BlockSpec((1, s_count), lambda i, s, offs, base: (0, 0)),
         ],
         out_specs=(
-            pl.BlockSpec((block_q, ef), lambda i, s, offs: (i, 0)),
-            pl.BlockSpec((block_q, ef), lambda i, s, offs: (i, 0)),
+            pl.BlockSpec((block_q, ef), lambda i, s, offs, base: (i, 0)),
+            pl.BlockSpec((block_q, ef), lambda i, s, offs, base: (i, 0)),
             pl.BlockSpec((block_q, len(STATS_COLS)),
-                         lambda i, s, offs: (i, 0)),
+                         lambda i, s, offs, base: (i, 0)),
+            pl.BlockSpec((1, vis_words), lambda i, s, offs, base: (i, 0)),
         ),
         scratch_shapes=[
             pltpu.VMEM((block_q, ef), jnp.float32),
             pltpu.VMEM((block_q, ef), jnp.int32),
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, len(STATS_COLS)), jnp.float32),
+            pltpu.VMEM((1, vis_words), jnp.int32),
             pltpu.VMEM((2, block_c, dim), jnp.int8),
             pltpu.VMEM((block_c, dim), adj_rot.dtype),
-            pltpu.SMEM((1, 1), jnp.int32),
+            pltpu.SMEM((1, 2), jnp.int32),
             pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],
@@ -388,6 +472,7 @@ def graph_scan_kernel_call(
         jax.ShapeDtypeStruct((qn, ef), jnp.float32),
         jax.ShapeDtypeStruct((qn, ef), jnp.int32),
         jax.ShapeDtypeStruct((qn, len(STATS_COLS)), jnp.float32),
+        jax.ShapeDtypeStruct((q_tiles, vis_words), jnp.int32),
     )
     return pl.pallas_call(
         kernel,
@@ -399,12 +484,14 @@ def graph_scan_kernel_call(
         interpret=interpret,
     )(
         step_offs.astype(jnp.int32),
+        jnp.asarray(vis_base, jnp.int32).reshape(1),
         qcodes,
         q_rot.astype(jnp.float32),
         qscales.astype(jnp.float32),
         top0_sq.astype(jnp.float32),
         top0_ids.astype(jnp.int32),
         r0_sq.reshape(-1, 1).astype(jnp.float32),
+        vis0.astype(jnp.int32),
         adj_codes,
         adj_rot,  # f32 or bf16 — stage 2 upcasts per block
         adj_ids.reshape(1, -1).astype(jnp.int32),

@@ -18,8 +18,8 @@ previously ran as a host-orchestrated gather + vmapped jnp screen:
     ``pltpu.make_async_copy`` pipeline itself — the copy of tile t+1 is
     issued before the wait on tile t, so stage-1 DMA overlaps stage-1
     compute exactly like the automatic pipeline, and a step revisiting the
-    previous step's tile (unaligned window overlap) reuses the landed
-    buffer instead of re-fetching it.
+    last *issued* tile (unaligned window overlap — even across intervening
+    -1 gap steps) reuses the landed buffer instead of re-fetching it.
   * **Demand-paged fp32 stage 2.**  This is the point of the manual
     pipeline: no fp32 byte moves until stage 1 reports survivors.  The
     fetch is slab-granular — one ``(block_c, block_d)`` fp32 slab per
@@ -74,7 +74,14 @@ Scratch layout (the manual pipeline's working set):
 
     codes_buf (2, BC, D) int8  — stage-1 double buffer (slots alternate)
     rows_buf  (BC, D) fp       — stage-2 landing buffer, filled slab-wise
-    slot_s    (1, 1) i32 SMEM  — which codes_buf slot holds this step's tile
+    slot_s    (1, 2) i32 SMEM  — [0]: codes_buf slot holding this step's
+                                 tile; [1]: offset of the last tile whose
+                                 DMA was issued (-1 before the first) — the
+                                 cross-gap reuse cursor: a real step whose
+                                 offset matches it re-screens the landed
+                                 buffer even when -1 gap steps intervened
+                                 (a window ending in gap steps used to
+                                 force a refetch of a still-resident tile)
     sem8      DMA (2,)         — one semaphore per stage-1 slot
     sem32     DMA ()           — stage-2 slab semaphore (sequential)
 """
@@ -146,7 +153,7 @@ def _kernel(
     stats_s,  # (QT, 6) f32 VMEM
     codes_buf,  # (2, CT, D) int8 VMEM — stage-1 double buffer
     rows_buf,  # (CT, D) fp VMEM — stage-2 landing buffer
-    slot_s,  # (1, 1) i32 SMEM — codes_buf slot holding this step's tile
+    slot_s,  # (1, 2) i32 SMEM — [slot cursor, last issued offset]
     sem8,  # DMA (2,) — stage-1 per-slot semaphores
     sem32,  # DMA () — stage-2 slab semaphore
     *,
@@ -183,25 +190,33 @@ def _kernel(
         rsq_s[...] = rsq0_ref[...]
         stats_s[...] = jnp.zeros_like(stats_s)
         slot_s[0, 0] = 0
+        slot_s[0, 1] = -1  # no tile issued yet
 
     @pl.when((step == 0) & real)
     def _warmup():
         codes_dma(0, step).start()  # wave 0's tile into slot 0
 
     cur = slot_s[0, 0]
-    # A real step whose offset equals the previous step's (unaligned window
-    # overlap) re-screens the tile already landed in ``cur`` — no DMA was
-    # started for it and none is waited on.
-    prev = jnp.maximum(step - 1, 0)
-    fresh = real & jnp.logical_or(step == 0, off != off_at(prev))
+    # Cross-gap buffer reuse: a real step whose offset equals the last
+    # *issued* offset re-screens the tile already landed in ``cur`` — no
+    # DMA is started for it and none is waited on.  Comparing against the
+    # SMEM cursor instead of the immediately previous step's offset means a
+    # window ending in -1 gap steps no longer forces a refetch of a tile
+    # that is still resident (unaligned layouts can revisit a tile across
+    # a gap); the oracle mirrors the same rule.
+    last = slot_s[0, 1]
+    fresh = real & (off != last)
+    # The tile resident (or inbound) in ``cur`` after this step.
+    resident = jnp.where(real, off, last)
 
     # Issue the NEXT real tile's int8 copy into the other slot before
     # waiting on the current one: the copy overlaps this step's stage-1 and
     # stage-2 work.  At most one stage-1 copy is in flight, so two buffers
-    # suffice.
+    # suffice.  The predicate compares against ``resident`` so the reuse
+    # rule and the prefetch rule cannot disagree.
     nxt = jnp.minimum(step + 1, num_steps - 1)
     nxt_fresh = ((step + 1 < num_steps) & (off_at(nxt) >= 0)
-                 & (off_at(nxt) != off))
+                 & (off_at(nxt) != resident))
 
     @pl.when(nxt_fresh)
     def _prefetch():
@@ -211,6 +226,8 @@ def _kernel(
     @pl.when(fresh)
     def _land():
         codes_dma(cur, step).wait()
+
+    slot_s[0, 1] = resident
 
     # Gap steps (real=False) contribute nothing — no DMA was started for
     # them, and running the screen on the stale buffer would only produce
@@ -412,7 +429,7 @@ def ivf_scan_kernel_call(
             pltpu.VMEM((block_q, len(STATS_COLS)), jnp.float32),
             pltpu.VMEM((2, block_c, dim), jnp.int8),
             pltpu.VMEM((block_c, dim), flat_rot.dtype),
-            pltpu.SMEM((1, 1), jnp.int32),
+            pltpu.SMEM((1, 2), jnp.int32),
             pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],

@@ -42,6 +42,7 @@ __all__ = [
     "dco_screen_kernel", "quant_screen_kernel", "ivf_scan_kernel",
     "graph_scan_kernel", "ivf_cap_tiles", "build_window_offsets",
     "block_table", "on_tpu", "min_block_q", "fused_fetch_totals",
+    "graph_vis_words", "unpack_vis",
 ]
 
 # Minimum second-to-minor tile dimension (sublane count) per operand byte
@@ -57,6 +58,26 @@ def min_block_q(dtype=jnp.int8) -> int:
     codes needs ``block_q >= min_block_q(jnp.int8) == 32``.  Tests use this
     to auto-select a legal tile instead of hardcoding the constraint."""
     return _SUBLANE_MIN.get(jnp.dtype(dtype).itemsize, 8)
+
+
+def graph_vis_words(n_nodes: int) -> int:
+    """Packed visited-bitmap width (int32 words) for ``n_nodes`` graph
+    nodes: ``ceil(n_nodes / 32)`` rounded up to the 128-lane grid so the
+    ``(1, W)`` bitmap blocks lower compiled.  Sharded engines size the
+    bitmap with the GLOBAL node count — every shard marks the same global
+    id space (bit ``vis_base + local_offset``)."""
+    words = (max(n_nodes, 1) + 31) // 32
+    return (words + 127) // 128 * 128
+
+
+def unpack_vis(vis, n_nodes: int):
+    """(q_tiles, W) packed int32 bitmap -> (q_tiles, n_nodes) bool mask.
+
+    Host-side helper for the beam driver's frontier selection: the kernel
+    owns the marking, the host only *reads* the returned bitmap."""
+    vis = np.asarray(vis, np.int32)
+    bits = (vis[:, :, None] >> np.arange(32, dtype=np.int32)) & 1
+    return bits.reshape(vis.shape[0], -1)[:, :n_nodes].astype(bool)
 
 
 def fused_fetch_totals(stats, block_q: int):
@@ -392,23 +413,23 @@ def ivf_scan_kernel(
 
 
 def _graph_scan_call(step_offs, qcodes, q, qscales, top0_sq, top0_ids, r0,
-                     adj_codes, adj_rot, adj_ids, bscales, eps, scale, ef,
-                     thresh_col, block_q, block_c, block_d, slack, interpret,
-                     use_ref):
+                     vis0, adj_codes, adj_rot, adj_ids, bscales, eps, scale,
+                     vis_base, ef, thresh_col, block_q, block_c, block_d,
+                     slack, tighten, interpret, use_ref):
     if use_ref:
         # The oracle replays the grid with host loops (concrete offsets),
         # so it runs eagerly — test/debug path and the host beam engine.
         return _ref.graph_scan_ref(
-            step_offs, qcodes, q, qscales, top0_sq, top0_ids, r0,
-            adj_codes, adj_rot, adj_ids, bscales, eps, scale, ef=ef,
-            thresh_col=thresh_col, block_q=block_q, block_c=block_c,
-            block_d=block_d, slack=slack,
+            step_offs, qcodes, q, qscales, top0_sq, top0_ids, r0, vis0,
+            adj_codes, adj_rot, adj_ids, bscales, eps, scale, vis_base,
+            ef=ef, thresh_col=thresh_col, block_q=block_q, block_c=block_c,
+            block_d=block_d, slack=slack, tighten=tighten,
         )
     return _graph_scan.graph_scan_kernel_call(
-        step_offs, qcodes, q, qscales, top0_sq, top0_ids, r0, adj_codes,
-        adj_rot, adj_ids, bscales, eps, scale, ef=ef, thresh_col=thresh_col,
-        block_q=block_q, block_c=block_c, block_d=block_d, slack=slack,
-        interpret=interpret,
+        step_offs, qcodes, q, qscales, top0_sq, top0_ids, r0, vis0,
+        adj_codes, adj_rot, adj_ids, bscales, eps, scale, vis_base, ef=ef,
+        thresh_col=thresh_col, block_q=block_q, block_c=block_c,
+        block_d=block_d, slack=slack, tighten=tighten, interpret=interpret,
     )
 
 
@@ -423,13 +444,18 @@ def graph_scan_kernel(
     adj_codes: jax.Array,  # (N_adj, D_pad) int8 per-block codes
     adj_ids: jax.Array,  # (N_adj,) i32, -1 per-block padding
     bscales: jax.Array,  # (S,) f32 corpus per-block scales
+    vis0: jax.Array | None = None,  # (q_tiles, W) i32 packed visited bitmap
     *,
+    vis_base: int | jax.Array = 0,  # global node id of local tile 0
+    # (shard base; a traced scalar inside the shard_map'd wave step)
+    vis_nodes: int | None = None,  # global node count the bitmap must cover
     ef: int,
     thresh_col: int | None = None,
     block_q: int = 8,
     block_c: int = 32,
     block_d: int = 32,
     slack: float = 1e-4,
+    tighten: bool = True,
     interpret: bool | None = None,
     use_ref: bool = False,
 ):
@@ -440,8 +466,15 @@ def graph_scan_kernel(
     v's neighbour block is tile v of the adjacency-flat layout, so offsets
     ARE node ids when ``block_c == adj_block``) and sentinel ``-1`` for
     steps past a tile's frontier — the kernel ships nothing for those.
-    This wrapper owns padding, the blocked epsilon table, and per-(query,
-    block) int8 query quantization.
+    This wrapper owns padding, the blocked epsilon table, per-(query,
+    block) int8 query quantization, and the visited bitmap's sizing:
+    ``vis0=None`` starts an all-clear bitmap sized ``graph_vis_words``
+    over ``vis_nodes`` (default: the local tile count) global nodes.
+    Under sharded serving ``vis_base`` shifts local tile offsets into the
+    global node id space and ``vis_nodes`` is the GLOBAL node count, so
+    every shard marks the same bitmap; ``tighten=False`` selects the
+    frozen-wave threshold semantics sharded walks need (see
+    ``repro.kernels.graph_scan``).
 
     Shape/alignment contract (module docstring has the full list):
     compiled (non-interpret) mode fails fast unless
@@ -456,8 +489,9 @@ def graph_scan_kernel(
     rows prune instantly and never touch the outputs.
 
     Returns (top_sq (Q, EF) ascending, top_ids (Q, EF), stats (Q, 6) f32 =
-    ``ivf_scan.STATS_COLS``), cropped to Q — feed top/r² back in to
-    continue the beam next wave.
+    ``ivf_scan.STATS_COLS``, vis (q_tiles, W) i32), cropped to Q — feed
+    top/r²/vis back in to continue the beam next wave (``unpack_vis``
+    turns the bitmap into the frontier-selection mask).
     """
     if interpret is None:
         interpret = not on_tpu()
@@ -502,11 +536,33 @@ def graph_scan_kernel(
     t_ids = _pad_axis(top0_ids.astype(jnp.int32), 0, block_q, -1)
     r0 = _pad_axis(r0_sq.astype(jnp.float32), 0, block_q, 0.0)
 
+    q_tiles = q.shape[0] // block_q
+    n_tiles = n_adj // block_c
+    concrete_base = isinstance(vis_base, (int, np.integer))
+    if vis_nodes is None:
+        if not concrete_base:
+            raise ValueError(
+                "a traced vis_base (sharded shard_map step) needs an "
+                "explicit vis_nodes (the GLOBAL node count)")
+        vis_nodes = int(vis_base) + n_tiles
+    if concrete_base and (vis_base < 0 or vis_base + n_tiles > vis_nodes):
+        raise ValueError(
+            f"vis_base={vis_base} with {n_tiles} local tiles overruns the "
+            f"{vis_nodes}-node global bitmap")
+    words = graph_vis_words(vis_nodes)
+    if vis0 is None:
+        vis0 = jnp.zeros((q_tiles, words), jnp.int32)
+    elif vis0.shape != (q_tiles, words):
+        raise ValueError(
+            f"visited bitmap is {vis0.shape}, need ({q_tiles}, {words}) "
+            f"(= graph_vis_words({vis_nodes}) words per query tile)")
+
     if thresh_col is None:
         thresh_col = ef - 1
-    top_sq, top_ids, stats = _graph_scan_call(
+    top_sq, top_ids, stats, vis = _graph_scan_call(
         step_offs.astype(jnp.int32), qcodes, q, qscales, t_sq, t_ids, r0,
-        adj_codes, adj_rot, adj_ids, bscales, eps, scale, ef, thresh_col,
-        block_q, block_c, block_d, slack, interpret, use_ref,
+        vis0, adj_codes, adj_rot, adj_ids, bscales, eps, scale, vis_base,
+        ef, thresh_col, block_q, block_c, block_d, slack, tighten,
+        interpret, use_ref,
     )
-    return top_sq[:qn], top_ids[:qn], stats[:qn]
+    return top_sq[:qn], top_ids[:qn], stats[:qn], vis

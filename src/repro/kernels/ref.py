@@ -153,8 +153,9 @@ def ivf_scan_ref(
 
       * steps with offset -1 (out-of-span window tail) are skipped — no
         DMA, no screen, no stats;
-      * a real step whose offset equals the previous step's re-uses the
-        landed int8 buffer (``s1_tiles_fetched`` counts only fresh
+      * a real step whose offset equals the last *issued* offset re-uses
+        the landed int8 buffer even when -1 gap steps intervened — the
+        kernel's SMEM reuse cursor (``s1_tiles_fetched`` counts only fresh
         offsets); and
       * fp32 slabs are "fetched" per ``tiles.stage2_need`` — the first iff
         the stage-1 survivor count is nonzero, later ones only while a
@@ -185,14 +186,14 @@ def ivf_scan_ref(
         t_ids = jnp.full((block_q, k), -1, jnp.int32)
         rsq = r0_sq[qs].reshape(-1, 1).astype(jnp.float32)
         st = jnp.zeros((block_q, 6), jnp.float32)
-        prev_off = None
+        last_off = None  # last issued offset — the kernel's reuse cursor
         for p in range(num_probes):
             for t in range(cap_tiles):
                 off = int(tile_offs[i, p, t])
-                fresh = off >= 0 and (prev_off is None or off != prev_off)
-                prev_off = off
                 if off < 0:
                     continue  # skipped step: the kernel ships nothing
+                fresh = off != last_off
+                last_off = off
                 rows = slice(off * block_c, (off + 1) * block_c)
                 ids = flat_ids[rows].reshape(1, -1)
                 valid = ids >= 0
@@ -257,12 +258,14 @@ def graph_scan_ref(
     top0_sq: jax.Array,  # (Q, EF) f32 beam window carried across waves
     top0_ids: jax.Array,  # (Q, EF) i32
     r0_sq: jax.Array,  # (Q,) f32
+    vis0: jax.Array,  # (q_tiles, W) i32 packed visited bitmap carried in
     adj_codes: jax.Array,  # (N_adj, D) int8 adjacency-flat
     adj_rot: jax.Array,  # (N_adj, D) f32
     adj_ids: jax.Array,  # (N_adj,) i32
     bscales: jax.Array,  # (S,) f32
     eps: jax.Array,  # (S,) f32
     scale: jax.Array,  # (S,) f32
+    vis_base: int = 0,
     *,
     ef: int,
     thresh_col: int | None = None,
@@ -270,26 +273,37 @@ def graph_scan_ref(
     block_c: int,
     block_d: int,
     slack: float = 1e-4,
+    tighten: bool = True,
     return_trace: bool = False,
 ):
     """Oracle for the fused graph beam-scan megakernel (one wave).
 
     Pure-jnp replay of the (q_tiles, steps) grid using the kernel's own
     ``repro.kernels.tiles`` helpers and the same scratch-carry semantics:
-    the beam window / threshold are SEEDED from ``top0``/``r0_sq`` (the
-    state the previous wave's launch returned), frozen per expansion, and
-    tightened after each merge.  The manual pipeline's memory behaviour is
-    modelled exactly as in ``ivf_scan_ref``: -1 steps ship nothing, a step
-    repeating the previous offset reuses the landed buffer
-    (``s1_tiles_fetched`` counts fresh offsets only), and fp32 slabs are
-    fetched per ``tiles.stage2_need``.
+    the beam window / threshold / visited bitmap are SEEDED from
+    ``top0``/``r0_sq``/``vis0`` (the state the previous wave's launch
+    returned), frozen per expansion, and — unless ``tighten=False``, the
+    sharded frozen-wave mode — the threshold is tightened after each merge.
+    The manual pipeline's memory behaviour is modelled exactly as in
+    ``ivf_scan_ref``: -1 steps ship nothing, a step repeating the last
+    *issued* offset (even across -1 gap steps — the SMEM reuse cursor)
+    reuses the landed buffer (``s1_tiles_fetched`` counts fresh offsets
+    only), and fp32 slabs are fetched per ``tiles.stage2_need``.
+
+    Mask ownership mirrors the kernel: every real step sets bit
+    ``vis_base + off`` of its query tile's packed bitmap (the expansion
+    commit the host driver used to own), and the final bitmap is returned
+    as the fourth output.
 
     With ``return_trace`` additionally returns per-(tile, step) records for
     the real steps exposing the frozen r², the scanned neighbour block, the
-    stage-1/stage-2 masks, and the fetch decisions (``alive``, ``fetched``,
-    ``fresh``, ``slabs``) — so tests can replay each expansion against
-    ``dco_screen_batch`` and assert fetch soundness per wave.
+    stage-1/stage-2 masks, the fetch decisions (``alive``, ``fetched``,
+    ``fresh``, ``slabs``), and the marked global node (``marked``) — so
+    tests can replay each expansion against ``dco_screen_batch`` and assert
+    fetch soundness and mask ownership per wave.
     """
+    import numpy as np
+
     from repro.kernels.tiles import (
         dup_mask, merge_topk_tile, stage1_tile, stage2_tile,
     )
@@ -299,6 +313,7 @@ def graph_scan_ref(
         thresh_col = ef - 1
     q_tiles = qn // block_q
     num_steps = step_offs.shape[1]
+    vis = np.array(vis0, dtype=np.int32, copy=True)
     top_sq = []
     top_ids = []
     stats = []
@@ -309,13 +324,15 @@ def graph_scan_ref(
         t_ids = jnp.asarray(top0_ids[qs], jnp.int32)
         rsq = r0_sq[qs].reshape(-1, 1).astype(jnp.float32)
         st = jnp.zeros((block_q, 6), jnp.float32)
-        prev_off = None
+        last_off = None  # last issued offset — the kernel's reuse cursor
         for s in range(num_steps):
             off = int(step_offs[i, s])
-            fresh = off >= 0 and (prev_off is None or off != prev_off)
-            prev_off = off
             if off < 0:
                 continue  # skipped step: the kernel ships nothing
+            fresh = off != last_off
+            last_off = off
+            goff = off + int(vis_base)
+            vis[i, goff // 32] |= np.int32(1) << np.int32(goff % 32)
             rows = slice(off * block_c, (off + 1) * block_c)
             ids = adj_ids[rows].reshape(1, -1)
             valid = ids >= 0
@@ -337,7 +354,7 @@ def graph_scan_ref(
             rec = dict(tile=i, step=s, row_start=off * block_c,
                        ids=ids[0], rsq=rsq_frozen[:, 0], active8=active8,
                        valid=valid[0], alive=alive, fetched=alive > 0,
-                       fresh=fresh, slabs=0.0)
+                       fresh=fresh, slabs=0.0, marked=goff)
             if alive > 0:
                 exact_sq, passed, d32, slabs = stage2_tile(
                     q_rot[qs], adj_rot[rows], eps, scale, rsq_frozen,
@@ -353,7 +370,8 @@ def graph_scan_ref(
                 dup = dup_mask(ids, t_ids, k=ef)
                 new_sq = jnp.where(ok & ~dup, exact_sq, jnp.inf)
                 t_sq, t_ids = merge_topk_tile(t_sq, t_ids, new_sq, ids, k=ef)
-                rsq = jnp.minimum(rsq, t_sq[:, thresh_col:thresh_col + 1])
+                if tighten:
+                    rsq = jnp.minimum(rsq, t_sq[:, thresh_col:thresh_col + 1])
                 rec.update(passed=passed, exact_sq=exact_sq,
                            slabs=float(slabs))
             else:
@@ -364,7 +382,7 @@ def graph_scan_ref(
         top_ids.append(t_ids)
         stats.append(st)
     out = (jnp.concatenate(top_sq, 0), jnp.concatenate(top_ids, 0),
-           jnp.concatenate(stats, 0))
+           jnp.concatenate(stats, 0), jnp.asarray(vis))
     if return_trace:
         return out + (trace,)
     return out

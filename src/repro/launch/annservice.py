@@ -29,7 +29,8 @@ from repro.launch.mesh import shard_map
 from repro.quant.scalar import cum_err_sq
 from repro.distributed.collectives import hierarchical_topk
 
-__all__ = ["build_search_step", "build_graph_engine", "search_input_specs",
+__all__ = ["build_search_step", "build_graph_engine",
+           "build_sharded_graph_engine", "search_input_specs",
            "autotune_refine_budget", "FUSED_BLOCK_C"]
 
 # Candidate-tile rows of the fused megakernel route; serve.py's fetch
@@ -80,14 +81,14 @@ def build_graph_engine(index, *, k: int, ef: int = 48, expand: int = 2,
     Wraps the batched beam-scan megakernel (``index.graph
     .search_graph_fused``) behind the scheduler-shaped step the serving
     driver expects: ``step(batch_np) -> (dists, ids[, GraphScanStats])``
-    as numpy arrays.  The graph walk is wave-synchronous with host-side
-    frontier commits, so — unlike the flat/IVF routes — it is not a single
-    shard_mapped jit step: the engine runs per host replica and the
-    batcher amortizes launches across requests (sharding the *corpus* of a
-    graph walk is a recorded ROADMAP follow-up; queries shard trivially
-    across replicas).  ``block_q`` defaults to the compiled-mode sublane
-    floor on TPU and 8 elsewhere (tile coherence beats lane occupancy in
-    interpret mode).
+    as numpy arrays.  The graph walk is wave-synchronous with host-driven
+    frontier selection, so — unlike the flat/IVF routes — it is not a
+    single shard_mapped jit step: this engine runs the whole corpus per
+    replica and the batcher amortizes launches across requests (queries
+    shard trivially across replicas).  To shard the *corpus* of the walk
+    across a mesh use ``build_sharded_graph_engine`` instead.  ``block_q``
+    defaults to the compiled-mode sublane floor on TPU and 8 elsewhere
+    (tile coherence beats lane occupancy in interpret mode).
     """
     from repro.index.graph import search_graph_fused
     from repro.kernels.ops import min_block_q, on_tpu
@@ -101,6 +102,116 @@ def build_graph_engine(index, *, k: int, ef: int = 48, expand: int = 2,
         d, i, st = search_graph_fused(
             index, jnp.asarray(batch_np), k=k, ef=ef, expand=expand,
             block_q=block_q, seed_r=seed_r)
+        if with_stats:
+            return np.asarray(d), np.asarray(i), st
+        return np.asarray(d), np.asarray(i)
+
+    return step
+
+
+def build_sharded_graph_engine(index, mesh, *, k: int, ef: int = 48,
+                               expand: int = 2, block_q: int | None = None,
+                               seed_r: bool = False, decoupled: bool = True,
+                               route_mult: float = 1.0, max_waves: int = 64,
+                               with_stats: bool = False):
+    """Corpus-sharded serving engine for ``--index graph --graph-shards N``.
+
+    The mesh-backed realization of ``index.graph.search_graph_sharded``:
+    the adjacency-flat slab is row-sharded over the mesh's single axis
+    (every shard owns a contiguous node range — the device sharding
+    boundary lands on node boundaries by ``shard_graph_nodes``'s
+    construction), and each frontier wave is ONE ``shard_map``'d jit step:
+    every shard runs the beam-scan megakernel over its local slab with the
+    wave-start threshold frozen, then the per-query beam windows, visited
+    bitmaps, and per-shard stats are ``all_gather``'d along the mesh axis
+    and merged in-step (``merge_shard_windows`` — the same jnp arithmetic
+    the host-simulated driver uses, so the two paths return identical
+    results and either is bit-identical to the ``num_shards=1, use_ref``
+    single-host beam oracle).  The host drives waves and frontier
+    selection exactly as in the single-replica engine; mesh and
+    ``shard_map`` construction route through the ``launch.mesh`` /
+    ``kernels._compat`` version shims.
+
+    Fails fast, naming the offending value, on a multi-axis mesh or a node
+    count the mesh size does not divide.  Returns
+    ``step(batch_np) -> (dists, ids[, GraphShardedStats])``.
+    """
+    import numpy as np
+
+    from repro.index.graph import (
+        merge_shard_windows, search_graph_sharded, shard_graph_nodes,
+    )
+    from repro.kernels.ops import graph_scan_kernel, min_block_q, on_tpu
+
+    axes = tuple(mesh.axis_names)
+    if len(axes) != 1:
+        raise ValueError(
+            f"sharded graph serving needs a 1-D mesh (one shard axis), got "
+            f"axes={axes}")
+    ax = axes[0]
+    num_shards = int(mesh.devices.size)
+    n = index.corpus_rot.shape[0]
+    shard_graph_nodes(n, num_shards)  # fail-fast divisibility check
+    per = n // num_shards
+    if not index.has_fused:
+        raise ValueError(
+            "sharded graph serving needs build_graph(..., quant='int8')")
+    if block_q is None:
+        block_q = min_block_q(jnp.int8) if on_tpu() else 8
+    thresh_col = (k - 1) if decoupled else (ef - 1)
+    a_block = index.adj_block
+    block_d = index.scan_block_d
+    est = index.estimator
+    gscales = index.gscales
+
+    row_shard = NamedSharding(mesh, P(axes, None))
+    adj_rot = jax.device_put(index.adj_rot, row_shard)
+    adj_codes = jax.device_put(index.adj_codes, row_shard)
+    adj_ids = jax.device_put(index.adj_ids, NamedSharding(mesh, P(axes)))
+
+    def local_wave(offs_s, q_sorted, top_sq, top_ids, r0, vis,
+                   a_rot, a_codes, a_ids):
+        base = jax.lax.axis_index(ax) * per
+        sq, ids_, st, vis_out = graph_scan_kernel(
+            est, q_sorted, offs_s[0], top_sq, top_ids, r0,
+            a_rot, a_codes, a_ids, gscales, vis,
+            vis_base=base, vis_nodes=n, ef=ef, thresh_col=thresh_col,
+            block_q=block_q, block_c=a_block, block_d=block_d,
+            tighten=False, interpret=not on_tpu())
+        # Cross-shard frontier exchange: windows / bitmaps / stats ride one
+        # all-gather per wave (the exchange ledger prices it), merged with
+        # the same arithmetic as the host-simulated driver.
+        g_sq = jax.lax.all_gather(sq, ax)
+        g_ids = jax.lax.all_gather(ids_, ax)
+        g_vis = jax.lax.all_gather(vis_out, ax)
+        g_st = jax.lax.all_gather(st, ax)
+        m_sq, m_ids = merge_shard_windows(g_sq, g_ids, ef=ef)
+        m_vis = g_vis[0]
+        for s in range(1, num_shards):
+            m_vis = m_vis | g_vis[s]
+        return m_sq, m_ids, m_vis, g_st
+
+    step_fn = jax.jit(shard_map(
+        local_wave,
+        mesh=mesh,
+        in_specs=(P(ax, None, None), P(), P(), P(), P(), P(),
+                  P(ax, None), P(ax, None), P(ax)),
+        out_specs=(P(), P(), P(), P()),
+        check_vma=False,
+    ))
+
+    def wave_step(offs_sh, q_sorted, top_sq, top_ids, r0, vis):
+        return step_fn(
+            jnp.asarray(offs_sh), jnp.asarray(q_sorted),
+            jnp.asarray(top_sq), jnp.asarray(top_ids), jnp.asarray(r0),
+            jnp.asarray(vis), adj_rot, adj_codes, adj_ids)
+
+    def step(batch_np):
+        d, i, st = search_graph_sharded(
+            index, jnp.asarray(batch_np), num_shards=num_shards, k=k,
+            ef=ef, expand=expand, block_q=block_q, max_waves=max_waves,
+            seed_r=seed_r, decoupled=decoupled, route_mult=route_mult,
+            wave_step=wave_step)
         if with_stats:
             return np.asarray(d), np.asarray(i), st
         return np.asarray(d), np.asarray(i)

@@ -1,6 +1,44 @@
-"""Production mesh construction (functions, not module constants, so
-importing never touches jax device state) + jax mesh/shard_map version
-shims — the compat home launch-layer code should route through."""
+"""Production mesh construction + jax mesh/shard_map version shims.
+
+This module is the compat home every launch-layer mesh/shard_map use
+should route through (ROADMAP: "new code should route mesh/shard_map
+through those helpers"; the Pallas-side shims live in
+``repro.kernels._compat``).  Functions, not module constants, so importing
+never touches jax device state.
+
+Version contracts (what each shim accepts/returns, and how it maps onto
+each jax line):
+
+``shard_map(f, *, mesh, in_specs, out_specs, check_vma=False)``
+    Accepts any callable ``f``, a concrete ``jax.sharding.Mesh`` (or, on
+    jax >= 0.5, an ``AbstractMesh`` — tracing/lowering only; executing the
+    mapped callable still needs a concrete mesh), per-argument
+    ``PartitionSpec`` trees, and the replication-check flag under its
+    NEW name ``check_vma``.  Returns the mapped callable unchanged in
+    semantics across versions:
+
+    * jax >= 0.6: forwards to top-level ``jax.shard_map`` (which already
+      spells the flag ``check_vma``).
+    * jax 0.4.x: forwards to ``jax.experimental.shard_map.shard_map`` and
+      translates ``check_vma`` to that API's ``check_rep`` keyword.
+
+    Callers always write the new spelling; the shim owns the rename.
+    Only keyword form is supported (``mesh=``, ``in_specs=``,
+    ``out_specs=``) — the positional signatures differ across versions.
+
+``make_mesh_compat(shape, axes)``
+    Accepts a device-count shape tuple and matching axis-name tuple;
+    returns a concrete ``jax.sharding.Mesh`` over ``jax.devices()`` (jax
+    errors if the shape does not match the available device count).  On
+    jax lines that have ``jax.sharding.AxisType`` (0.5+), every axis is
+    created EXPLICITLY ``Auto`` — bit-for-bit the only behaviour 0.4.x
+    meshes have, so collectives and shard_map'd code see identical axis
+    semantics on both lines (never ``Explicit``/``Manual`` axes, which
+    0.4.x cannot express).  ``AbstractMesh`` construction is NOT wrapped
+    here: its signature changed ((shape, names) on 0.5+ vs a name→size
+    tuple on 0.4.x) and only test fixtures build one — see
+    ``tests/test_sharding.py`` for the two-spelling pattern.
+"""
 
 from __future__ import annotations
 
@@ -23,8 +61,9 @@ except ImportError:  # 0.4.x: experimental home, check_rep spelling
 
 
 def make_mesh_compat(shape, axes):
-    """jax.make_mesh across jax versions: ``axis_types`` (with explicit
-    Auto axes) only exists on newer releases; 0.4.x meshes are Auto-only."""
+    """jax.make_mesh across jax versions (contract in module docstring):
+    ``axis_types`` (with explicit Auto axes) only exists on newer
+    releases; 0.4.x meshes are Auto-only, so Auto is forced everywhere."""
     if hasattr(jax.sharding, "AxisType"):
         return jax.make_mesh(
             shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)

@@ -35,6 +35,18 @@ def main() -> None:
     ap.add_argument("--expand", type=int, default=2,
                     help="frontier expansions per query per wave "
                          "(--index graph)")
+    ap.add_argument("--graph-shards", type=int, default=1,
+                    help="corpus shards of the --index graph route: N > 1 "
+                         "shards the adjacency-flat slab over an N-device "
+                         "mesh with cross-shard frontier exchange between "
+                         "waves (bit-identical to the single-host walk; "
+                         "the corpus node count must divide evenly)")
+    ap.add_argument("--verify-graph-oracle", action="store_true",
+                    help="before serving, assert the --index graph engine "
+                         "returns bit-identical ids to the single-host "
+                         "beam oracle on a verification batch (the "
+                         "sharded-serving acceptance check; exits nonzero "
+                         "on mismatch)")
     ap.add_argument("--quant", default="none", choices=["none", "int8"],
                     help="int8: stream the corpus as 1-byte codes per wave "
                          "(repro.quant) with budgeted exact refinement")
@@ -94,18 +106,70 @@ def main() -> None:
 
     if args.index == "graph":
         # Batched beam-scan route: host-built NSW graph, one megakernel
-        # launch per frontier wave, host frontier commits between waves.
-        # Per-replica engine (no shard_map — ROADMAP records corpus-sharded
-        # graph serving as a follow-up), fed by the same dynamic batcher.
+        # launch per frontier wave per shard, host frontier selection
+        # between waves (the kernel owns expansion marking — the packed
+        # visited bitmap rides the wave state).  --graph-shards N > 1
+        # serves the corpus-sharded walk: the adjacency slab is row-sharded
+        # over an N-device mesh and each wave all-gathers/merges the beam
+        # windows + bitmaps across shards (docs/SERVING.md has the worked
+        # launch).
         from repro.index.graph import build_graph
-        from repro.launch.annservice import build_graph_engine
+        from repro.launch.annservice import (
+            build_graph_engine, build_sharded_graph_engine)
         from repro.runtime.scheduler import BatchScheduler
 
         gidx = build_graph(corpus, estimator=est, m=16,
                            ef_construction=max(2 * args.ef, 64),
                            quant="int8")
-        engine = build_graph_engine(gidx, k=svc.k, ef=args.ef,
-                                    expand=args.expand, with_stats=True)
+        from repro.kernels.ops import min_block_q
+
+        bq = min_block_q(jnp.int8) if on_tpu() else 8
+        sharded = args.graph_shards > 1
+        if sharded:
+            from repro.launch.mesh import make_mesh_compat as _mk
+
+            gmesh = _mk((args.graph_shards,), ("shard",))
+            engine = build_sharded_graph_engine(
+                gidx, gmesh, k=svc.k, ef=args.ef, expand=args.expand,
+                block_q=bq, with_stats=True)
+        else:
+            engine = build_graph_engine(gidx, k=svc.k, ef=args.ef,
+                                        expand=args.expand, block_q=bq,
+                                        with_stats=True)
+
+        if args.verify_graph_oracle:
+            # The acceptance check: the serving engine must return
+            # bit-identical ids to the single-host beam oracle (the
+            # pure-jnp two-stage screen on the unsharded slab).
+            from repro.index.graph import (
+                search_graph_beam_host, search_graph_sharded)
+
+            vq = np.asarray(
+                synthetic_queries(svc.query_batch, svc.dim, corpus, seed=77),
+                np.float32)
+            dv, iv, _ = engine(vq)
+            if sharded:
+                do, io, _ = search_graph_sharded(
+                    gidx, jnp.asarray(vq), num_shards=1, k=svc.k,
+                    ef=args.ef, expand=args.expand, block_q=bq,
+                    use_ref=True)
+            else:
+                do, io, _ = search_graph_beam_host(
+                    gidx, jnp.asarray(vq), k=svc.k, ef=args.ef,
+                    expand=args.expand, block_q=bq)
+            if not np.array_equal(np.asarray(iv), np.asarray(io)):
+                raise SystemExit(
+                    "graph serving ids diverge from the single-host beam "
+                    "oracle")
+            if not np.allclose(np.asarray(dv), np.asarray(do),
+                               rtol=5e-5, atol=1e-5):
+                raise SystemExit(
+                    "graph serving distances diverge from the single-host "
+                    "beam oracle")
+            print(f"verify: shards={args.graph_shards} engine bit-identical "
+                  f"to the single-host beam oracle "
+                  f"({svc.query_batch} queries)")
+
         g_stats = []
 
         def g_step(batch_np):
@@ -129,8 +193,31 @@ def main() -> None:
         total_q = sum(len(g) for g in gts)
         waves = sum(st.waves for st in g_stats)
         fetched = np.mean([st.fetched_bytes_per_query for st in g_stats])
-        gather = np.mean([st.gather_bytes_per_query for st in g_stats])
         skip = np.mean([st.s2_skip_rate for st in g_stats])
+        if sharded:
+            # Per-wave, per-shard fetch report + the exchange ledger: what
+            # each shard's HBM ships per wave and what the interconnect
+            # carries between waves (see quant/accounting.py).
+            shard_fpw = [
+                sum(st.shard_fetched_bytes_per_query[s] * svc.query_batch
+                    for st in g_stats) / max(waves, 1.0)
+                for s in range(args.graph_shards)]
+            exch_pw = np.mean([st.exchange_bytes_per_wave for st in g_stats])
+            exch_pq = np.mean([st.exchange_bytes_per_query for st in g_stats])
+            shard_note = " ".join(
+                f"shard{s}_fetched_B_per_wave={shard_fpw[s]:.0f}"
+                for s in range(args.graph_shards))
+            print(f"method={args.method} index=graph shards="
+                  f"{args.graph_shards} corpus={n} requests={len(reqs)} "
+                  f"rows={total_q} ef={args.ef} expand={args.expand} "
+                  f"QPS={total_q/dt:.0f} "
+                  f"recall@{svc.k}={np.mean(recalls):.3f} "
+                  f"waves={waves:.0f} fetched_B_per_q={fetched:.0f} "
+                  f"{shard_note} exchange_B_per_wave={exch_pw:.0f} "
+                  f"exchange_B_per_q={exch_pq:.0f} "
+                  f"s2_skip_rate={skip:.3f}")
+            return
+        gather = np.mean([st.gather_bytes_per_query for st in g_stats])
         print(f"method={args.method} index=graph corpus={n} "
               f"requests={len(reqs)} rows={total_q} ef={args.ef} "
               f"expand={args.expand} QPS={total_q/dt:.0f} "

@@ -23,6 +23,12 @@ definitions drift.  This module owns both accounting regimes:
     graph path (``index.graph.search_graph`` materializes each expansion's
     ``(M, D)`` neighbour block before screening it) and the baseline the
     beam-scan engine is measured against in fig8.
+  * **exchanged (cross-shard)** — bytes the sharded graph walk moves
+    between shards per wave (``frontier_exchange_bytes``: all-gathered
+    beam windows / thresholds / visited bitmaps + scattered frontier
+    offsets).  Interconnect traffic, not HBM — reported as its own column
+    by ``index.graph.GraphShardedStats``, fig9, and the sharded serve
+    report.
 
 ``benchmarks.common`` re-exports these helpers for the figure scripts; the
 host engines import them directly (src must not depend on benchmarks).
@@ -37,7 +43,7 @@ ID_BYTES = 4     # per-row id stream accompanying each scanned tile
 __all__ = [
     "INT8_BYTES", "FP32_BYTES", "ID_BYTES",
     "two_stage_bytes", "fetched_tile_bytes", "row_gather_bytes",
-    "stage2_skip_rate", "stage2_fetch_report",
+    "stage2_skip_rate", "stage2_fetch_report", "frontier_exchange_bytes",
 ]
 
 
@@ -75,6 +81,37 @@ def row_gather_bytes(rows, *, dims: int, fp_bytes: int = FP32_BYTES,
     (``index.graph.GraphScanStats.gather_bytes_per_query``) uses this as
     the honest host-two-stage baseline quantity."""
     return rows * (dims * (fp_bytes + int8_bytes) + id_bytes)
+
+
+def frontier_exchange_bytes(*, num_shards: int, queries: int, ef: int,
+                            vis_words: int, q_tiles: int, steps: int,
+                            f32_bytes: int = FP32_BYTES,
+                            id_bytes: int = ID_BYTES) -> float:
+    """Cross-shard frontier-exchange bytes of ONE sharded beam-scan wave.
+
+    The sharded graph walk moves two things between waves (the fourth
+    ledger, next to semantic/fetched/gathered):
+
+      * **all-gathered wave state** — each shard ships its (Q, EF) beam
+        window (f32 distances + i32 ids), its (Q,) carried r², and its
+        ``vis_words``-word packed visited bitmap to every other shard
+        (payload × S × (S−1): the full-exchange upper bound of the
+        all-gather; a ring implementation moves the same S−1 payloads per
+        shard, just over fewer links);
+      * **scattered frontier offsets** — the host broadcast of the wave's
+        per-shard (q_tiles, steps) localized offset tables.
+
+    Per-shard stats rides the same gather in practice but is diagnostics,
+    not walk state, and is excluded.  Returns 0.0 for ``num_shards <= 1``
+    (a single-host walk exchanges nothing).
+    """
+    if num_shards <= 1:
+        return 0.0
+    window = queries * ef * (f32_bytes + id_bytes) + queries * f32_bytes
+    payload = window + vis_words * 4
+    gathered = num_shards * (num_shards - 1) * payload
+    scattered = num_shards * q_tiles * steps * 4
+    return float(gathered + scattered)
 
 
 def stage2_skip_rate(s2_slabs_fetched, s2_slabs_total) -> float:

@@ -87,6 +87,33 @@ _SCRIPT = textwrap.dedent("""
         f"fused serving recall {recall_f} vs fp {recall}")
     print("OK fused_search", recall_f)
 
+    # ---- 1d. corpus-sharded graph serving (cross-shard frontier exchange) ---
+    # The acceptance property over a REAL 2-device mesh: the shard_map'd
+    # wave step (local beam-scan launches + all-gathered window/bitmap
+    # merge) returns bit-identical ids to the single-host beam oracle on
+    # the unsharded corpus, and the per-shard fetch ledgers sum to the
+    # single-host ledger.
+    from repro.index.graph import build_graph, search_graph_sharded
+    from repro.launch.annservice import build_sharded_graph_engine
+
+    gsub = np.asarray(corpus)[:800]
+    gidx = build_graph(gsub, m=10, ef_construction=32, delta_d=32,
+                       quant="int8")
+    gmesh = make_mesh_compat((2,), ("shard",))
+    gq = synthetic_queries(16, svc.dim, gsub, seed=5)
+    engine = build_sharded_graph_engine(gidx, gmesh, k=10, ef=24,
+                                        block_q=8, with_stats=True)
+    gd, gi, gst = engine(np.asarray(gq, np.float32))
+    od, oi, ost = search_graph_sharded(gidx, jnp.asarray(gq), num_shards=1,
+                                       k=10, ef=24, block_q=8, use_ref=True)
+    assert np.array_equal(gi, np.asarray(oi)), "sharded graph != oracle"
+    np.testing.assert_allclose(gd, np.asarray(od), rtol=1e-5, atol=1e-5)
+    assert gst.num_shards == 2 and gst.waves == ost.waves
+    assert (sum(gst.shard_s1_tiles_fetched)
+            == sum(ost.shard_s1_tiles_fetched))
+    assert gst.exchange_bytes_per_wave > 0
+    print("OK sharded_graph", gst.waves, gst.exchange_bytes_per_wave)
+
     # ---- 2. hierarchical_topk == flat global top-k --------------------------
     rng = np.random.default_rng(0)
     local = np.sort(rng.random((8, 4, 6)).astype(np.float32), axis=2)  # dev,Q,K
@@ -144,6 +171,7 @@ def test_distributed_semantics():
     )
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
     for marker in ("OK distributed_search", "OK quant_search",
-                   "OK fused_search", "OK hierarchical_topk",
-                   "OK compressed_allreduce", "OK elastic_restore"):
+                   "OK fused_search", "OK sharded_graph",
+                   "OK hierarchical_topk", "OK compressed_allreduce",
+                   "OK elastic_restore"):
         assert marker in r.stdout

@@ -1,13 +1,16 @@
 """Fused graph beam-scan megakernel (repro.kernels.graph_scan) + engine.
 
 Covers: kernel-vs-oracle parity on awkward shapes with carried-in beam
-windows (fetch counters included), the wave-replay passed-parity of the
-fused screen against ``dco_screen_batch`` at each expansion's frozen r²,
-fetch-elision soundness, the end-to-end bit-identity of the fused engine
-and the host two-stage graph screen (the acceptance property), compiled
--mode guard rails that name the offending value, recall/dedup behaviour,
-the adjacency-flat layout invariants, and a hypothesis property over
-random graphs/thresholds.
+windows (fetch counters and the device-side visited bitmap included), the
+wave-replay passed-parity of the fused screen against ``dco_screen_batch``
+at each expansion's frozen r², fetch-elision soundness + the cross-gap
+buffer-reuse counter drop, the end-to-end bit-identity of the fused engine
+and the host two-stage graph screen (the acceptance property), the
+sharded walk's shard-count invariance against the single-host beam oracle
+(the PR-5 acceptance property) with its ledger conservation and exchange
+accounting, compiled-mode + sharded-config guard rails that name the
+offending value, recall/dedup behaviour, the adjacency-flat layout
+invariants, and a hypothesis property over random graphs/thresholds.
 """
 
 import jax
@@ -21,9 +24,13 @@ from repro.core import build_estimator, exact_knn
 from repro.core.dco import dco_screen_batch
 from repro.index.graph import (
     build_graph, search_graph_beam_host, search_graph_fused,
+    search_graph_sharded, shard_graph_nodes,
 )
-from repro.kernels.ops import block_table, graph_scan_kernel, on_tpu
+from repro.kernels.ops import (
+    block_table, graph_scan_kernel, graph_vis_words, on_tpu, unpack_vis,
+)
 from repro.kernels.ref import graph_scan_ref
+from repro.quant.accounting import frontier_exchange_bytes
 from repro.quant.scalar import quantize_queries_block
 
 
@@ -115,13 +122,21 @@ def test_graph_kernel_matches_ref(qn, d, block_q, ef, steps):
         est, jnp.asarray(q), jnp.asarray(offs), jnp.asarray(top_sq),
         jnp.asarray(top_ids), jnp.asarray(r0), g.adj_rot, g.adj_codes,
         g.adj_ids, g.gscales, use_ref=True, **kw)
-    sq1, id1, st1 = out1
-    sq2, id2, st2 = out2
+    sq1, id1, st1, vis1 = out1
+    sq2, id2, st2, vis2 = out2
     assert np.array_equal(np.asarray(id1), np.asarray(id2))
     np.testing.assert_allclose(np.asarray(sq1), np.asarray(sq2),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(st1), np.asarray(st2), rtol=1e-6)
     assert float(np.asarray(st1)[:, 0].sum()) > 0  # real two-stage work
+    # the device-owned visited bitmap: kernel == oracle, and its bits are
+    # exactly the real offsets each tile expanded
+    assert np.array_equal(np.asarray(vis1), np.asarray(vis2))
+    exp = unpack_vis(np.asarray(vis1), n)
+    for t in range(q_tiles):
+        want = np.zeros(n, bool)
+        want[offs[t][offs[t] >= 0]] = True
+        assert np.array_equal(exp[t], want)
 
 
 def test_graph_kernel_compiled_matches_ref():
@@ -217,9 +232,10 @@ def test_graph_wave_replay_passed_parity(graph_idx, queries):
     eps, scale, d_pad, _ = block_table(est.table, dim, g.scan_block_d)
     qp = jnp.asarray(np.pad(qv, ((0, 0), (0, d_pad - dim))))
     qcodes, qscales = quantize_queries_block(qp, g.scan_block_d)
-    *_, trace = graph_scan_ref(
+    vis0 = jnp.zeros((q_tiles, graph_vis_words(n)), jnp.int32)
+    *out, trace = graph_scan_ref(
         jnp.asarray(offs), qcodes, qp, qscales, jnp.asarray(top_sq),
-        jnp.asarray(top_ids), jnp.asarray(r0), g.adj_codes, g.adj_rot,
+        jnp.asarray(top_ids), jnp.asarray(r0), vis0, g.adj_codes, g.adj_rot,
         g.adj_ids, g.gscales, eps, scale, ef=ef, block_q=block_q,
         block_c=g.adj_block, block_d=g.scan_block_d, return_trace=True)
 
@@ -241,6 +257,52 @@ def test_graph_wave_replay_passed_parity(graph_idx, queries):
         waves += 1
         pruned_rows += int(s1_pruned.sum())
     assert waves > 0 and pruned_rows > 0
+
+    # Mask ownership: the returned bitmap holds exactly the trace's marks.
+    exp = unpack_vis(np.asarray(out[3]), n)
+    for t in range(q_tiles):
+        marked = {r["marked"] for r in trace if r["tile"] == t}
+        assert set(np.flatnonzero(exp[t]).tolist()) == marked
+
+    # Fetch-counter drop (the cross-gap buffer-reuse fix): fresh compares
+    # against the last LANDED offset, so the trace's fetch count must sit
+    # at-or-below the naive previous-step rule — and strictly below it on
+    # a window that revisits a tile across -1 gap steps.
+    st_ref = np.asarray(out[2])
+    for t in range(q_tiles):
+        naive = landed = 0
+        prev = last = None
+        for s in range(offs.shape[1]):
+            o = int(offs[t, s])
+            if o >= 0:
+                naive += int(o != prev)
+                landed += int(o != last)
+                last = o
+            prev = o
+        assert st_ref[t * block_q, 5] == landed <= naive
+    gap_offs = np.asarray(offs, np.int32).copy()
+    gap_offs[:, 1:3] = -1
+    gap_offs[:, 3] = gap_offs[:, 0]  # revisit across the gap
+    *out_g, _ = graph_scan_ref(
+        jnp.asarray(gap_offs), qcodes, qp, qscales, jnp.asarray(top_sq),
+        jnp.asarray(top_ids), jnp.asarray(r0), vis0, g.adj_codes, g.adj_rot,
+        g.adj_ids, g.gscales, eps, scale, ef=ef, block_q=block_q,
+        block_c=g.adj_block, block_d=g.scan_block_d, return_trace=True)
+    st_gap = np.asarray(out_g[2])
+    for t in range(q_tiles):
+        real = gap_offs[t][gap_offs[t] >= 0]
+        landed_rule = 1 + int(np.sum(real[1:] != real[:-1]))
+        prev_rule = 0
+        prev = None
+        for s in range(gap_offs.shape[1]):
+            o = int(gap_offs[t, s])
+            if o >= 0 and o != prev:
+                prev_rule += 1
+            prev = o
+        # the pre-fix rule refetches the revisited tile after the gap...
+        assert prev_rule == landed_rule + 1
+        # ...and the fixed counter realizes exactly that saving
+        assert st_gap[t * block_q, 5] == landed_rule
 
 
 # ---- hypothesis property: random graphs/windows/thresholds ------------------
@@ -276,11 +338,11 @@ def test_graph_scan_parity_property(seed, n, d):
 
     kw = dict(ef=ef, block_q=block_q, block_c=g.adj_block,
               block_d=g.scan_block_d)
-    sq1, id1, st1 = graph_scan_kernel(
+    sq1, id1, st1, vis1 = graph_scan_kernel(
         g.estimator, jnp.asarray(q), jnp.asarray(offs), jnp.asarray(top_sq),
         jnp.asarray(top_ids), jnp.asarray(r0), g.adj_rot, g.adj_codes,
         g.adj_ids, g.gscales, interpret=True, **kw)
-    sq2, id2, st2 = graph_scan_kernel(
+    sq2, id2, st2, vis2 = graph_scan_kernel(
         g.estimator, jnp.asarray(q), jnp.asarray(offs), jnp.asarray(top_sq),
         jnp.asarray(top_ids), jnp.asarray(r0), g.adj_rot, g.adj_codes,
         g.adj_ids, g.gscales, use_ref=True, **kw)
@@ -288,6 +350,7 @@ def test_graph_scan_parity_property(seed, n, d):
     np.testing.assert_allclose(np.asarray(sq1), np.asarray(sq2),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(st1), np.asarray(st2), rtol=1e-6)
+    assert np.array_equal(np.asarray(vis1), np.asarray(vis2))
 
 
 # ---- engine-level behaviour -------------------------------------------------
@@ -363,6 +426,107 @@ def test_graph_serving_engine(graph_idx, queries):
     d2, i2, _ = search_graph_fused(g, jnp.asarray(queries), k=10, ef=32,
                                    expand=2)
     assert np.array_equal(i, np.asarray(i2))
+
+
+# ---- sharded beam scan: cross-shard frontier exchange -----------------------
+
+def test_sharded_walk_shard_count_invariant(graph_idx, queries):
+    """The PR-5 acceptance property: the corpus-sharded fused walk returns
+    bit-identical ids (distances to float tolerance) to the single-host
+    beam oracle (``num_shards=1, use_ref=True``) for every shard count,
+    with the per-shard fetch ledgers summing to the single-host ledger
+    (splitting a frozen wave moves work, it does not create any) and a
+    nonzero exchange ledger only when shards actually exchange."""
+    sub, g = graph_idx
+    q = jnp.asarray(queries)
+    d1, i1, s1 = search_graph_sharded(g, q, num_shards=1, k=10, ef=32,
+                                      use_ref=True)
+    for shards in (2, 3):
+        d2, i2, s2 = search_graph_sharded(g, q, num_shards=shards, k=10,
+                                          ef=32)
+        assert np.array_equal(np.asarray(i1), np.asarray(i2)), shards
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                                   rtol=1e-5, atol=1e-5)
+        assert s2.waves == s1.waves
+        assert s2.num_shards == shards
+        assert len(s2.shard_fetched_bytes_per_query) == shards
+        assert (sum(s2.shard_s1_tiles_fetched)
+                == sum(s1.shard_s1_tiles_fetched))
+        assert (sum(s2.shard_s2_slabs_fetched)
+                == sum(s1.shard_s2_slabs_fetched))
+        assert s2.exchange_bytes_per_wave > 0
+    assert s1.exchange_bytes_per_wave == 0.0  # a single shard ships nothing
+
+
+def test_sharded_oracle_and_kernel_paths_identical(graph_idx, queries):
+    """Sharded fused vs sharded oracle at the same shard count: the kernel
+    path and the pure-jnp replay screen identically shard by shard."""
+    sub, g = graph_idx
+    q = jnp.asarray(queries)
+    d1, i1, s1 = search_graph_sharded(g, q, num_shards=2, k=10, ef=24)
+    d2, i2, s2 = search_graph_sharded(g, q, num_shards=2, k=10, ef=24,
+                                      use_ref=True)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-5, atol=1e-5)
+    assert s1.shard_s1_tiles_fetched == s2.shard_s1_tiles_fetched
+    assert s1.shard_s2_slabs_fetched == s2.shard_s2_slabs_fetched
+
+
+def test_sharded_exchange_ledger_formula(graph_idx, queries):
+    """The exchange ledger is the accounting helper's quantity exactly:
+    waves × frontier_exchange_bytes at the walk's shapes (steps summed per
+    wave, so recompute from the stats totals)."""
+    sub, g = graph_idx
+    n = sub.shape[0]
+    q = jnp.asarray(queries)
+    _, _, st = search_graph_sharded(g, q, num_shards=2, k=10, ef=32,
+                                    block_q=8)
+    qn = len(queries)
+    q_tiles = (qn + 7) // 8
+    words = graph_vis_words(n)
+    # per-wave payload at steps=1 lower-bounds every wave's exchange
+    floor = frontier_exchange_bytes(
+        num_shards=2, queries=q_tiles * 8, ef=32,
+        vis_words=q_tiles * words, q_tiles=q_tiles, steps=1)
+    assert st.exchange_bytes_per_wave >= floor
+    assert st.exchange_bytes_per_query == pytest.approx(
+        st.exchange_bytes_per_wave * st.waves / qn)
+
+
+def test_sharded_config_guards_name_value(graph_idx, queries):
+    """Sharded-graph config fail-fasts name the offending value (the PR-4
+    guard-rail convention): uneven node splits, nonsensical shard counts,
+    multi-axis meshes, and bitmap misuse all carry the number that broke."""
+    sub, g = graph_idx
+    n = sub.shape[0]  # 1200
+    with pytest.raises(ValueError, match=rf"n={n} % num_shards=7"):
+        shard_graph_nodes(n, 7)
+    with pytest.raises(ValueError, match=r"num_shards=0"):
+        shard_graph_nodes(n, 0)
+    with pytest.raises(ValueError, match=rf"n={n} % num_shards=7"):
+        search_graph_sharded(g, jnp.asarray(queries), num_shards=7, k=10,
+                             ef=32)
+    # a traced-style vis_base overrunning the declared global bitmap
+    with pytest.raises(ValueError, match=r"vis_base=600"):
+        graph_scan_kernel(
+            g.estimator, g.estimator.rotate(
+                jnp.asarray(queries, jnp.float32)),
+            jnp.zeros((3, 1), jnp.int32), jnp.full((24, 32), jnp.inf),
+            jnp.full((24, 32), -1, jnp.int32), jnp.full((24,), jnp.inf),
+            g.adj_rot, g.adj_codes, g.adj_ids, g.gscales,
+            vis_base=600, vis_nodes=n, ef=32, block_q=8, block_c=g.adj_block,
+            block_d=g.scan_block_d)
+
+
+def test_sharded_engine_rejects_multiaxis_mesh(graph_idx):
+    from repro.launch.annservice import build_sharded_graph_engine
+    from repro.launch.mesh import make_mesh_compat
+
+    sub, g = graph_idx
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match=r"axes=\('data', 'model'\)"):
+        build_sharded_graph_engine(g, mesh, k=10)
 
 
 def test_bf16_adjacency_engines_bit_identical(aniso_corpus, queries):
