@@ -41,10 +41,36 @@ def set_smoke():
 
 
 def record(name: str, **metrics):
-    """Register a machine-readable benchmark row for BENCH_dco.json."""
-    _records[name] = {
+    """Register a machine-readable benchmark row for BENCH_dco.json.
+
+    Every row is stamped with run provenance (git sha, jax version, device
+    kind, ISO date — ``repro.obs.export.provenance``) so the perf
+    trajectory stays attributable PR-over-PR; ``scripts/bench_diff.py``
+    skips the ``provenance`` key when banding."""
+    if "provenance" not in _cache:  # one git/jax probe per run, not per row
+        from repro.obs.export import provenance
+
+        _cache["provenance"] = provenance()
+    row = {
         k: (float(v) if isinstance(v, (int, float, np.floating)) else v)
         for k, v in metrics.items()
+    }
+    row["provenance"] = _cache["provenance"]
+    _records[name] = row
+
+
+def record_stage_timings(name: str, tracer, *, stages: tuple):
+    """Fold a trace capture's per-stage wall-clock into the named bench
+    row: ``stage_ms.<span>`` totals from ``obs.export.span_totals`` for
+    each requested span name.  Timings land under the non-banded
+    ``stage_ms`` key (wall-clock is machine-dependent — trajectory data,
+    not a regression gate)."""
+    from repro.obs.export import span_totals
+
+    totals = span_totals(tracer)
+    row = _records.setdefault(name, {})
+    row["stage_ms"] = {
+        s: round(totals[s]["total_ms"], 3) for s in stages if s in totals
     }
 
 

@@ -19,12 +19,26 @@ Baseline format (JSON)::
                         }, ...}}
 
 Only deterministic metrics belong here (bytes/query, recall, skip rates,
-wave counts); QPS and wall clock vary by runner and must stay out.
-Exit code 1 on any violation, with every failure listed.
+wave counts); QPS and wall clock vary by runner and must stay out.  Rows
+also carry non-metric annotations (``provenance``, ``stage_ms`` — see
+``benchmarks/common.py``) which are never banded and are skipped here.
+Exit code 1 on any violation; each failure is ONE line naming the metric
+with its baseline value, the observed value, and the percent delta.
 """
 
 import json
 import sys
+
+# Annotation keys benchmarks/common.py attaches to every row; structured
+# metadata, not metrics — never compared, and ignored if a baseline
+# accidentally lists them.
+NON_METRIC_KEYS = ("provenance", "stage_ms")
+
+
+def _delta(got: float, ref: float) -> str:
+    if ref == 0:
+        return "delta=n/a"
+    return f"delta={100.0 * (got - ref) / abs(ref):+.1f}%"
 
 
 def check(run_path: str, baseline_path: str) -> int:
@@ -36,23 +50,28 @@ def check(run_path: str, baseline_path: str) -> int:
             failures.append(f"{row}: row missing from {run_path}")
             continue
         for metric, band in metrics.items():
+            if metric in NON_METRIC_KEYS:
+                continue
             if metric not in run[row]:
                 failures.append(f"{row}.{metric}: metric missing")
                 continue
             got = float(run[row][metric])
             if "max" in band and got > band["max"]:
                 failures.append(
-                    f"{row}.{metric}: {got:.6g} above ceiling {band['max']}")
+                    f"{row}.{metric}: baseline max={band['max']:.6g} "
+                    f"observed={got:.6g} {_delta(got, band['max'])}")
             if "min" in band and got < band["min"]:
                 failures.append(
-                    f"{row}.{metric}: {got:.6g} below floor {band['min']}")
+                    f"{row}.{metric}: baseline min={band['min']:.6g} "
+                    f"observed={got:.6g} {_delta(got, band['min'])}")
             if "ref" in band:
                 rtol = band.get("rtol", 0.05)
                 ref = band["ref"]
                 if abs(got - ref) > rtol * abs(ref):
                     failures.append(
-                        f"{row}.{metric}: {got:.6g} outside {rtol:.0%} of "
-                        f"reference {ref}")
+                        f"{row}.{metric}: baseline ref={ref:.6g} "
+                        f"(rtol {rtol:.0%}) observed={got:.6g} "
+                        f"{_delta(got, ref)}")
     if failures:
         print(f"bench diff: {len(failures)} regression(s) vs {baseline_path}")
         for f in failures:

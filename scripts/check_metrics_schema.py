@@ -1,0 +1,126 @@
+#!/usr/bin/env python
+"""Validate a serve.py --metrics-json snapshot against the obs schema.
+
+    python scripts/check_metrics_schema.py serve_metrics.json
+
+The CI serve smoke writes a metrics envelope; this check makes the file
+load-bearing: required envelope keys present, every metric well-formed for
+its type, and the cross-ledger consistency invariants that tie the
+snapshot to the engine stats the human-readable serve line prints:
+
+  * ``serve.queries`` matches the report's ``queries`` figure;
+  * the latency histogram holds exactly ``serve.requests`` observations;
+  * on the sharded graph route, the per-shard
+    ``graph.sharded.shard<i>.fetched_bytes`` counters sum EXACTLY to
+    ``dco.fetched.bytes`` (the serving engines run with threshold seeding
+    off, so the summed ledger has no per-query seed term), and the
+    reported fetched-bytes-per-query figure reproduces the same total.
+
+Pure stdlib (the point of the dependency-free obs layer: this runs in CI
+contexts with no jax).  Exit 1 on any violation, each named on one line.
+"""
+
+import json
+import sys
+
+ENVELOPE_KEYS = ("schema_version", "provenance", "config", "metrics")
+PROVENANCE_KEYS = ("git_sha", "jax_version", "device_kind", "date")
+METRIC_FIELDS = {
+    "counter": ("value",),
+    "gauge": ("value",),
+    "histogram": ("bounds", "counts", "sum", "count"),
+}
+
+
+def check(path: str) -> int:
+    doc = json.load(open(path))
+    fails = []
+
+    for key in ENVELOPE_KEYS:
+        if key not in doc:
+            fails.append(f"envelope: missing key {key!r}")
+    for key in PROVENANCE_KEYS:
+        if key not in doc.get("provenance", {}):
+            fails.append(f"provenance: missing key {key!r}")
+    if doc.get("schema_version") != 1:
+        fails.append(f"schema_version: expected 1, "
+                     f"got {doc.get('schema_version')!r}")
+
+    metrics = doc.get("metrics", {})
+    for name, entry in metrics.items():
+        mtype = entry.get("type")
+        if mtype not in METRIC_FIELDS:
+            fails.append(f"{name}: unknown metric type {mtype!r}")
+            continue
+        for field in METRIC_FIELDS[mtype]:
+            if field not in entry:
+                fails.append(f"{name}: {mtype} missing field {field!r}")
+        if mtype == "histogram" and "bounds" in entry and "counts" in entry:
+            if len(entry["counts"]) != len(entry["bounds"]) + 1:
+                fails.append(
+                    f"{name}: histogram needs len(bounds)+1 counts "
+                    f"(overflow bucket), got {len(entry['counts'])} for "
+                    f"{len(entry['bounds'])} bounds")
+            elif sum(entry["counts"]) != entry.get("count"):
+                fails.append(
+                    f"{name}: bucket counts sum to {sum(entry['counts'])} "
+                    f"but count={entry.get('count')}")
+
+    def value(name):
+        return metrics.get(name, {}).get("value")
+
+    report = doc.get("report", {})
+    if value("serve.queries") is None or value("serve.requests") is None:
+        fails.append("metrics: serve.queries / serve.requests missing")
+    else:
+        if report.get("queries") != value("serve.queries"):
+            fails.append(
+                f"consistency: report queries {report.get('queries')} != "
+                f"serve.queries counter {value('serve.queries')}")
+        lat = metrics.get("serve.request.latency_ms")
+        if lat and lat["count"] != value("serve.requests"):
+            fails.append(
+                f"consistency: latency histogram count {lat['count']} != "
+                f"serve.requests {value('serve.requests')}")
+
+    shard_keys = sorted(
+        k for k in metrics
+        if k.startswith("graph.sharded.shard") and k.endswith(".fetched_bytes"))
+    if shard_keys:
+        shard_sum = sum(value(k) for k in shard_keys)
+        total = value("dco.fetched.bytes")
+        if total is None:
+            fails.append("consistency: shard fetched counters present but "
+                         "dco.fetched.bytes missing")
+        elif abs(shard_sum - total) > 1e-6 * max(abs(total), 1.0):
+            fails.append(
+                f"consistency: sum(shard fetched_bytes)={shard_sum} != "
+                f"dco.fetched.bytes={total}")
+        # The report's per-query figure is the same ledger averaged over
+        # engine batches; reproduce the total from it (batches × padded
+        # batch rows × per-query) to tie print-line and snapshot together.
+        fpq = report.get("fetched_bytes_per_query")
+        qb = doc.get("config", {}).get("batch")
+        batches = value("graph.sharded.queries")
+        if fpq is not None and qb and batches:
+            rebuilt = fpq * batches
+            if total is not None and abs(rebuilt - total) > 1e-6 * total:
+                fails.append(
+                    f"consistency: report fetched_bytes_per_query × "
+                    f"ledger queries = {rebuilt} != "
+                    f"dco.fetched.bytes={total}")
+
+    if fails:
+        print(f"metrics schema: {len(fails)} violation(s) in {path}")
+        for f in fails:
+            print(f"  FAIL {f}")
+        return 1
+    print(f"metrics schema: {path} valid "
+          f"({len(metrics)} metrics, schema_version=1)")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        sys.exit(__doc__)
+    sys.exit(check(sys.argv[1]))

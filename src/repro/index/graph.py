@@ -62,6 +62,7 @@ import numpy as np
 
 from repro.core.dco import dco_screen
 from repro.core.estimators import Estimator, build_estimator
+from repro.obs.trace import current_tracer
 from repro.kernels.ops import (
     fused_fetch_totals,
     graph_scan_kernel,
@@ -725,79 +726,123 @@ def _run_wave_loop(
     s2_slabs = np.zeros((num_shards,), np.float64)
     exch_bytes = 0.0
     waves = 0
+    # Tracing: resolved ONCE per search; the default NULL_TRACER makes
+    # every span/instant/fence below a no-op (no flag tests in the loop).
+    # Span timing is honest because ``fence`` blocks on the device values
+    # a span claims to cover; per-wave byte instants reuse the exact
+    # accounting helpers of the stats epilogues, so summed span bytes
+    # equal the ledger totals (asserted in tests/test_obs.py).
+    tr = current_tracer()
+    d_pad = index.adj_rot.shape[1]
+    fp_bytes = jnp.dtype(index.adj_rot.dtype).itemsize
     while waves < max_waves:
-        r0 = np.minimum(seed_vec, top_sq[:, thresh_col])
-        if waves == 0:
-            # Bootstrap: the entry point is expanded unconditionally (its
-            # own distance may exceed a seeded threshold, but its
-            # neighbourhood is what fills the window).
-            picked = [[entry] for _ in range(q_tiles)]
-        else:
-            # The routing radius widens the proposal gate beyond the DCO
-            # threshold (squared-distance multiplier): entries past r
-            # cannot enter the result, but expanding them reaches
-            # neighbourhoods the tight walk would miss — the beam-width
-            # dial of the batched engine.
-            picked = _select_wave(top_sq, top_ids, unpack_vis(vis, n),
-                                  r0 * route_mult, q_tiles=q_tiles,
-                                  block_q=block_q, qn=qn, expand=expand,
-                                  ef=ef)
-        width = max(len(s) for s in picked)
-        if width == 0:
-            break  # no window entry can improve any query's result
-        steps = 1 << (width - 1).bit_length()  # pow2-bucketed shapes
-        offs = np.full((q_tiles, steps), -1, np.int32)
-        for t, sel in enumerate(picked):
-            offs[t, : len(sel)] = sel  # node id == tile offset (adj layout)
-        # Scatter the frontier: each shard sees only the nodes it owns,
-        # localized to its slab (same step positions, -1 elsewhere).
-        offs_sh = np.full((num_shards, q_tiles, steps), -1, np.int32)
-        for s, (b, c) in enumerate(ranges):
-            own = (offs >= b) & (offs < b + c)
-            offs_sh[s] = np.where(own, offs - b, -1)
+        with tr.span("graph.wave", wave=waves, num_shards=num_shards) as wsp:
+            with tr.span("graph.route"):
+                r0 = np.minimum(seed_vec, top_sq[:, thresh_col])
+                if waves == 0:
+                    # Bootstrap: the entry point is expanded
+                    # unconditionally (its own distance may exceed a
+                    # seeded threshold, but its neighbourhood is what
+                    # fills the window).
+                    picked = [[entry] for _ in range(q_tiles)]
+                else:
+                    # The routing radius widens the proposal gate beyond
+                    # the DCO threshold (squared-distance multiplier):
+                    # entries past r cannot enter the result, but
+                    # expanding them reaches neighbourhoods the tight
+                    # walk would miss — the beam-width dial of the
+                    # batched engine.
+                    picked = _select_wave(top_sq, top_ids,
+                                          unpack_vis(vis, n),
+                                          r0 * route_mult, q_tiles=q_tiles,
+                                          block_q=block_q, qn=qn,
+                                          expand=expand, ef=ef)
+                width = max(len(s) for s in picked)
+                if width == 0:
+                    wsp.annotate(terminal=True)
+                    break  # no window entry can improve any query's result
+                steps = 1 << (width - 1).bit_length()  # pow2 shapes
+                offs = np.full((q_tiles, steps), -1, np.int32)
+                for t, sel in enumerate(picked):
+                    offs[t, : len(sel)] = sel  # node id == tile offset
+                # Scatter the frontier: each shard sees only the nodes it
+                # owns, localized to its slab (same step positions, -1
+                # elsewhere).
+                offs_sh = np.full((num_shards, q_tiles, steps), -1,
+                                  np.int32)
+                for s, (b, c) in enumerate(ranges):
+                    own = (offs >= b) & (offs < b + c)
+                    offs_sh[s] = np.where(own, offs - b, -1)
+            wsp.annotate(width=width, steps=steps)
 
-        if wave_step is not None:
-            t_sq, t_ids, t_vis, st_sh = wave_step(
-                offs_sh, q_sorted, top_sq, top_ids, r0, vis)
-        else:
-            g_sq, g_ids, g_vis, g_st = [], [], [], []
-            for s, (b, c) in enumerate(ranges):
-                a_rot, a_codes, a_ids = slabs[s]
-                sq_s, id_s, st_s, vis_s = graph_scan_kernel(
-                    est, jnp.asarray(q_sorted), jnp.asarray(offs_sh[s]),
-                    jnp.asarray(top_sq), jnp.asarray(top_ids),
-                    jnp.asarray(r0), a_rot, a_codes, a_ids, index.gscales,
-                    jnp.asarray(vis), vis_base=b, vis_nodes=n,
-                    ef=ef, thresh_col=thresh_col, block_q=block_q,
-                    block_c=a_block, block_d=index.scan_block_d,
-                    tighten=tighten, interpret=interpret, use_ref=use_ref)
-                g_sq.append(jnp.asarray(sq_s))
-                g_ids.append(jnp.asarray(id_s))
-                g_vis.append(np.asarray(vis_s, np.int32))
-                g_st.append(np.asarray(st_s))
-            if num_shards == 1:
-                t_sq, t_ids, t_vis = g_sq[0], g_ids[0], g_vis[0]
+            if wave_step is not None:
+                # Mesh path: kernel + all-gather + window merge are ONE
+                # shard_map'd jit step, so the merge cannot be a separate
+                # timed span — mark it as an in-step annotation instead.
+                with tr.span("graph.launch", steps=steps):
+                    t_sq, t_ids, t_vis, st_sh = tr.fence(wave_step(
+                        offs_sh, q_sorted, top_sq, top_ids, r0, vis))
+                tr.instant("graph.merge", in_step=True)
             else:
-                t_sq, t_ids = merge_shard_windows(
-                    jnp.stack(g_sq), jnp.stack(g_ids), ef=ef)
-                t_vis = g_vis[0]
-                for v in g_vis[1:]:
-                    t_vis = t_vis | v
-            st_sh = np.stack(g_st)
+                g_sq, g_ids, g_vis, g_st = [], [], [], []
+                with tr.span("graph.launch", steps=steps):
+                    for s, (b, c) in enumerate(ranges):
+                        a_rot, a_codes, a_ids = slabs[s]
+                        sq_s, id_s, st_s, vis_s = graph_scan_kernel(
+                            est, jnp.asarray(q_sorted),
+                            jnp.asarray(offs_sh[s]),
+                            jnp.asarray(top_sq), jnp.asarray(top_ids),
+                            jnp.asarray(r0), a_rot, a_codes, a_ids,
+                            index.gscales,
+                            jnp.asarray(vis), vis_base=b, vis_nodes=n,
+                            ef=ef, thresh_col=thresh_col, block_q=block_q,
+                            block_c=a_block, block_d=index.scan_block_d,
+                            tighten=tighten, interpret=interpret,
+                            use_ref=use_ref)
+                        g_sq.append(jnp.asarray(sq_s))
+                        g_ids.append(jnp.asarray(id_s))
+                        g_vis.append(np.asarray(vis_s, np.int32))
+                        g_st.append(np.asarray(st_s))
+                    tr.fence(g_sq)
+                with tr.span("graph.merge", num_shards=num_shards):
+                    if num_shards == 1:
+                        t_sq, t_ids, t_vis = g_sq[0], g_ids[0], g_vis[0]
+                    else:
+                        t_sq, t_ids = merge_shard_windows(
+                            jnp.stack(g_sq), jnp.stack(g_ids), ef=ef)
+                        t_vis = g_vis[0]
+                        for v in g_vis[1:]:
+                            t_vis = t_vis | v
+                    t_sq, t_ids = tr.fence((t_sq, t_ids))
+                    st_sh = np.stack(g_st)
 
-        top_sq = np.asarray(t_sq, np.float32)
-        top_ids = np.asarray(t_ids, np.int32)
-        vis = np.asarray(t_vis, np.int32)
-        st_sh = np.asarray(st_sh)
-        for s in range(num_shards):
-            sem += st_sh[s][:qn, :4].sum(axis=0)
-            w1, w2 = fused_fetch_totals(st_sh[s], block_q)
-            s1_tiles[s] += w1
-            s2_slabs[s] += w2
-        exch_bytes += frontier_exchange_bytes(
-            num_shards=num_shards, queries=q_pad, ef=ef,
-            vis_words=q_tiles * words, q_tiles=q_tiles, steps=steps)
-        waves += 1
+            with tr.span("graph.host_commit"):
+                top_sq = np.asarray(t_sq, np.float32)
+                top_ids = np.asarray(t_ids, np.int32)
+                vis = np.asarray(t_vis, np.int32)
+                st_sh = np.asarray(st_sh)
+                for s in range(num_shards):
+                    sem += st_sh[s][:qn, :4].sum(axis=0)
+                    w1, w2 = fused_fetch_totals(st_sh[s], block_q)
+                    s1_tiles[s] += w1
+                    s2_slabs[s] += w2
+                    tr.instant(
+                        "graph.stage1_dma", shard=s, wave=waves, tiles=w1,
+                        bytes=fetched_tile_bytes(
+                            w1, block_c=a_block, dims=d_pad,
+                            bytes_per_dim=1, id_bytes=ID_BYTES))
+                    tr.instant(
+                        "graph.stage2", shard=s, wave=waves, slabs=w2,
+                        bytes=fetched_tile_bytes(
+                            w2, block_c=a_block, dims=index.scan_block_d,
+                            bytes_per_dim=fp_bytes))
+                wave_exch = frontier_exchange_bytes(
+                    num_shards=num_shards, queries=q_pad, ef=ef,
+                    vis_words=q_tiles * words, q_tiles=q_tiles,
+                    steps=steps)
+                tr.instant("graph.exchange", wave=waves, bytes=wave_exch)
+                exch_bytes += wave_exch
+            waves += 1
 
     dists = np.sqrt(np.maximum(top_sq[:qn], 0.0))[inv][:, :k]
     ids = top_ids[:qn][inv][:, :k]

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.dco import dco_screen_batch
 from repro.core.estimators import Estimator, build_estimator
+from repro.obs.trace import current_tracer
 from repro.core.topk import merge_topk
 from repro.index.kmeans import kmeans
 from repro.kernels.ops import fused_fetch_totals, ivf_scan_kernel
@@ -409,75 +410,85 @@ def search_ivf_fused(
     """
     if not index.has_fused:
         raise ValueError("search_ivf_fused needs build_ivf(..., quant='int8')")
+    # NULL_TRACER by default: every span/instant/fence below is a no-op
+    # unless serve/bench installed a recording tracer (repro.obs.trace).
+    tr = current_tracer()
     q = queries.astype(jnp.float32)
     q_rot = index.estimator.rotate(q)
     qn = q_rot.shape[0]
     n_probe = min(n_probe, index.n_clusters)
 
-    cd = (
-        jnp.sum(q_rot * q_rot, axis=1)[:, None]
-        + jnp.sum(index.centroids * index.centroids, axis=1)[None, :]
-        - 2.0 * q_rot @ index.centroids.T
-    )
-    # Group queries into tiles of block_q by nearest centroid.
-    nearest = jnp.argmin(cd, axis=1)
-    order = jnp.argsort(nearest)
-    inv = jnp.argsort(order)
-    q_sorted = q_rot[order]
-    cd_sorted = cd[order]
+    with tr.span("ivf.route", n_probe=n_probe):
+        cd = (
+            jnp.sum(q_rot * q_rot, axis=1)[:, None]
+            + jnp.sum(index.centroids * index.centroids, axis=1)[None, :]
+            - 2.0 * q_rot @ index.centroids.T
+        )
+        # Group queries into tiles of block_q by nearest centroid.
+        nearest = jnp.argmin(cd, axis=1)
+        order = jnp.argsort(nearest)
+        inv = jnp.argsort(order)
+        q_sorted = q_rot[order]
+        cd_sorted = cd[order]
 
-    q_tiles = (qn + block_q - 1) // block_q
-    pad = q_tiles * block_q - qn
-    nc = cd.shape[1]
-    cd_t = jnp.concatenate(
-        [cd_sorted, jnp.full((pad, nc), jnp.inf)], axis=0
-    ).reshape(q_tiles, block_q, nc)
-    tile_cd = jnp.min(cd_t, axis=1)  # (QT, Nc)
-    # Rank a tile's buckets by rank-weighted votes from its queries' OWN
-    # top-n_probe lists (weight 1/(rank+1): a query's primary bucket
-    # outweighs several mid-rank mentions), tie-broken by the tile-min
-    # centroid distance.  Pure min-distance ranking starves queries whose
-    # buckets are individually close but never tile-closest; unweighted
-    # voting drops primary buckets for popular mid-rank ones — both cost
-    # measurable recall on clustered corpora.
-    _, q_probe = jax.lax.top_k(-cd_sorted, n_probe)  # (Q, P) per query
-    rank_w = 1.0 / (jnp.arange(n_probe, dtype=jnp.float32) + 1.0)
-    # Rank-0 gets an overwhelming weight: a tile holds at most block_q
-    # distinct top-1 buckets, so with n_probe >= block_q EVERY query's
-    # primary bucket — where most of its neighbours live — is guaranteed
-    # a slot, whatever the rest of the tile votes.
-    rank_w = rank_w.at[0].set(float(n_probe * block_q))
-    # Scatter-add, not one_hot: the dense (Q, P, Nc) intermediate would be
-    # ~100 MB per call at roadmap scale (Nc ~ thousands).
-    votes_q = jnp.zeros((qn, nc), jnp.float32).at[
-        jnp.arange(qn)[:, None], q_probe].add(rank_w[None, :])  # (Q, Nc)
-    votes = jnp.concatenate(
-        [votes_q, jnp.zeros((pad, nc))], axis=0
-    ).reshape(q_tiles, block_q, nc).sum(axis=1)  # (QT, Nc)
-    finite_cd = jnp.where(jnp.isfinite(tile_cd), tile_cd, 0.0)
-    tiebreak = finite_cd / (jnp.max(finite_cd) + 1.0) * 1e-3  # < any vote
-    _, tile_buckets = jax.lax.top_k(votes - tiebreak, n_probe)
-    window_starts = index.starts[tile_buckets]  # (QT, P) flat row offsets
-    window_rows = index.bucket_sizes[tile_buckets]  # (QT, P) bucket sizes
+        q_tiles = (qn + block_q - 1) // block_q
+        pad = q_tiles * block_q - qn
+        nc = cd.shape[1]
+        cd_t = jnp.concatenate(
+            [cd_sorted, jnp.full((pad, nc), jnp.inf)], axis=0
+        ).reshape(q_tiles, block_q, nc)
+        tile_cd = jnp.min(cd_t, axis=1)  # (QT, Nc)
+        # Rank a tile's buckets by rank-weighted votes from its queries'
+        # OWN top-n_probe lists (weight 1/(rank+1): a query's primary
+        # bucket outweighs several mid-rank mentions), tie-broken by the
+        # tile-min centroid distance.  Pure min-distance ranking starves
+        # queries whose buckets are individually close but never
+        # tile-closest; unweighted voting drops primary buckets for
+        # popular mid-rank ones — both cost measurable recall on
+        # clustered corpora.
+        _, q_probe = jax.lax.top_k(-cd_sorted, n_probe)  # (Q, P) per query
+        rank_w = 1.0 / (jnp.arange(n_probe, dtype=jnp.float32) + 1.0)
+        # Rank-0 gets an overwhelming weight: a tile holds at most block_q
+        # distinct top-1 buckets, so with n_probe >= block_q EVERY query's
+        # primary bucket — where most of its neighbours live — is
+        # guaranteed a slot, whatever the rest of the tile votes.
+        rank_w = rank_w.at[0].set(float(n_probe * block_q))
+        # Scatter-add, not one_hot: the dense (Q, P, Nc) intermediate
+        # would be ~100 MB per call at roadmap scale (Nc ~ thousands).
+        votes_q = jnp.zeros((qn, nc), jnp.float32).at[
+            jnp.arange(qn)[:, None], q_probe].add(rank_w[None, :])  # (Q, Nc)
+        votes = jnp.concatenate(
+            [votes_q, jnp.zeros((pad, nc))], axis=0
+        ).reshape(q_tiles, block_q, nc).sum(axis=1)  # (QT, Nc)
+        finite_cd = jnp.where(jnp.isfinite(tile_cd), tile_cd, 0.0)
+        tiebreak = finite_cd / (jnp.max(finite_cd) + 1.0) * 1e-3  # < votes
+        _, tile_buckets = jax.lax.top_k(votes - tiebreak, n_probe)
+        window_starts = index.starts[tile_buckets]  # (QT, P) flat offsets
+        window_rows = index.bucket_sizes[tile_buckets]  # (QT, P) sizes
+        tr.fence(window_rows)
 
-    if seed_r:
-        # Seed from the tile's best bucket (guaranteed scanned), so the
-        # exact-verified candidates re-enter the on-device top-K in wave 0.
-        seed_bucket = jnp.repeat(tile_buckets[:, 0], block_q)[:qn]
-        r0 = _quant_seed_rsq(index, q_sorted, seed_bucket, k)
-    else:
-        r0 = jnp.full((qn,), jnp.inf)
+    with tr.span("ivf.seed", seed_r=seed_r):
+        if seed_r:
+            # Seed from the tile's best bucket (guaranteed scanned), so
+            # the exact-verified candidates re-enter the on-device top-K
+            # in wave 0.
+            seed_bucket = jnp.repeat(tile_buckets[:, 0], block_q)[:qn]
+            r0 = _quant_seed_rsq(index, q_sorted, seed_bucket, k)
+        else:
+            r0 = jnp.full((qn,), jnp.inf)
+        tr.fence(r0)
 
-    top_sq, top_ids, stats = ivf_scan_kernel(
-        index.estimator, q_sorted, window_starts, window_rows, index.flat_rot,
-        index.flat_codes, index.flat_ids, index.bscales, r0,
-        k=k, max_bucket=index.max_bucket, block_q=block_q, block_c=block_c,
-        block_d=index.scan_block_d,
-        # Build aligns cluster starts to the 128-row grid; any tile width
-        # dividing it inherits exact windows.
-        starts_aligned=(128 % block_c == 0),
-        interpret=interpret, use_ref=use_ref,
-    )
+    with tr.span("ivf.launch", q_tiles=q_tiles):
+        top_sq, top_ids, stats = tr.fence(ivf_scan_kernel(
+            index.estimator, q_sorted, window_starts, window_rows,
+            index.flat_rot, index.flat_codes, index.flat_ids, index.bscales,
+            r0, k=k, max_bucket=index.max_bucket, block_q=block_q,
+            block_c=block_c, block_d=index.scan_block_d,
+            # Build aligns cluster starts to the 128-row grid; any tile
+            # width dividing it inherits exact windows.
+            starts_aligned=(128 % block_c == 0),
+            interpret=interpret, use_ref=use_ref,
+        ))
     dists = jnp.sqrt(jnp.maximum(top_sq, 0.0))[inv]
     ids = top_ids[inv]
     st = np.asarray(stats)
@@ -498,6 +509,11 @@ def search_ivf_fused(
     s2_fetched_b, _, s2_skip, s2_total = stage2_fetch_report(
         s1_tiles, s2_slabs, block_c=block_c, d_pad=d_pad, block_d=block_d,
         fp_bytes=fp_itemsize)
+    tr.instant("ivf.stage1_dma", tiles=s1_tiles,
+               bytes=fetched_tile_bytes(s1_tiles, block_c=block_c,
+                                        dims=d_pad, bytes_per_dim=1,
+                                        id_bytes=ID_BYTES))
+    tr.instant("ivf.stage2", slabs=s2_slabs, bytes=float(s2_fetched_b))
     fetched = fetched_tile_bytes(
         s1_tiles, block_c=block_c, dims=d_pad, bytes_per_dim=1,
         id_bytes=ID_BYTES) + s2_fetched_b

@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.dade_ivf import ServiceConfig
 from repro.launch.mesh import shard_map
+from repro.obs.trace import current_tracer
 from repro.quant.scalar import cum_err_sq
 from repro.distributed.collectives import hierarchical_topk
 
@@ -99,9 +100,13 @@ def build_graph_engine(index, *, k: int, ef: int = 48, expand: int = 2,
         block_q = min_block_q(jnp.int8) if on_tpu() else 8
 
     def step(batch_np):
-        d, i, st = search_graph_fused(
-            index, jnp.asarray(batch_np), k=k, ef=ef, expand=expand,
-            block_q=block_q, seed_r=seed_r)
+        # current_tracer() resolves at CALL time, so a tracer serve.py
+        # installs after engine build is still seen (NULL_TRACER: no-op).
+        with current_tracer().span("engine.step", route="graph",
+                                   batch=len(batch_np)):
+            d, i, st = search_graph_fused(
+                index, jnp.asarray(batch_np), k=k, ef=ef, expand=expand,
+                block_q=block_q, seed_r=seed_r)
         if with_stats:
             return np.asarray(d), np.asarray(i), st
         return np.asarray(d), np.asarray(i)
@@ -207,11 +212,13 @@ def build_sharded_graph_engine(index, mesh, *, k: int, ef: int = 48,
             jnp.asarray(vis), adj_rot, adj_codes, adj_ids)
 
     def step(batch_np):
-        d, i, st = search_graph_sharded(
-            index, jnp.asarray(batch_np), num_shards=num_shards, k=k,
-            ef=ef, expand=expand, block_q=block_q, max_waves=max_waves,
-            seed_r=seed_r, decoupled=decoupled, route_mult=route_mult,
-            wave_step=wave_step)
+        with current_tracer().span("engine.step", route="graph-sharded",
+                                   shards=num_shards, batch=len(batch_np)):
+            d, i, st = search_graph_sharded(
+                index, jnp.asarray(batch_np), num_shards=num_shards, k=k,
+                ef=ef, expand=expand, block_q=block_q, max_waves=max_waves,
+                seed_r=seed_r, decoupled=decoupled, route_mult=route_mult,
+                wave_step=wave_step)
         if with_stats:
             return np.asarray(d), np.asarray(i), st
         return np.asarray(d), np.asarray(i)

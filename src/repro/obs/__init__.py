@@ -1,0 +1,30 @@
+"""Telemetry: metrics registry, span tracer, Chrome-trace/JSON export.
+
+Three dependency-free layers (stdlib only; jax touched lazily in
+``Tracer.fence`` and ``provenance``):
+
+  * ``obs.metrics``  — counters / gauges / fixed-bucket histograms under
+    stable dotted names, with mergeable snapshots and bridges from the
+    engine stats families (``FusedScanStats`` etc.) to the four
+    accounting-regime counters.
+  * ``obs.trace``    — explicit begin/end spans with device fencing at
+    host wave boundaries; disabled mode is a module-level null tracer so
+    instrumented code carries no conditionals.
+  * ``obs.export``   — Perfetto-loadable Chrome-trace JSON, the
+    schema-versioned metrics envelope, and run provenance.
+
+Catalogue and worked examples: ``docs/OBSERVABILITY.md``.
+"""
+
+from repro.obs.metrics import (  # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry, merge_snapshots,
+    LATENCY_BUCKETS_MS, record_fused_scan, record_graph_scan,
+    record_graph_sharded, record_fused_serve_totals,
+)
+from repro.obs.trace import (  # noqa: F401
+    Tracer, NullTracer, NULL_TRACER, current_tracer, set_tracer, use_tracer,
+)
+from repro.obs.export import (  # noqa: F401
+    SCHEMA_VERSION, provenance, chrome_trace, write_chrome_trace,
+    metrics_envelope, write_metrics_json, span_totals,
+)
