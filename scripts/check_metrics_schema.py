@@ -14,7 +14,15 @@ snapshot to the engine stats the human-readable serve line prints:
     ``graph.sharded.shard<i>.fetched_bytes`` counters sum EXACTLY to
     ``dco.fetched.bytes`` (the serving engines run with threshold seeding
     off, so the summed ledger has no per-query seed term), and the
-    reported fetched-bytes-per-query figure reproduces the same total.
+    reported fetched-bytes-per-query figure reproduces the same total;
+  * request accounting: when the robustness counters are present,
+    ``serve.requests.submitted == serve.requests.served + Σ serve.shed.*``
+    (every request ends in exactly one terminal status) and the legacy
+    ``serve.requests`` counter equals the served count; shed counters
+    without a submitted counter are a wiring bug and fail;
+  * degraded-mode serving (``graph.sharded.degraded.requests`` present)
+    must also report its recall and recall delta gauges — a failover
+    without its measured cost is not observable.
 
 Pure stdlib (the point of the dependency-free obs layer: this runs in CI
 contexts with no jax).  Exit 1 on any violation, each named on one line.
@@ -82,6 +90,32 @@ def check(path: str) -> int:
             fails.append(
                 f"consistency: latency histogram count {lat['count']} != "
                 f"serve.requests {value('serve.requests')}")
+
+    shed_keys = ("serve.shed.queue", "serve.shed.deadline",
+                 "serve.shed.error")
+    submitted = value("serve.requests.submitted")
+    if submitted is not None:
+        served = value("serve.requests.served") or 0
+        shed = sum(value(k) or 0 for k in shed_keys)
+        if submitted != served + shed:
+            fails.append(
+                f"consistency: serve.requests.submitted={submitted} != "
+                f"served {served} + shed {shed}")
+        if value("serve.requests") != served:
+            fails.append(
+                f"consistency: legacy serve.requests "
+                f"{value('serve.requests')} != serve.requests.served "
+                f"{served}")
+    elif any(value(k) is not None for k in shed_keys):
+        fails.append("consistency: serve.shed.* present without "
+                     "serve.requests.submitted")
+
+    if value("graph.sharded.degraded.requests") is not None:
+        for g in ("graph.sharded.degraded.recall",
+                  "graph.sharded.degraded.recall_delta"):
+            if value(g) is None:
+                fails.append(f"consistency: degraded requests counted but "
+                             f"{g} gauge missing")
 
     shard_keys = sorted(
         k for k in metrics

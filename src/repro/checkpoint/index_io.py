@@ -1,0 +1,181 @@
+"""Warm-restart snapshots for built serving indexes (PR 7).
+
+A serving restart should not pay the index-build (graph construction is
+minutes at scale; estimator calibration adds more).  This module packs a
+:class:`~repro.index.graph.GraphIndex` — or a bare estimator for the flat
+route — into a :class:`~repro.checkpoint.manager.CheckpointManager` step
+and rebuilds it on load, template-free, via the named-artifact API.
+
+Safety properties (the reasons this is not just ``np.save``):
+
+  * every leaf carries a sha256 digest; a corrupted slab fails fast on
+    load with an ``IOError`` naming the leaf — the server falls back to a
+    rebuild instead of silently serving wrong neighbours;
+  * a JSON config echo (corpus size/dim, DCO method, quantization, graph
+    layout) is stored beside the arrays and compared on load — a snapshot
+    built under different settings is *rejected* (load returns ``None``,
+    caller rebuilds) rather than trusted;
+  * saves commit atomically (the manager's tmp-dir + rename), so a crash
+    mid-save never shadows a good snapshot with a torn one.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.calibration import EpsilonTable
+from repro.core.estimators import Estimator
+from repro.core.transforms import OrthogonalTransform
+from repro.index.graph import GraphIndex
+from repro.quant.scalar import QuantConfig
+
+__all__ = [
+    "save_graph_index",
+    "load_graph_index",
+    "save_estimator",
+    "load_estimator",
+]
+
+_STEP = 0  # single-snapshot layout: one logical "step" per directory
+
+
+# ---- estimator <-> flat arrays ------------------------------------------
+
+def _pack_estimator(est: Estimator, out: dict[str, Any],
+                    prefix: str = "est.") -> dict[str, Any]:
+    out[prefix + "basis"] = est.transform.basis
+    out[prefix + "variances"] = est.transform.variances
+    out[prefix + "cum_variances"] = est.transform.cum_variances
+    out[prefix + "dims"] = est.table.dims
+    out[prefix + "eps"] = est.table.eps
+    out[prefix + "scale"] = est.table.scale
+    out[prefix + "eps_lo"] = est.table.eps_lo
+    return {
+        "method": est.method,
+        "quant": None if est.quant is None
+        else {"bits": est.quant.bits, "slack": est.quant.slack},
+    }
+
+
+def _unpack_estimator(arrays: dict[str, np.ndarray], meta: dict,
+                      prefix: str = "est.") -> Estimator:
+    quant = meta.get("quant")
+    return Estimator(
+        method=meta["method"],
+        transform=OrthogonalTransform(
+            basis=jnp.asarray(arrays[prefix + "basis"]),
+            variances=jnp.asarray(arrays[prefix + "variances"]),
+            cum_variances=jnp.asarray(arrays[prefix + "cum_variances"]),
+        ),
+        table=EpsilonTable(
+            dims=jnp.asarray(arrays[prefix + "dims"]),
+            eps=jnp.asarray(arrays[prefix + "eps"]),
+            scale=jnp.asarray(arrays[prefix + "scale"]),
+            eps_lo=jnp.asarray(arrays[prefix + "eps_lo"]),
+        ),
+        quant=None if quant is None else QuantConfig(**quant),
+    )
+
+
+# ---- graph index ---------------------------------------------------------
+
+# Optional GraphIndex array fields (saved only when present; presence is
+# recorded in the config echo so load knows what to expect).
+_OPTIONAL = ("corpus_q", "qscales", "adj_rot", "adj_codes", "adj_ids",
+             "gscales")
+
+
+def save_graph_index(directory: str, index: GraphIndex, *,
+                     config: dict | None = None) -> None:
+    """Snapshot a built GraphIndex (+ its estimator) into ``directory``.
+
+    ``config`` is an arbitrary JSON-serializable build echo (corpus size,
+    ef, shard count ...); ``load_graph_index`` refuses snapshots whose
+    echo differs from the caller's expectation.
+    """
+    arrays: dict[str, Any] = {
+        "corpus_rot": index.corpus_rot,
+        "neighbors": index.neighbors,
+        "entry": index.entry,
+    }
+    est_meta = _pack_estimator(index.estimator, arrays)
+    present = []
+    for name in _OPTIONAL:
+        leaf = getattr(index, name)
+        if leaf is not None:
+            arrays[name] = leaf
+            present.append(name)
+    extra = {
+        "kind": "graph_index",
+        "estimator": est_meta,
+        "optional": present,
+        "adj_block": index.adj_block,
+        "scan_block_d": index.scan_block_d,
+        "config": config or {},
+    }
+    mgr = CheckpointManager(directory, keep=1, async_save=False)
+    mgr.save_named(_STEP, arrays, extra=extra)
+
+
+def load_graph_index(directory: str, *,
+                     expect_config: dict | None = None) -> GraphIndex | None:
+    """Rebuild a GraphIndex from ``directory``, or ``None`` to rebuild.
+
+    Returns ``None`` when no snapshot exists or when its config echo does
+    not match ``expect_config`` (stale snapshot — build settings changed).
+    Digest failures are NOT swallowed: a corrupt slab raises ``IOError``
+    naming the leaf, and the caller decides (the server logs the fault,
+    counts ``serve.fault.slab_corruption``, and rebuilds).
+    """
+    mgr = CheckpointManager(directory, keep=1, async_save=False)
+    if mgr.latest_step() is None:
+        return None
+    arrays, extra = mgr.restore_named(_STEP)
+    if extra.get("kind") != "graph_index":
+        return None
+    if expect_config is not None and extra.get("config") != expect_config:
+        return None
+    est = _unpack_estimator(arrays, extra["estimator"])
+    opt = {name: (jnp.asarray(arrays[name])
+                  if name in extra.get("optional", []) else None)
+           for name in _OPTIONAL}
+    return GraphIndex(
+        estimator=est,
+        corpus_rot=jnp.asarray(arrays["corpus_rot"]),
+        neighbors=jnp.asarray(arrays["neighbors"]),
+        entry=jnp.asarray(arrays["entry"]),
+        adj_block=int(extra.get("adj_block", 0)),
+        scan_block_d=int(extra.get("scan_block_d", 0)),
+        **opt,
+    )
+
+
+# ---- bare estimator (flat route) ----------------------------------------
+
+def save_estimator(directory: str, est: Estimator, *,
+                   config: dict | None = None) -> None:
+    """Snapshot a calibrated estimator (flat-route warm restart)."""
+    arrays: dict[str, Any] = {}
+    est_meta = _pack_estimator(est, arrays)
+    extra = {"kind": "estimator", "estimator": est_meta,
+             "config": config or {}}
+    mgr = CheckpointManager(directory, keep=1, async_save=False)
+    mgr.save_named(_STEP, arrays, extra=extra)
+
+
+def load_estimator(directory: str, *,
+                   expect_config: dict | None = None) -> Estimator | None:
+    """Load a snapshotted estimator, or ``None`` (absent / config drift)."""
+    mgr = CheckpointManager(directory, keep=1, async_save=False)
+    if mgr.latest_step() is None:
+        return None
+    arrays, extra = mgr.restore_named(_STEP)
+    if extra.get("kind") != "estimator":
+        return None
+    if expect_config is not None and extra.get("config") != expect_config:
+        return None
+    return _unpack_estimator(arrays, extra["estimator"])

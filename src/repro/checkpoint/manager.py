@@ -79,7 +79,8 @@ class CheckpointManager:
             finally:
                 self._q.task_done()
 
-    def _write(self, step: int, host_tree: Any) -> None:
+    def _write(self, step: int, host_tree: Any,
+               extra: dict | None = None) -> None:
         name = f"step_{step:09d}"
         tmp = os.path.join(self.dir, name + ".tmp")
         final = os.path.join(self.dir, name)
@@ -93,6 +94,8 @@ class CheckpointManager:
             "paths": _tree_paths(host_tree),
             "leaves": [],
         }
+        if extra:
+            meta["extra"] = extra
         for i, leaf in enumerate(leaves):
             arr = np.asarray(leaf)
             fn = os.path.join(tmp, f"leaf_{i:05d}.npy")
@@ -160,10 +163,61 @@ class CheckpointManager:
             if verify:
                 digest = hashlib.sha256(arr.tobytes()).hexdigest()
                 if digest != lm["sha256"]:
-                    raise IOError(f"leaf {i} digest mismatch (corrupt checkpoint)")
+                    where = meta["paths"][i] if i < len(meta.get("paths", [])) \
+                        else str(i)
+                    raise IOError(
+                        f"checkpoint leaf {i} ({where}): digest mismatch "
+                        f"(corrupt checkpoint)")
             if list(arr.shape) != list(np.shape(tmpl)):
                 raise ValueError(
                     f"leaf {i}: ckpt shape {arr.shape} != template {np.shape(tmpl)}")
             sh = shard_leaves[i]
             out.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
         return jax.tree.unflatten(treedef, out)
+
+    # ---- named artifacts (template-free restore) -------------------------
+
+    def save_named(self, step: int, arrays: dict[str, Any], *,
+                   extra: dict | None = None) -> None:
+        """Save a flat ``{name: array}`` dict, synchronously.
+
+        The leaf names travel in the step's metadata, so ``restore_named``
+        needs no template tree — the consumer that rebuilds the object
+        (e.g. a warm-restarted server) may not have one yet.  ``extra``
+        carries small JSON-serializable config alongside (compared on load
+        to reject stale snapshots).
+        """
+        host = {k: np.asarray(jax.device_get(v)) for k, v in arrays.items()}
+        meta = dict(extra or {})
+        # jax flattens dicts in sorted-key order; record it so restore can
+        # re-associate leaf files with names without a template.
+        meta["names"] = sorted(host)
+        self._write(step, host, extra=meta)
+
+    def restore_named(self, step: int, *,
+                      verify: bool = True) -> tuple[dict[str, np.ndarray], dict]:
+        """Load a ``save_named`` step -> ``(arrays, extra)``, template-free.
+
+        Digest verification failures raise ``IOError`` naming the corrupt
+        leaf, so an operator (or the chaos drill) sees *which* slab is bad.
+        """
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "tree.json")) as f:
+            meta = json.load(f)
+        extra = dict(meta.get("extra", {}))
+        names = extra.pop("names", None)
+        if names is None or len(names) != len(meta["leaves"]):
+            raise ValueError(
+                f"step {step} was not written by save_named "
+                f"(names metadata missing or inconsistent)")
+        out = {}
+        for i, (name, lm) in enumerate(zip(names, meta["leaves"])):
+            arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+            if verify:
+                digest = hashlib.sha256(arr.tobytes()).hexdigest()
+                if digest != lm["sha256"]:
+                    raise IOError(
+                        f"checkpoint leaf {i} ({name}): digest mismatch "
+                        f"(corrupt checkpoint)")
+            out[name] = arr
+        return out, extra

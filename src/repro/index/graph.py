@@ -67,8 +67,10 @@ from repro.kernels.ops import (
     fused_fetch_totals,
     graph_scan_kernel,
     graph_vis_words,
+    pack_vis_ranges,
     unpack_vis,
 )
+from repro.runtime.chaos import current_chaos
 from repro.quant.accounting import (
     ID_BYTES,
     fetched_tile_bytes,
@@ -89,7 +91,8 @@ from repro.quant.screen import two_stage_screen
 __all__ = ["GraphIndex", "build_graph", "search_graph",
            "search_graph_fused", "search_graph_beam_host", "GraphScanStats",
            "search_graph_sharded", "GraphShardedStats",
-           "merge_shard_windows", "shard_graph_nodes"]
+           "merge_shard_windows", "shard_graph_nodes",
+           "dead_shard_tombstones"]
 
 _SENTINEL = 1e18
 
@@ -611,11 +614,33 @@ def _select_wave(top_sq, top_ids, expanded, route_sq, *, q_tiles, block_q,
     return picked
 
 
+def _surviving_entry(index: GraphIndex, tombstones) -> int:
+    """Deterministic fallback entry point when the builder's medoid falls
+    in a tombstoned (dead-shard) node range: the node nearest the mean of
+    the SURVIVING corpus — the same medoid rule the builder used, restated
+    over the nodes that can still be expanded.  Pure numpy on shared state,
+    so the degraded engine and the degraded single-host oracle compute the
+    identical entry (bit-identity of the failover walk depends on it)."""
+    rot = np.asarray(index.corpus_rot)
+    alive = np.ones((rot.shape[0],), bool)
+    for b, c in tombstones:
+        alive[int(b): int(b) + int(c)] = False
+    if not alive.any():
+        raise ValueError(
+            "every node is tombstoned — no surviving shard to serve from")
+    centre = rot[alive].mean(axis=0)
+    d = np.sum((rot - centre[None, :]) ** 2, axis=1)
+    d[~alive] = np.inf
+    return int(np.argmin(d))
+
+
 def _prep_wave_state(index: GraphIndex, queries: jax.Array, *, k: int,
-                     ef: int, block_q: int, seed_r: bool):
+                     ef: int, block_q: int, seed_r: bool, tombstones=()):
     """Shared prologue of the single-host and sharded beam drivers: rotate
-    and tile-sort the queries, seed the window with the entry point, and
-    (optionally) the threshold floor.  Returns everything host-side."""
+    and tile-sort the queries, seed the window with the entry point (or,
+    when ``tombstones`` cover the builder's entry, the deterministic
+    surviving-corpus fallback), and (optionally) the threshold floor.
+    Returns everything host-side."""
     est = index.estimator
     q = queries.astype(jnp.float32)
     q_rot = est.rotate(q)
@@ -632,6 +657,8 @@ def _prep_wave_state(index: GraphIndex, queries: jax.Array, *, k: int,
     q_sorted = np.pad(q_sorted, ((0, q_pad - qn), (0, 0)))
 
     entry = int(index.entry)
+    if tombstones and any(b <= entry < b + c for b, c in tombstones):
+        entry = _surviving_entry(index, tombstones)
     d_entry = np.asarray(jnp.sum(
         (index.corpus_rot[entry][None, :] - q_sorted[:qn]) ** 2, axis=1))
     top_sq = np.full((q_pad, ef), np.inf, np.float32)
@@ -667,11 +694,24 @@ def _run_wave_loop(
     interpret: bool | None,
     use_ref: bool,
     wave_step=None,
+    tombstones=(),
 ):
     """THE wave driver — every beam engine (single-replica fused/host,
     host-simulated sharded, mesh-backed sharded) runs this one loop, so
     frontier selection, wave accounting, and state carry cannot drift
     between engines.
+
+    ``tombstones`` ((base, count) node ranges, normally a dead shard's
+    range from ``dead_shard_tombstones``) switches the walk to degraded
+    mode: the ranges' bits are pre-set in the visited bitmap — the same
+    packed bitmap the kernel marks expansions into — so frontier selection
+    treats every dead node as already expanded and the walk never touches
+    a dead shard's adjacency (its frontier offsets stay -1; a dead device
+    in the mesh path contributes only its carried-in window, the merge
+    identity).  Because the tombstones are wave-0 state and frozen-wave
+    schedules are shard-count-invariant, a degraded S-shard run is
+    bit-identical to the single-host oracle with the same tombstones —
+    the provable failover contract.
 
     Host-side numpy orchestration: frontier selection and wave-count
     bookkeeping; everything per-candidate — screening, beam maintenance,
@@ -696,6 +736,12 @@ def _run_wave_loop(
             "batched beam scan needs build_graph(..., quant='int8')")
     if not 1 <= k <= ef:
         raise ValueError(f"need 1 <= k <= ef, got k={k} ef={ef}")
+    tombstones = tuple((int(b), int(c)) for b, c in tombstones)
+    if tombstones and seed_r:
+        raise ValueError(
+            "degraded-mode search (tombstones) does not support seed_r "
+            "threshold seeding: the seed reads the builder entry's "
+            "neighbourhood, which a dead shard may own")
     thresh_col = (k - 1) if decoupled else (ef - 1)
     est = index.estimator
     n = index.corpus_rot.shape[0]
@@ -703,13 +749,18 @@ def _run_wave_loop(
     a_block = index.adj_block
     inv, q_sorted, q_tiles, q_pad, qn, entry, top_sq, top_ids, seed_vec = \
         _prep_wave_state(index, queries, k=k, ef=ef, block_q=block_q,
-                         seed_r=seed_r)
+                         seed_r=seed_r, tombstones=tombstones)
 
     # The expansion mask lives ON DEVICE: a packed per-query-tile bitmap
     # carried through the kernel like the beam window.  The host reads it
-    # back for frontier selection but never writes a mark.
+    # back for frontier selection but never writes a mark.  Tombstoned
+    # (dead-shard) nodes are pre-visited here — wave-0 state, which the
+    # kernel's OR-marking carries untouched.
     words = graph_vis_words(n)
     vis = np.zeros((q_tiles, words), np.int32)
+    if tombstones:
+        vis |= pack_vis_ranges(n, tombstones)[None, :]
+    chaos = current_chaos()  # NULL_CHAOS: every on_wave below is a no-op
     if wave_step is None:
         if num_shards == 1:
             slabs = [(index.adj_rot, index.adj_codes, index.adj_ids)]
@@ -736,6 +787,7 @@ def _run_wave_loop(
     d_pad = index.adj_rot.shape[1]
     fp_bytes = jnp.dtype(index.adj_rot.dtype).itemsize
     while waves < max_waves:
+        chaos.on_wave(waves)  # injected shard-stall latency (chaos drills)
         with tr.span("graph.wave", wave=waves, num_shards=num_shards) as wsp:
             with tr.span("graph.route"):
                 r0 = np.minimum(seed_vec, top_sq[:, thresh_col])
@@ -1008,6 +1060,24 @@ def shard_graph_nodes(n: int, num_shards: int):
     return [(s * per, per) for s in range(num_shards)]
 
 
+def dead_shard_tombstones(n: int, num_shards: int, dead) -> tuple:
+    """(base, count) node ranges of the dead shards — what a failover run
+    passes as ``search_graph_sharded(tombstones=...)``.  ``dead`` is an
+    iterable of shard indices under the ``shard_graph_nodes(n, num_shards)``
+    split; fails fast naming an out-of-range shard.  The ranges are
+    shard-count-independent node spans, so the SAME tombstones drive both
+    the degraded S-shard engine and its ``num_shards=1`` surviving-corpus
+    oracle."""
+    ranges = shard_graph_nodes(n, num_shards)
+    out = []
+    for s in sorted({int(d) for d in dead}):
+        if not 0 <= s < num_shards:
+            raise ValueError(
+                f"dead shard {s} out of range for num_shards={num_shards}")
+        out.append(ranges[s])
+    return tuple(out)
+
+
 def merge_shard_windows(g_sq: jax.Array, g_ids: jax.Array, *, ef: int):
     """Cross-shard beam-window merge: (S, Q, EF) per-shard windows ->
     (Q, EF) global window, the EF best *distinct* ids by distance.
@@ -1093,6 +1163,10 @@ class GraphShardedStats(NamedTuple):
     s2_skip_rate: float  # fetch elision over all shards
     exchange_bytes_per_wave: float  # cross-shard frontier traffic / wave
     exchange_bytes_per_query: float  # total exchange / query
+    # Degraded-mode (shard failover) accounting; zero / empty on a healthy
+    # run so pre-PR consumers of this tuple see identical leading fields.
+    tombstoned_nodes: float = 0.0  # nodes pre-visited by failover tombstones
+    dead_shards: tuple = ()  # this run's shards fully covered by tombstones
 
 
 def _beam_scan_sharded(
@@ -1111,6 +1185,7 @@ def _beam_scan_sharded(
     interpret: bool | None,
     use_ref: bool,
     wave_step=None,
+    tombstones=(),
 ):
     """The corpus-sharded engines: the shared wave loop
     (``_run_wave_loop`` with the wave-start threshold FROZEN —
@@ -1125,7 +1200,8 @@ def _beam_scan_sharded(
         index, queries, k=k, ef=ef, expand=expand, block_q=block_q,
         max_waves=max_waves, seed_r=seed_r, decoupled=decoupled,
         route_mult=route_mult, num_shards=num_shards, tighten=False,
-        interpret=interpret, use_ref=use_ref, wave_step=wave_step)
+        interpret=interpret, use_ref=use_ref, wave_step=wave_step,
+        tombstones=tombstones)
     qn = acc["qn"]
     sem = acc["sem"]
     waves = acc["waves"]
@@ -1151,6 +1227,17 @@ def _beam_scan_sharded(
              + s2_fetched_b) / qn)
     skip = (1.0 - float(s2_slabs.sum()) / s2_total_all) if s2_total_all \
         else 0.0
+    tomb_nodes = 0
+    dead = ()
+    if tombstones:
+        n = index.corpus_rot.shape[0]
+        alive = np.ones((n,), bool)
+        for b, c in tombstones:
+            alive[int(b): int(b) + int(c)] = False
+        tomb_nodes = int((~alive).sum())
+        ranges = shard_graph_nodes(n, num_shards)
+        dead = tuple(s for s, (b, c) in enumerate(ranges)
+                     if not alive[b: b + c].any())
     stats = GraphShardedStats(
         waves=float(waves),
         num_shards=num_shards,
@@ -1165,6 +1252,8 @@ def _beam_scan_sharded(
         s2_skip_rate=skip,
         exchange_bytes_per_wave=exch_bytes / max(waves, 1),
         exchange_bytes_per_query=exch_bytes / qn,
+        tombstoned_nodes=float(tomb_nodes),
+        dead_shards=dead,
     )
     return jnp.asarray(dists), jnp.asarray(ids), stats
 
@@ -1185,6 +1274,7 @@ def search_graph_sharded(
     interpret: bool | None = None,
     use_ref: bool = False,
     wave_step=None,
+    tombstones=(),
 ):
     """Corpus-sharded batched graph search: the global walk split over
     ``num_shards`` contiguous node ranges with cross-shard frontier
@@ -1205,10 +1295,26 @@ def search_graph_sharded(
     commutativity; the per-shard fetch ledgers and the exchange ledger in
     ``GraphShardedStats`` price both sides.
 
-    Returns (dists (Q, K), ids (Q, K), GraphShardedStats).
+    Degraded mode (shard failover): ``tombstones`` — (base, count) node
+    ranges, normally ``dead_shard_tombstones(n, S, dead)`` — pre-visits
+    the dead shards' nodes in the packed visited bitmap, so surviving
+    shards keep serving the walk over the remaining corpus.  The same
+    shard-count-invariance argument applies with the tombstones held
+    fixed: a degraded S-shard run is bit-identical to
+    ``num_shards=1, use_ref=True`` with the SAME tombstones (the
+    surviving-corpus oracle, the failover acceptance comparator).  Dead
+    nodes are never expanded — their adjacency is lost with the shard —
+    but may still be *admitted* to result windows through neighbour-row
+    replicas stored in surviving shards' adjacency slabs (that data is
+    genuinely available; docs/SERVING.md §6 discusses the semantics).
+    ``seed_r`` is rejected with tombstones (the seed reads the builder
+    entry's neighbourhood, which may be dead).
+
+    Returns (dists (Q, K), ids (Q, K), GraphShardedStats) — degraded runs
+    carry ``tombstoned_nodes`` and ``dead_shards`` in the stats.
     """
     return _beam_scan_sharded(
         index, queries, k=k, ef=ef, expand=expand, block_q=block_q,
         max_waves=max_waves, seed_r=seed_r, decoupled=decoupled,
         route_mult=route_mult, num_shards=num_shards, interpret=interpret,
-        use_ref=use_ref, wave_step=wave_step)
+        use_ref=use_ref, wave_step=wave_step, tombstones=tombstones)

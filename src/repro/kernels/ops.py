@@ -80,6 +80,27 @@ def unpack_vis(vis, n_nodes: int):
     return bits.reshape(vis.shape[0], -1)[:, :n_nodes].astype(bool)
 
 
+def pack_vis_ranges(n_nodes: int, ranges) -> np.ndarray:
+    """(W,) packed int32 bitmap with every node in ``ranges`` (an iterable
+    of (base, count) node ranges) set — the tombstone mask of degraded-mode
+    serving.  OR-ing it into a wave state's visited bitmap makes those
+    nodes "pre-visited": frontier selection never proposes them, so the
+    kernel never expands a dead shard's adjacency.  Bit layout matches
+    ``unpack_vis`` (bit ``v % 32`` of word ``v // 32``); the kernel's own
+    OR-marking composes with pre-set bits unchanged."""
+    words = np.zeros((graph_vis_words(n_nodes),), np.uint32)
+    for b, c in ranges:
+        b, c = int(b), int(c)
+        if c < 0 or b < 0 or b + c > n_nodes:
+            raise ValueError(
+                f"tombstone range [{b}, {b + c}) outside corpus "
+                f"[0, {n_nodes})")
+        v = np.arange(b, b + c)
+        np.bitwise_or.at(words, v // 32,
+                         np.uint32(1) << (v % 32).astype(np.uint32))
+    return words.view(np.int32)
+
+
 def fused_fetch_totals(stats, block_q: int):
     """(s1_tiles_fetched, s2_slabs_fetched) totals from fused-scan stats.
 

@@ -137,6 +137,18 @@ def build_sharded_graph_engine(index, mesh, *, k: int, ef: int = 48,
     ``shard_map`` construction route through the ``launch.mesh`` /
     ``kernels._compat`` version shims.
 
+    Failover: every ``step`` call consults the chaos harness
+    (``runtime.chaos.current_chaos()`` — the null object when no drill is
+    armed, so the healthy path is branch-free and bit-identical to pre-PR
+    behaviour).  Shards reported dead get their node ranges tombstoned via
+    ``search_graph_sharded(tombstones=...)``: the dead device still sits in
+    the ``shard_map`` step (the wave is a collective — a real deployment
+    would re-mesh; this simulation keeps the mesh and starves the shard)
+    but its frontier offsets are all -1, so it screens nothing and
+    contributes only the carried-in window, the merge identity.  Surviving
+    shards keep serving, bit-identical to the surviving-corpus oracle
+    (``num_shards=1, use_ref=True`` with the same tombstones).
+
     Fails fast, naming the offending value, on a multi-axis mesh or a node
     count the mesh size does not divide.  Returns
     ``step(batch_np) -> (dists, ids[, GraphShardedStats])``.
@@ -144,9 +156,11 @@ def build_sharded_graph_engine(index, mesh, *, k: int, ef: int = 48,
     import numpy as np
 
     from repro.index.graph import (
-        merge_shard_windows, search_graph_sharded, shard_graph_nodes,
+        dead_shard_tombstones, merge_shard_windows, search_graph_sharded,
+        shard_graph_nodes,
     )
     from repro.kernels.ops import graph_scan_kernel, min_block_q, on_tpu
+    from repro.runtime.chaos import current_chaos
 
     axes = tuple(mesh.axis_names)
     if len(axes) != 1:
@@ -212,13 +226,16 @@ def build_sharded_graph_engine(index, mesh, *, k: int, ef: int = 48,
             jnp.asarray(vis), adj_rot, adj_codes, adj_ids)
 
     def step(batch_np):
+        dead = current_chaos().dead_shards(num_shards)
+        tombs = dead_shard_tombstones(n, num_shards, dead) if dead else ()
         with current_tracer().span("engine.step", route="graph-sharded",
-                                   shards=num_shards, batch=len(batch_np)):
+                                   shards=num_shards, batch=len(batch_np),
+                                   dead_shards=len(dead)):
             d, i, st = search_graph_sharded(
                 index, jnp.asarray(batch_np), num_shards=num_shards, k=k,
                 ef=ef, expand=expand, block_q=block_q, max_waves=max_waves,
                 seed_r=seed_r, decoupled=decoupled, route_mult=route_mult,
-                wave_step=wave_step)
+                wave_step=wave_step, tombstones=tombs)
         if with_stats:
             return np.asarray(d), np.asarray(i), st
         return np.asarray(d), np.asarray(i)

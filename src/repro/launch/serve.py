@@ -17,6 +17,16 @@ load from the closed-loop batch (submit everything, one forced drain) to
 Poisson arrivals at RATE req/s with per-request latency percentiles.  The
 first compiled step is excluded from every timed window by a warm-up
 request; its cost is reported separately as ``compile_ms``.
+
+Robustness (``repro.runtime.chaos``): ``--chaos SPEC`` arms fault-injection
+drills (shard death with degraded-mode failover, wave stalls, step errors,
+queue overload, snapshot corruption); ``--deadline-ms`` / ``--queue-watermark``
+/ ``--retries`` bound latency via load shedding and bounded retry
+(``serve.shed.*`` counters; ``submitted == served + shed`` always);
+``--index-ckpt DIR`` warm-restarts the built index from a digest-verified
+snapshot; ``--verify-degraded-oracle`` asserts a post-failover engine is
+bit-identical to the surviving-corpus oracle.  docs/SERVING.md §6 is the
+degraded-mode runbook.
 """
 
 import argparse
@@ -86,6 +96,39 @@ def main() -> None:
                          "to PATH (per-wave stage spans with byte "
                          "attributions; adds block_until_ready fences at "
                          "span boundaries — leave unset for peak QPS)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="arm a fault-injection drill (repro.runtime.chaos): "
+                         "';'-joined kind[:key=val]* tokens, e.g. "
+                         "'shard_death:shard=1:after=2' kills shard 1 after "
+                         "two healthy batches and the sharded graph engine "
+                         "keeps serving in degraded mode (docs/SERVING.md §6)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request latency budget: requests still queued "
+                         "past it are shed (serve.shed.deadline) instead of "
+                         "dispatched; served requests that exceeded it count "
+                         "serve.deadline.missed (0 = no deadline)")
+    ap.add_argument("--queue-watermark", type=int, default=0, metavar="ROWS",
+                    help="queue-depth watermark in query rows: submits that "
+                         "would exceed it are shed at the door "
+                         "(serve.shed.queue; 0 = unbounded)")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="bounded retries per engine batch (exponential "
+                         "backoff); exhausted retries shed the batch "
+                         "(serve.shed.error) and serving continues")
+    ap.add_argument("--retry-backoff-ms", type=float, default=20.0,
+                    help="first-retry backoff (doubles per attempt)")
+    ap.add_argument("--index-ckpt", default=None, metavar="DIR",
+                    help="warm-restart snapshot dir: restore the built index "
+                         "(graph route: graph + estimator; flat route: "
+                         "estimator) from DIR instead of rebuilding, or "
+                         "build once and save there; per-leaf sha256 digests "
+                         "reject corrupted slabs and fall back to a rebuild")
+    ap.add_argument("--verify-degraded-oracle", action="store_true",
+                    help="after a --chaos shard_death drill on the sharded "
+                         "graph route, assert the degraded engine returns "
+                         "bit-identical ids to the surviving-corpus oracle "
+                         "(single-shard reference walk with the same "
+                         "tombstones; exits nonzero on mismatch)")
     args = ap.parse_args()
 
     os.environ.setdefault(
@@ -120,13 +163,11 @@ def main() -> None:
 
     n = n_dev * svc.corpus_per_device
     corpus = synthetic_vectors(n, svc.dim, seed=0)
-    est = build_estimator(args.method, corpus[:50000], jax.random.PRNGKey(0),
-                          p_s=svc.p_s, delta_d=svc.delta_d)
-    eps, scale, d_pad, eps_lo = block_table(est.table, svc.dim, svc.delta_d)
-    c_rot = np.pad(np.asarray(est.rotate(jnp.asarray(corpus))),
-                   ((0, 0), (0, d_pad - svc.dim)))
 
     from repro.kernels.ops import on_tpu
+    from repro.runtime.chaos import (corrupt_checkpoint_leaf, current_chaos,
+                                     parse_chaos, set_chaos)
+    from repro.runtime.scheduler import BatchScheduler
 
     # Telemetry: the registry always collects (writing is opt-in); the
     # tracer is installed only under --trace so the default serving path
@@ -134,15 +175,115 @@ def main() -> None:
     reg = MetricsRegistry()
     tracer = Tracer(tool="serve", index=args.index) if args.trace else None
     set_tracer(tracer)
+
+    # Chaos: same null-object pattern — with no --chaos the module-level
+    # NULL_CHAOS stays installed and every hook in the scheduler and the
+    # wave loops is a no-op, so results are bit-identical to a drill-free
+    # build.
+    chaos = parse_chaos(args.chaos, registry=reg) if args.chaos else None
+    set_chaos(chaos)
+    if chaos is not None:
+        print("chaos: armed " + "; ".join(
+            s.kind + (f"(shard={s.shard})" if s.shard >= 0 else "")
+            for s in chaos.specs))
+    if args.deadline_ms:
+        reg.gauge("serve.deadline.budget_ms").set(args.deadline_ms)
+
+    def maybe_corrupt_snapshot(directory: str) -> None:
+        """slab_corruption drill: flip one byte of a committed snapshot
+        leaf (only when one exists) so the restore-time digest MUST catch
+        it — proving the integrity check, not assuming it."""
+        step_dir = os.path.join(directory, f"step_{0:09d}")
+        if not os.path.isdir(step_dir):
+            return
+        spec = current_chaos().take_corruption()
+        if spec is not None:
+            path = corrupt_checkpoint_leaf(step_dir, leaf=spec.leaf)
+            print(f"chaos: corrupted snapshot leaf {spec.leaf} ({path})")
+
+    # Estimator: the flat route can warm-restart it from --index-ckpt (the
+    # graph route snapshots the whole index, estimator included, below).
+    est = None
+    est_cfg = {"corpus": n, "dim": svc.dim, "method": args.method,
+               "p_s": svc.p_s, "delta_d": svc.delta_d}
+    if args.index == "flat" and args.index_ckpt:
+        from repro.checkpoint.index_io import load_estimator, save_estimator
+
+        maybe_corrupt_snapshot(args.index_ckpt)
+        try:
+            est = load_estimator(args.index_ckpt, expect_config=est_cfg)
+        except IOError as e:
+            print(f"index-ckpt: {e}; recalibrating")
+        if est is not None:
+            reg.counter("serve.ckpt.restored").add(1)
+            print(f"index-ckpt: restored estimator from {args.index_ckpt}")
+    if est is None:
+        est = build_estimator(args.method, corpus[:50000],
+                              jax.random.PRNGKey(0),
+                              p_s=svc.p_s, delta_d=svc.delta_d)
+        if args.index == "flat" and args.index_ckpt:
+            save_estimator(args.index_ckpt, est, config=est_cfg)
+            reg.counter("serve.ckpt.saved").add(1)
+            print(f"index-ckpt: saved estimator to {args.index_ckpt}")
+    eps, scale, d_pad, eps_lo = block_table(est.table, svc.dim, svc.delta_d)
+    c_rot = np.pad(np.asarray(est.rotate(jnp.asarray(corpus))),
+                   ((0, 0), (0, d_pad - svc.dim)))
+
     config_echo = {k.replace("-", "_"): v for k, v in vars(args).items()}
     config_echo.update(devices=n_dev, corpus=n, d_pad=d_pad)
 
-    def request_recalls(reqs, gts):
-        """Mean recall@k per drained request vs its exact ground truth."""
+    def request_recalls(pairs):
+        """Mean recall@k per SERVED request vs its exact ground truth
+        (``pairs`` is [(request, gt), ...] — shed requests have no result
+        and never enter a recall figure)."""
         return [
             np.mean([len(set(req.result[1][i]) & set(gt[i])) / svc.k
                      for i in range(len(gt))])
-            for req, gt in zip(reqs, gts)]
+            for req, gt in pairs]
+
+    def serve_accounting(sched, reqs, gts):
+        """Split the run into served/shed, book the legacy counters, and
+        enforce the terminal-status invariant: every submitted request is
+        exactly one of served / shed_queue / shed_deadline / shed_error
+        (the metrics schema check re-asserts this on the snapshot)."""
+        served = [(r, g) for r, g in zip(reqs, gts) if r.status == "served"]
+        shed = sum(sched.stats[k] for k in
+                   ("shed_queue", "shed_deadline", "shed_error"))
+        assert sched.stats["submitted"] == sched.stats["served"] + shed, \
+            sched.stats
+        assert all(r.result is not None for r, _ in served)
+        # Legacy counters keep their pre-PR meaning (completed work), so
+        # the latency-histogram-count == serve.requests check stays valid.
+        reg.counter("serve.requests").add(len(served))
+        reg.counter("serve.queries").add(sum(len(g) for _, g in served))
+        return served, shed
+
+    def shed_note(sched) -> str:
+        s = sched.stats
+        if not any(s[k] for k in ("shed_queue", "shed_deadline",
+                                  "shed_error", "retries")):
+            return ""
+        return (f" shed(queue={s['shed_queue']} deadline={s['shed_deadline']}"
+                f" error={s['shed_error']}) retries={s['retries']}")
+
+    def degraded_split(served) -> tuple[str, dict]:
+        """Recall split between healthy and degraded (dead-shard) batches:
+        the recall delta IS the cost of failover, measured on this run's
+        own traffic rather than asserted."""
+        deg = [(r, g) for r, g in served if r.degraded]
+        if not deg:
+            return "", {}
+        healthy = [(r, g) for r, g in served if not r.degraded]
+        dr = float(np.mean(request_recalls(deg)))
+        delta = (float(np.mean(request_recalls(healthy))) - dr
+                 if healthy else 0.0)
+        reg.counter("graph.sharded.degraded.requests").add(len(deg))
+        reg.gauge("graph.sharded.degraded.recall").set(dr)
+        reg.gauge("graph.sharded.degraded.recall_delta").set(delta)
+        note = (f" degraded(requests={len(deg)} recall={dr:.3f}"
+                f" delta={delta:+.3f})")
+        return note, {"degraded_requests": len(deg), "degraded_recall": dr,
+                      "degraded_recall_delta": delta}
 
     def warmup(step_fn, queries_np) -> float:
         """Run ONE engine step outside every timed window and return its
@@ -169,6 +310,7 @@ def main() -> None:
         """
         lat = reg.histogram("serve.request.latency_ms")
         reqs, gts, lat_ms = [], [], []
+        deadline_s = args.deadline_ms / 1e3 if args.deadline_ms else None
 
         def collect(done):
             t_done = time.perf_counter()
@@ -176,6 +318,11 @@ def main() -> None:
                 ms = (t_done - req.enqueued_at) * 1e3
                 lat.observe(ms)
                 lat_ms.append(ms)
+                # Served but late: the answer arrived past its budget (the
+                # request was already dispatched when the budget expired —
+                # shedding it mid-engine would waste the batch).
+                if req.deadline_at is not None and t_done > req.deadline_at:
+                    reg.counter("serve.deadline.missed").add(1)
 
         t0 = time.perf_counter()
         with current_tracer().span("serve.drive",
@@ -189,13 +336,13 @@ def main() -> None:
                     now = time.perf_counter()
                     if t_next > now:
                         time.sleep(t_next - now)
-                    reqs.append(sched.submit(q))
+                    reqs.append(sched.submit(q, deadline_s=deadline_s))
                     gts.append(gt)
                     collect(sched.drain(force=False))
                 collect(sched.drain(force=True))
             else:
                 for q, gt in payloads:
-                    reqs.append(sched.submit(q))
+                    reqs.append(sched.submit(q, deadline_s=deadline_s))
                     gts.append(gt)
                 collect(sched.drain(force=True))
         dt = time.perf_counter() - t0
@@ -226,6 +373,15 @@ def main() -> None:
             print(f"trace: wrote {args.trace} "
                   f"({len(tracer.events)} events)")
         set_tracer(None)
+        set_chaos(None)
+
+    def make_scheduler(step_fn) -> BatchScheduler:
+        return BatchScheduler(
+            step_fn, batch_size=svc.query_batch,
+            max_queue_rows=args.queue_watermark,
+            max_retries=args.retries,
+            retry_backoff_s=args.retry_backoff_ms / 1e3,
+            registry=reg)
 
     def make_payloads(prep):
         """Precompute every request's queries + exact ground truth BEFORE
@@ -252,11 +408,38 @@ def main() -> None:
         from repro.index.graph import build_graph
         from repro.launch.annservice import (
             build_graph_engine, build_sharded_graph_engine)
-        from repro.runtime.scheduler import BatchScheduler
 
-        gidx = build_graph(corpus, estimator=est, m=16,
-                           ef_construction=max(2 * args.ef, 64),
-                           quant="int8")
+        # Warm-restart: the built graph (adjacency slabs, int8 codes +
+        # scales, the DADE transform riding in the estimator) snapshots
+        # into --index-ckpt; a restart restores it instead of paying the
+        # O(N·ef·M) rebuild.  Digest failure (slab rot) or config drift
+        # falls back to the rebuild — never to serving a bad slab.
+        gidx = None
+        graph_cfg = {"corpus": n, "dim": svc.dim, "method": args.method,
+                     "m": 16, "ef_construction": max(2 * args.ef, 64),
+                     "quant": "int8"}
+        if args.index_ckpt:
+            from repro.checkpoint.index_io import (
+                load_graph_index, save_graph_index)
+
+            maybe_corrupt_snapshot(args.index_ckpt)
+            try:
+                gidx = load_graph_index(args.index_ckpt,
+                                        expect_config=graph_cfg)
+            except IOError as e:
+                print(f"index-ckpt: {e}; falling back to rebuild")
+            if gidx is not None:
+                reg.counter("serve.ckpt.restored").add(1)
+                print(f"index-ckpt: restored graph index from "
+                      f"{args.index_ckpt}")
+        if gidx is None:
+            gidx = build_graph(corpus, estimator=est, m=16,
+                               ef_construction=max(2 * args.ef, 64),
+                               quant="int8")
+            if args.index_ckpt:
+                save_graph_index(args.index_ckpt, gidx, config=graph_cfg)
+                reg.counter("serve.ckpt.saved").add(1)
+                print(f"index-ckpt: saved graph index to {args.index_ckpt}")
         from repro.kernels.ops import min_block_q
 
         bq = min_block_q(jnp.int8) if on_tpu() else 8
@@ -318,14 +501,18 @@ def main() -> None:
                 synthetic_queries(svc.query_batch, svc.dim, corpus,
                                   seed=999), np.float32))
 
-        sched = BatchScheduler(g_step, batch_size=svc.query_batch)
+        sched = make_scheduler(g_step)
         payloads = make_payloads(lambda q: np.asarray(q, np.float32))
         reqs, gts, dt, lat_ms = drive(sched, payloads)
-        recalls = request_recalls(reqs, gts)
-        total_q = sum(len(g) for g in gts)
+        served, shed = serve_accounting(sched, reqs, gts)
+        recalls = request_recalls(served)
+        rec = float(np.mean(recalls)) if recalls else 0.0
+        total_q = sum(len(g) for _, g in served)
         waves = sum(st.waves for st in g_stats)
-        fetched = np.mean([st.fetched_bytes_per_query for st in g_stats])
-        skip = np.mean([st.s2_skip_rate for st in g_stats])
+        fetched = (np.mean([st.fetched_bytes_per_query for st in g_stats])
+                   if g_stats else 0.0)
+        skip = (np.mean([st.s2_skip_rate for st in g_stats])
+                if g_stats else 0.0)
         # Every drained batch carries the full padded query_batch rows —
         # the per-query ledgers scale back to totals by exactly that.
         for st in g_stats:
@@ -333,9 +520,41 @@ def main() -> None:
                 record_graph_sharded(reg, st, queries=svc.query_batch)
             else:
                 record_graph_scan(reg, st, queries=svc.query_batch)
-        reg.counter("serve.requests").add(len(reqs))
-        reg.counter("serve.queries").add(total_q)
         lat_note = latency_note(lat_ms)
+
+        if args.verify_degraded_oracle and sharded:
+            # The failover acceptance check: an engine missing shards must
+            # return bit-identical ids to the surviving-corpus oracle (the
+            # single-shard reference walk over the same tombstoned nodes).
+            from repro.index.graph import (
+                dead_shard_tombstones, search_graph_sharded)
+
+            dead = current_chaos().dead_shards(args.graph_shards)
+            if not dead:
+                print("verify-degraded: no dead shards at end of run; "
+                      "nothing to check")
+            else:
+                tombs = dead_shard_tombstones(n, args.graph_shards, dead)
+                vq = np.asarray(
+                    synthetic_queries(svc.query_batch, svc.dim, corpus,
+                                      seed=78), np.float32)
+                dv, iv, _ = engine(vq)
+                do, io_, _ = search_graph_sharded(
+                    gidx, jnp.asarray(vq), num_shards=1, k=svc.k,
+                    ef=args.ef, expand=args.expand, block_q=bq,
+                    use_ref=True, tombstones=tombs)
+                if not np.array_equal(np.asarray(iv), np.asarray(io_)):
+                    raise SystemExit(
+                        "degraded serving ids diverge from the "
+                        "surviving-corpus oracle")
+                if not np.allclose(np.asarray(dv), np.asarray(do),
+                                   rtol=5e-5, atol=1e-5):
+                    raise SystemExit(
+                        "degraded serving distances diverge from the "
+                        "surviving-corpus oracle")
+                print(f"verify-degraded: engine with dead shards "
+                      f"{sorted(dead)} bit-identical to the "
+                      f"surviving-corpus oracle ({svc.query_batch} queries)")
         if sharded:
             # Per-wave, per-shard fetch report + the exchange ledger: what
             # each shard's HBM ships per wave and what the interconnect
@@ -344,42 +563,57 @@ def main() -> None:
                 sum(st.shard_fetched_bytes_per_query[s] * svc.query_batch
                     for st in g_stats) / max(waves, 1.0)
                 for s in range(args.graph_shards)]
-            exch_pw = np.mean([st.exchange_bytes_per_wave for st in g_stats])
-            exch_pq = np.mean([st.exchange_bytes_per_query for st in g_stats])
+            exch_pw = (np.mean([st.exchange_bytes_per_wave
+                                for st in g_stats]) if g_stats else 0.0)
+            exch_pq = (np.mean([st.exchange_bytes_per_query
+                                for st in g_stats]) if g_stats else 0.0)
             shard_note = " ".join(
                 f"shard{s}_fetched_B_per_wave={shard_fpw[s]:.0f}"
                 for s in range(args.graph_shards))
+            deg_note, deg_report = degraded_split(served)
             print(f"method={args.method} index=graph shards="
-                  f"{args.graph_shards} corpus={n} requests={len(reqs)} "
+                  f"{args.graph_shards} corpus={n} "
+                  f"requests={len(served)}/{sched.stats['submitted']} "
                   f"rows={total_q} ef={args.ef} expand={args.expand} "
                   f"QPS={total_q/dt:.0f} "
-                  f"recall@{svc.k}={np.mean(recalls):.3f} "
+                  f"recall@{svc.k}={rec:.3f} "
                   f"compile_ms={compile_ms:.0f} "
                   f"waves={waves:.0f} fetched_B_per_q={fetched:.0f} "
                   f"{shard_note} exchange_B_per_wave={exch_pw:.0f} "
                   f"exchange_B_per_q={exch_pq:.0f} "
-                  f"s2_skip_rate={skip:.3f}{lat_note}")
-            emit({"qps": total_q / dt, "recall": float(np.mean(recalls)),
-                  "compile_ms": compile_ms, "waves": float(waves),
-                  "fetched_bytes_per_query": float(fetched),
-                  "exchange_bytes_per_wave": float(exch_pw),
-                  "exchange_bytes_per_query": float(exch_pq),
-                  "s2_skip_rate": float(skip), "queries": total_q})
+                  f"s2_skip_rate={skip:.3f}{shed_note(sched)}"
+                  f"{deg_note}{lat_note}")
+            report = {"qps": total_q / dt, "recall": rec,
+                      "compile_ms": compile_ms, "waves": float(waves),
+                      "fetched_bytes_per_query": float(fetched),
+                      "exchange_bytes_per_wave": float(exch_pw),
+                      "exchange_bytes_per_query": float(exch_pq),
+                      "s2_skip_rate": float(skip), "queries": total_q,
+                      "requests_submitted": sched.stats["submitted"],
+                      "requests_served": sched.stats["served"],
+                      "requests_shed": shed}
+            report.update(deg_report)
+            emit(report)
             return
-        gather = np.mean([st.gather_bytes_per_query for st in g_stats])
+        gather = (np.mean([st.gather_bytes_per_query for st in g_stats])
+                  if g_stats else 0.0)
         print(f"method={args.method} index=graph corpus={n} "
-              f"requests={len(reqs)} rows={total_q} ef={args.ef} "
+              f"requests={len(served)}/{sched.stats['submitted']} "
+              f"rows={total_q} ef={args.ef} "
               f"expand={args.expand} QPS={total_q/dt:.0f} "
-              f"recall@{svc.k}={np.mean(recalls):.3f} "
+              f"recall@{svc.k}={rec:.3f} "
               f"compile_ms={compile_ms:.0f} waves={waves:.0f} "
               f"fetched_B_per_q={fetched:.0f} "
               f"host_gather_B_per_q={gather:.0f} "
-              f"s2_skip_rate={skip:.3f}{lat_note}")
-        emit({"qps": total_q / dt, "recall": float(np.mean(recalls)),
+              f"s2_skip_rate={skip:.3f}{shed_note(sched)}{lat_note}")
+        emit({"qps": total_q / dt, "recall": rec,
               "compile_ms": compile_ms, "waves": float(waves),
               "fetched_bytes_per_query": float(fetched),
               "gather_bytes_per_query": float(gather),
-              "s2_skip_rate": float(skip), "queries": total_q})
+              "s2_skip_rate": float(skip), "queries": total_q,
+              "requests_submitted": sched.stats["submitted"],
+              "requests_served": sched.stats["served"],
+              "requests_shed": shed})
         return
 
     quant = None if args.quant == "none" else args.quant
@@ -432,8 +666,6 @@ def main() -> None:
 
     # Variable-size requests flow through the dynamic batcher; the compiled
     # step always sees the fixed (query_batch, D) shape.
-    from repro.runtime.scheduler import BatchScheduler
-
     scan_totals = np.zeros((6,), np.float64)
 
     def fixed_step(batch_np):
@@ -463,18 +695,20 @@ def main() -> None:
         prep(synthetic_queries(svc.query_batch, svc.dim, corpus, seed=999)))
     scan_totals[:] = 0.0
 
-    sched = BatchScheduler(fixed_step, batch_size=svc.query_batch)
+    sched = make_scheduler(fixed_step)
     payloads = make_payloads(prep)
     reqs, gts, dt, lat_ms = drive(sched, payloads)
-    assert all(r.result is not None for r in reqs)
-    recalls = request_recalls(reqs, gts)
-    total_q = sum(len(g) for g in gts)
-    reg.counter("serve.requests").add(len(reqs))
-    reg.counter("serve.queries").add(total_q)
+    served, shed = serve_accounting(sched, reqs, gts)
+    recalls = request_recalls(served)
+    rec = float(np.mean(recalls)) if recalls else 0.0
+    total_q = sum(len(g) for _, g in served)
     lat_note = latency_note(lat_ms)
     fetch_note = ""
-    report = {"qps": total_q / dt, "recall": float(np.mean(recalls)),
-              "compile_ms": compile_ms, "queries": total_q}
+    report = {"qps": total_q / dt, "recall": rec,
+              "compile_ms": compile_ms, "queries": total_q,
+              "requests_submitted": sched.stats["submitted"],
+              "requests_served": sched.stats["served"],
+              "requests_shed": shed}
     if with_stats:
         # Demand-paged stage 2: every scanned wave tile ships its int8
         # block; fp32 moves in (128, Δd) slabs fetched only while stage 2
@@ -507,12 +741,12 @@ def main() -> None:
             f" s2_skip_rate={skip:.3f}")
         report.update(s2_skip_rate=float(skip))
     print(f"method={args.method} quant={args.quant} devices={n_dev} corpus={n} "
-          f"requests={len(reqs)} rows={total_q} "
+          f"requests={len(served)}/{sched.stats['submitted']} rows={total_q} "
           f"batches={sched.stats['batches']} "
           f"pad_frac={sched.stats['padded_rows']/max(sched.stats['rows'],1):.2f} "
-          f"QPS={total_q/dt:.0f} recall@{svc.k}={np.mean(recalls):.3f} "
+          f"QPS={total_q/dt:.0f} recall@{svc.k}={rec:.3f} "
           f"compile_ms={compile_ms:.0f}"
-          f"{refine_note}{fetch_note}{lat_note}")
+          f"{refine_note}{fetch_note}{shed_note(sched)}{lat_note}")
     emit(report)
 
 

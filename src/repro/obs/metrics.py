@@ -321,6 +321,14 @@ def record_graph_sharded(reg: MetricsRegistry, st, *, queries: int) -> None:
             st.shard_s1_tiles_fetched[s])
         reg.counter(f"graph.sharded.shard{s}.s2_slabs_fetched").add(
             st.shard_s2_slabs_fetched[s])
+    # Degraded-mode (failover) telemetry: only present when the batch ran
+    # with tombstoned nodes — a healthy serve emits none of these.
+    if getattr(st, "tombstoned_nodes", 0):
+        reg.counter("graph.sharded.degraded.queries").add(qn)
+        reg.gauge("graph.sharded.degraded.tombstoned_nodes").set(
+            st.tombstoned_nodes)
+        reg.gauge("graph.sharded.degraded.num_dead").set(
+            float(len(st.dead_shards)))
 
 
 def record_fused_serve_totals(reg: MetricsRegistry, *, s1_tiles: float,

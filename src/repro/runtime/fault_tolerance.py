@@ -33,30 +33,57 @@ __all__ = ["StragglerMonitor", "TrainRunner", "elastic_restore"]
 
 
 class StragglerMonitor:
-    def __init__(self, deadline_factor: float = 3.0, warmup: int = 3):
+    """Per-step deadline tracking over steady-state (post-warmup) times.
+
+    The first ``warmup`` steps carry compile + cache-fill time; including
+    them in the percentiles would both inflate p95 for the whole run and
+    (worse) inflate the p50 the straggler deadline multiplies, masking
+    real stragglers early on.  Both the straggler test and the reported
+    p50/p95 therefore use only ``times[warmup:]``.
+
+    With a ``registry`` attached, each observation bridges into the obs
+    layer: gauges ``{prefix}.p50_ms`` / ``{prefix}.p95_ms``, histogram
+    ``{prefix}.step_ms``, counter ``{prefix}.stragglers``.
+    """
+
+    def __init__(self, deadline_factor: float = 3.0, warmup: int = 3,
+                 *, registry: Any = None,
+                 prefix: str = "runtime.straggler"):
         self.times: list[float] = []
         self.deadline_factor = deadline_factor
         self.warmup = warmup
         self.straggler_steps: list[int] = []
+        self.registry = registry
+        self.prefix = prefix
+
+    def _steady(self) -> list[float]:
+        steady = self.times[self.warmup:]
+        return steady if steady else self.times
 
     def observe(self, step: int, dt: float) -> bool:
         """Record a step time; True if the step was a straggler."""
         self.times.append(dt)
-        if len(self.times) <= self.warmup:
-            return False
-        p50 = float(np.median(self.times[self.warmup:]))
-        if dt > self.deadline_factor * p50:
-            self.straggler_steps.append(step)
-            return True
-        return False
+        straggler = False
+        if len(self.times) > self.warmup:
+            p50 = float(np.median(self.times[self.warmup:]))
+            if dt > self.deadline_factor * p50:
+                self.straggler_steps.append(step)
+                straggler = True
+        if self.registry is not None:
+            self.registry.histogram(f"{self.prefix}.step_ms").observe(dt * 1e3)
+            self.registry.gauge(f"{self.prefix}.p50_ms").set(self.p50 * 1e3)
+            self.registry.gauge(f"{self.prefix}.p95_ms").set(self.p95 * 1e3)
+            if straggler:
+                self.registry.counter(f"{self.prefix}.stragglers").add(1)
+        return straggler
 
     @property
     def p50(self) -> float:
-        return float(np.median(self.times)) if self.times else 0.0
+        return float(np.median(self._steady())) if self.times else 0.0
 
     @property
     def p95(self) -> float:
-        return float(np.percentile(self.times, 95)) if self.times else 0.0
+        return float(np.percentile(self._steady(), 95)) if self.times else 0.0
 
 
 @dataclasses.dataclass
@@ -66,6 +93,7 @@ class TrainRunner:
     ckpt: CheckpointManager
     ckpt_every: int = 50
     max_restarts: int = 3
+    registry: Any = None  # optional obs registry (straggler + restart metrics)
 
     def run(
         self,
@@ -81,7 +109,7 @@ class TrainRunner:
 
         ``fail_at`` injects failures for tests/chaos drills.
         """
-        monitor = StragglerMonitor()
+        monitor = StragglerMonitor(registry=self.registry)
         restarts = 0
         failures_left = dict(fail_at or {})
         template = state
@@ -104,14 +132,25 @@ class TrainRunner:
                     self.ckpt.save(step, state)
             except Exception:
                 restarts += 1
+                if self.registry is not None:
+                    self.registry.counter("runtime.restarts").add(1)
                 if restarts > self.max_restarts:
                     raise
                 latest = self.ckpt.latest_step()
                 if latest is None:
-                    step = start_step  # nothing committed yet: cold restart
+                    # Nothing committed yet: cold restart from the INITIAL
+                    # state (the partially-advanced one must not leak into
+                    # the rerun) and drop the rolled-back metric rows.
+                    state = template
+                    step = start_step
+                    history.clear()
                     continue
                 self.ckpt.wait()
                 state = self.ckpt.restore(latest, template)
+                # Truncate history to the restored step: steps in
+                # (latest, step) are rolled back and WILL re-execute, so
+                # keeping their metrics would double-count them.
+                del history[max(latest - start_step, 0):]
                 step = latest
         self.ckpt.wait()
         return state, {

@@ -6,6 +6,29 @@ requests into fixed batches (padding the tail), dispatches, and scatters
 results back per request — the standard continuous-batching front end,
 kept deliberately synchronous (deterministic, testable) with the async
 hand-off isolated in ``submit``/``drain``.
+
+Robustness (PR 7): every request ends in exactly one terminal status —
+``served``, or shed with a distinct reason — so the accounting invariant
+``submitted == served + shed`` holds by construction (the metrics schema
+check enforces it on every serve snapshot):
+
+  * ``shed_queue``    — rejected at submit: accepting the request would
+    push the queue past ``max_queue_rows`` (the depth watermark; chaos
+    ``queue_overload`` pressure counts against it).  Shedding at the door
+    beats queuing unboundedly — a request that would wait past its
+    deadline anyway costs engine batches and answers nobody.
+  * ``shed_deadline`` — dropped at dispatch: its deadline passed while it
+    queued.  The engine never spends a batch on a request whose answer
+    can no longer arrive in time.
+  * ``shed_error``    — the dispatch failed after ``max_retries`` bounded
+    exponential-backoff retries (chaos ``step_error`` or a real engine
+    fault).  The batch's requests are shed and serving CONTINUES — one
+    poisoned batch must not take the loop down.
+
+Counters flow into a ``repro.obs`` registry when one is attached
+(``serve.requests.submitted/served``, ``serve.shed.*``,
+``serve.retry.attempts``); without one the same tallies live in
+``stats`` — the scheduler never requires the obs layer.
 """
 
 from __future__ import annotations
@@ -17,7 +40,20 @@ from typing import Any, Callable
 
 import numpy as np
 
+from repro.runtime.chaos import current_chaos
+
 __all__ = ["BatchScheduler", "Request"]
+
+# stats key -> obs counter name (the dotted families the schema check
+# cross-validates; see docs/OBSERVABILITY.md)
+_METRIC_NAMES = {
+    "submitted": "serve.requests.submitted",
+    "served": "serve.requests.served",
+    "shed_queue": "serve.shed.queue",
+    "shed_deadline": "serve.shed.deadline",
+    "shed_error": "serve.shed.error",
+    "retries": "serve.retry.attempts",
+}
 
 
 @dataclasses.dataclass
@@ -26,6 +62,14 @@ class Request:
     queries: np.ndarray  # (n_i, D) rotated+padded queries
     enqueued_at: float = dataclasses.field(default_factory=time.perf_counter)
     result: tuple[np.ndarray, np.ndarray] | None = None  # (dists, ids)
+    deadline_at: float | None = None  # perf_counter deadline (None = none)
+    status: str = "pending"  # pending|queued|served|shed_queue|
+    #                          shed_deadline|shed_error
+    degraded: bool = False  # any of its batches ran with a dead shard
+
+    @property
+    def shed(self) -> bool:
+        return self.status.startswith("shed_")
 
 
 class BatchScheduler:
@@ -35,26 +79,95 @@ class BatchScheduler:
       step_fn: callable(batch (B, D)) -> (dists (B, K), ids (B, K)).
       batch_size: the compiled step's fixed query-batch B.
       max_wait_s: flush a partial batch after this long (latency bound).
+      max_queue_rows: queue-depth watermark — submits that would push the
+        pending row count (plus chaos queue pressure) past it are shed
+        with ``shed_queue``.  0 (default) = unbounded, the pre-PR shape.
+      max_retries: bounded retries around a failing dispatch (exponential
+        backoff, ``retry_backoff_s * 2**attempt``); exhausted retries shed
+        the batch's requests with ``shed_error`` instead of raising.
+      retry_backoff_s: first-retry backoff (doubles per attempt).
+      registry: optional ``repro.obs.MetricsRegistry`` — request/shed/retry
+        counters land under their ``serve.*`` names.
     """
 
     def __init__(self, step_fn: Callable, batch_size: int,
-                 *, max_wait_s: float = 0.005):
+                 *, max_wait_s: float = 0.005, max_queue_rows: int = 0,
+                 max_retries: int = 0, retry_backoff_s: float = 0.02,
+                 registry: Any = None):
         self.step_fn = step_fn
         self.batch = batch_size
         self.max_wait = max_wait_s
+        self.max_queue_rows = max_queue_rows
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.registry = registry
         self._queue: deque[tuple[Request, int]] = deque()  # (req, row offset)
         self._next_rid = 0
-        self.stats = {"batches": 0, "padded_rows": 0, "rows": 0}
+        self.stats = {"batches": 0, "padded_rows": 0, "rows": 0,
+                      "submitted": 0, "served": 0, "shed_queue": 0,
+                      "shed_deadline": 0, "shed_error": 0, "retries": 0}
 
-    def submit(self, queries: np.ndarray) -> Request:
+    def _count(self, key: str, delta: int = 1) -> None:
+        self.stats[key] += delta
+        if self.registry is not None:
+            self.registry.counter(_METRIC_NAMES[key]).add(delta)
+
+    def submit(self, queries: np.ndarray, *,
+               deadline_s: float | None = None) -> Request:
+        """Enqueue a request; ``deadline_s`` is a latency budget from NOW.
+        Returns the request — check ``status`` (a watermark shed returns
+        immediately with ``shed_queue`` and never occupies a queue slot)."""
         req = Request(rid=self._next_rid, queries=np.asarray(queries))
         self._next_rid += 1
+        if deadline_s is not None:
+            req.deadline_at = req.enqueued_at + deadline_s
+        self._count("submitted")
+        depth = len(self._queue) + len(req.queries) \
+            + current_chaos().queue_pressure()
+        if self.max_queue_rows and depth > self.max_queue_rows:
+            req.status = "shed_queue"
+            self._count("shed_queue")
+            return req
+        req.status = "queued"
         for i in range(len(req.queries)):
             self._queue.append((req, i))
         return req
 
     def _pending(self) -> int:
         return len(self._queue)
+
+    def _take_slots(self) -> list[tuple[Request, int]]:
+        """Pop up to one batch of live rows, shedding requests whose
+        deadline passed while they queued (their remaining rows are
+        dropped as they surface — a shed request never costs a slot)."""
+        now = time.perf_counter()
+        slots: list[tuple[Request, int]] = []
+        while self._queue and len(slots) < self.batch:
+            req, i = self._queue.popleft()
+            if req.status != "queued":
+                continue  # already shed: discard its remaining rows
+            if req.deadline_at is not None and now > req.deadline_at:
+                req.status = "shed_deadline"
+                self._count("shed_deadline")
+                continue
+            slots.append((req, i))
+        return slots
+
+    def _dispatch(self, qs: np.ndarray):
+        """One engine step with bounded retry/backoff.  Chaos step errors
+        and real engine faults retry alike; after ``max_retries`` the
+        exception propagates (``drain`` sheds the batch)."""
+        attempt = 0
+        while True:
+            try:
+                current_chaos().maybe_fail_step()
+                return self.step_fn(qs)
+            except Exception:
+                if attempt >= self.max_retries:
+                    raise
+                self._count("retries")
+                time.sleep(self.retry_backoff_s * (2 ** attempt))
+                attempt += 1
 
     def drain(self, *, force: bool = True) -> list[Request]:
         """Run batches until the queue empties (force) or only a fresh
@@ -67,18 +180,34 @@ class BatchScheduler:
                 oldest = self._queue[0][0].enqueued_at
                 if time.perf_counter() - oldest < self.max_wait:
                     break
-            take = min(self.batch, self._pending())
-            slots = [self._queue.popleft() for _ in range(take)]
+            slots = self._take_slots()
+            if not slots:
+                continue  # everything popped was shed; re-check the queue
+            take = len(slots)
             qs = np.stack([r.queries[i] for r, i in slots])
             pad = self.batch - take
             if pad:
                 qs = np.pad(qs, ((0, pad), (0, 0)))
-            dists, ids = self.step_fn(qs)
+            current_chaos().on_engine_step()  # the drill clock: one tick
+            #                                   per dispatched batch
+            try:
+                dists, ids = self._dispatch(qs)
+            except Exception:
+                # Retries exhausted: shed this batch's requests (their
+                # other rows drop in _take_slots) and keep serving.
+                for req, _ in slots:
+                    if req.status == "queued":
+                        req.status = "shed_error"
+                        self._count("shed_error")
+                        parts.pop(req.rid, None)
+                continue
+            degraded = current_chaos().degraded_now()
             dists, ids = np.asarray(dists), np.asarray(ids)
             self.stats["batches"] += 1
             self.stats["padded_rows"] += pad
             self.stats["rows"] += take
             for j, (req, i) in enumerate(slots):
+                req.degraded = req.degraded or degraded
                 parts.setdefault(req.rid, []).append((i, dists[j], ids[j]))
                 if len(parts[req.rid]) == len(req.queries):
                     order = sorted(parts.pop(req.rid))
@@ -86,5 +215,7 @@ class BatchScheduler:
                         np.stack([d for _, d, _ in order]),
                         np.stack([x for _, _, x in order]),
                     )
+                    req.status = "served"
+                    self._count("served")
                     done[req.rid] = req
         return [done[k] for k in sorted(done)]

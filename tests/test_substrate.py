@@ -151,6 +151,99 @@ def test_straggler_monitor_flags_outliers():
     assert m.p50 == pytest.approx(0.1, rel=0.05)
 
 
+def test_straggler_percentiles_exclude_warmup():
+    # The first steps carry compile time; the straggler deadline already
+    # excluded them from its p50, but the reported p50/p95 used to include
+    # them — with 3 warmup steps at 5s over 4 steady 0.1s steps, p95 came
+    # out 50x the steady-state truth.
+    m = StragglerMonitor(deadline_factor=3.0, warmup=3)
+    for i, dt in enumerate([5.0, 5.0, 5.0, 0.1, 0.1, 0.1, 0.1]):
+        m.observe(i, dt)
+    assert m.straggler_steps == []  # warmup spikes are not stragglers
+    assert m.p50 == pytest.approx(0.1, rel=0.05)
+    assert m.p95 < 1.0  # warmup samples no longer pollute the tail
+    # Before steady-state samples exist, fall back to what we have.
+    early = StragglerMonitor(warmup=3)
+    early.observe(0, 2.0)
+    assert early.p50 == pytest.approx(2.0)
+
+
+def test_straggler_monitor_bridges_registry():
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    m = StragglerMonitor(deadline_factor=3.0, warmup=2, registry=reg)
+    for i, dt in enumerate([0.1, 0.1, 0.1, 0.1, 1.0]):
+        m.observe(i, dt)
+    assert reg.counter("runtime.straggler.stragglers").value == 1
+    assert reg.gauge("runtime.straggler.p50_ms").value == \
+        pytest.approx(m.p50 * 1e3)
+    assert reg.gauge("runtime.straggler.p95_ms").value == \
+        pytest.approx(m.p95 * 1e3)
+    assert reg.histogram("runtime.straggler.step_ms").count == 5
+
+
+def test_runner_history_matches_clean_run(tmp_path):
+    # Metrics recorded for steps that are later rolled back to a
+    # checkpoint must not survive in history — the faulty run's history
+    # must equal the clean run's row for row, not just the final state.
+    clean = _make_runner(tmp_path / "clean")
+    s0 = {"step": 0, "acc": 0.0}
+    _, ref_info = clean.run(dict(s0), num_steps=20)
+
+    faulty = _make_runner(tmp_path / "faulty")
+    _, info = faulty.run(dict(s0), num_steps=20, fail_at={3: 1, 13: 2})
+    assert len(info["history"]) == len(ref_info["history"]) == 20
+    assert info["history"] == ref_info["history"]
+
+
+# ---- checkpoint crash-safety + named artifacts -------------------------------
+
+def test_latest_step_ignores_torn_tmp_dir(tmp_path):
+    # A writer that died mid-save leaves only a .tmp dir; a restarting
+    # reader must see "no checkpoint", not a half-written one.
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    os.makedirs(os.path.join(str(tmp_path), "step_000000007.tmp"))
+    assert mgr.latest_step() is None
+    assert mgr.all_steps() == []
+
+
+def test_restore_digest_error_names_leaf(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    tree = {"alpha": jnp.zeros((4,)), "beta": jnp.arange(8.0)}
+    mgr.save(1, tree)
+    path = os.path.join(str(tmp_path), "step_000000001", "leaf_00001.npy")
+    data = bytearray(open(path, "rb").read())
+    data[-1] ^= 0xFF
+    open(path, "wb").write(bytes(data))
+    with pytest.raises(IOError, match=r"leaf 1 \(\['beta'\]\)"):
+        mgr.restore(1, tree)
+
+
+def test_named_artifact_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    arrays = {"b": np.arange(6.0), "a": np.ones((2, 2), np.int32)}
+    mgr.save_named(0, arrays, extra={"cfg": {"ef": 32}})
+    out, extra = mgr.restore_named(0)
+    assert extra == {"cfg": {"ef": 32}}
+    assert sorted(out) == ["a", "b"]
+    for k in arrays:
+        np.testing.assert_array_equal(out[k], arrays[k])
+        assert out[k].dtype == np.asarray(arrays[k]).dtype
+
+
+def test_named_artifact_tamper_names_leaf(tmp_path):
+    from repro.runtime.chaos import corrupt_checkpoint_leaf
+
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save_named(0, {"b": np.arange(6.0), "a": np.ones((3,), np.int32)})
+    # leaf 0 is 'a' (sorted-key flatten order)
+    corrupt_checkpoint_leaf(os.path.join(str(tmp_path), "step_000000000"),
+                            leaf=0)
+    with pytest.raises(IOError, match=r"leaf 0 \(a\): digest mismatch"):
+        mgr.restore_named(0)
+
+
 # ---- property: checkpoint round-trips arbitrary pytrees ----------------------
 
 from _hypothesis_compat import given, settings, st
