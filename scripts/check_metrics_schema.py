@@ -22,7 +22,16 @@ snapshot to the engine stats the human-readable serve line prints:
     without a submitted counter are a wiring bug and fail;
   * degraded-mode serving (``graph.sharded.degraded.requests`` present)
     must also report its recall and recall delta gauges — a failover
-    without its measured cost is not observable.
+    without its measured cost is not observable;
+  * mutation accounting (churn route): the ``mutate.*`` ledger closes —
+    ``mutate.applied == mutate.upserts + mutate.deletes + mutate.rejected``
+    (every attempted mutation ends in exactly one terminal status); any
+    ``mutate.*`` metric without ``mutate.applied`` is a wiring bug and
+    fails; and when both the serving engine's
+    ``graph.sharded.degraded.tombstoned_nodes`` gauge and the index's
+    ``mutate.tombstones`` gauge are present, the engine must have
+    tombstoned at least the index's deleted-row count — fewer means
+    deletes are being served as live rows.
 
 Pure stdlib (the point of the dependency-free obs layer: this runs in CI
 contexts with no jax).  Exit 1 on any violation, each named on one line.
@@ -116,6 +125,25 @@ def check(path: str) -> int:
             if value(g) is None:
                 fails.append(f"consistency: degraded requests counted but "
                              f"{g} gauge missing")
+
+    applied = value("mutate.applied")
+    if applied is not None:
+        parts = ("mutate.upserts", "mutate.deletes", "mutate.rejected")
+        total_parts = sum(value(k) or 0 for k in parts)
+        if applied != total_parts:
+            fails.append(
+                f"consistency: mutate.applied={applied} != upserts + deletes "
+                f"+ rejected = {total_parts}")
+        tomb = value("mutate.tombstones")
+        engine_tomb = value("graph.sharded.degraded.tombstoned_nodes")
+        if tomb is not None and engine_tomb is not None and engine_tomb < tomb:
+            fails.append(
+                f"consistency: graph.sharded.degraded.tombstoned_nodes="
+                f"{engine_tomb} < mutate.tombstones={tomb} (engine serving "
+                f"deleted rows)")
+    elif any(k.startswith("mutate.") for k in metrics):
+        orphan = sorted(k for k in metrics if k.startswith("mutate."))[0]
+        fails.append(f"consistency: {orphan} present without mutate.applied")
 
     shard_keys = sorted(
         k for k in metrics

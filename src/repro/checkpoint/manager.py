@@ -121,6 +121,14 @@ class CheckpointManager:
         steps = self.all_steps()
         for s in steps[: -self.keep] if self.keep else []:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+        # Sweep torn step dirs: committed dirs always carry tree.json (the
+        # atomic rename happens after it is fsync'd), so a dir matching the
+        # step pattern without one is interrupted-GC debris.  ``all_steps``
+        # already refuses to resolve them; reclaim the disk here.
+        for fn in os.listdir(self.dir):
+            if re.fullmatch(r"step_(\d+)", fn) and not os.path.exists(
+                    os.path.join(self.dir, fn, "tree.json")):
+                shutil.rmtree(os.path.join(self.dir, fn), ignore_errors=True)
 
     # ---- restore ---------------------------------------------------------
 
@@ -128,7 +136,10 @@ class CheckpointManager:
         out = []
         for fn in os.listdir(self.dir):
             m = re.fullmatch(r"step_(\d+)", fn)
-            if m:
+            # A step dir without its committed metadata is torn (crash
+            # mid-``rmtree`` during GC, or external tampering): it must
+            # never resolve as a restore target, so it is not a step.
+            if m and os.path.exists(os.path.join(self.dir, fn, "tree.json")):
                 out.append(int(m.group(1)))
         return sorted(out)
 

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 
 from repro.core.transforms import OrthogonalTransform
 
-__all__ = ["EpsilonTable", "calibrate", "adsampling_table", "expansion_schedule"]
+__all__ = ["EpsilonTable", "calibrate", "adsampling_table",
+           "expansion_schedule", "violation_rates"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -118,6 +119,45 @@ def calibrate(
     return EpsilonTable(dims=dims, eps=eps.astype(jnp.float32),
                         scale=scale.astype(jnp.float32),
                         eps_lo=eps_lo.astype(jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("num_pairs",))
+def violation_rates(
+    table: EpsilonTable,
+    transform: OrthogonalTransform,
+    data: jax.Array,
+    key: jax.Array,
+    *,
+    num_pairs: int = 2048,
+) -> jax.Array:
+    """Per-checkpoint empirical violation rates — the hypothesis test of
+    Eq. 14 run in REVERSE: given a table, measure
+    P(dis'_d / dis - 1 > eps_d) on fresh pairs from ``data``.
+
+    On the distribution the table was calibrated for, every rate sits near
+    P_s by construction; under drift (mutated corpora whose energy profile
+    no longer matches the calibration sample) the early checkpoints exceed
+    the band — each violation is a candidate the screen would falsely
+    prune at the threshold boundary, so this IS the staleness statistic
+    the drift watchdog (``index.mutable``) monitors.  Same key → same
+    pairs, so rates of two tables over one (transform, data, key) triple
+    form a paired screen-parity comparison (the recalibration swap proof).
+    The final checkpoint is exact (eps=0, ratio=0) and always reports 0.
+    """
+    n = data.shape[0]
+    k1, k2 = jax.random.split(key)
+    i = jax.random.randint(k1, (num_pairs,), 0, n)
+    j = jax.random.randint(k2, (num_pairs,), 0, n)
+    j = jnp.where(i == j, (j + 1) % n, j)
+    x1 = jnp.take(data, i, axis=0).astype(jnp.float32)
+    x2 = jnp.take(data, j, axis=0).astype(jnp.float32)
+    delta = transform.apply(x1 - x2)
+    csq = jnp.cumsum(delta * delta, axis=1)
+    partial_sq = csq[:, table.dims - 1]  # (P, S)
+    exact = jnp.sqrt(jnp.maximum(csq[:, -1], 1e-30))
+    est = jnp.sqrt(jnp.maximum(partial_sq * table.scale[None, :], 0.0))
+    ratio = est / exact[:, None] - 1.0
+    return jnp.mean((ratio > table.eps[None, :]).astype(jnp.float32), axis=0)
 
 
 def adsampling_table(

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["TokenPipeline", "synthetic_vectors", "synthetic_queries"]
+__all__ = ["TokenPipeline", "synthetic_vectors", "synthetic_queries",
+           "drifted_vectors"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +59,33 @@ def synthetic_vectors(
     # identity == PCA and the data-aware claim is untestable)
     q, _ = np.linalg.qr(rng.standard_normal((dim, dim)))
     return (x + centers[mode]) @ q.astype(np.float32)
+
+
+def drifted_vectors(transform, n: int, *, extra_decay: float = 0.08,
+                    seed: int = 11) -> np.ndarray:
+    """Distribution-drift stimulus for the churn drills (ISSUE 8).
+
+    Samples vectors whose energy profile IN THE FITTED BASIS decays
+    ``extra_decay`` faster than the corpus the ``transform`` was fitted on:
+    per-component scales ``sqrt(variances_d) * exp(-extra_decay * d)``,
+    rotated back through the orthogonal basis.  Under the stale epsilon
+    table these rows' partial estimates overshoot the calibrated profile
+    (``calibration.violation_rates`` -> ~1.0 at ``extra_decay=0.08``), so
+    the DADE screen falsely prunes at the threshold boundary — the recall
+    erosion ``benchmarks/fig10_churn.py`` measures and the drift watchdog's
+    recalibration repairs.  Vectors sampled with an unrelated rotation
+    (e.g. ``synthetic_vectors`` under a different seed) do NOT trigger this:
+    their energy spreads across the basis and estimates undershoot, which
+    is conservative for recall.
+    """
+    rng = np.random.default_rng(seed)
+    basis = np.asarray(transform.basis, np.float32)
+    var = np.asarray(transform.variances, np.float32)
+    dim = basis.shape[0]
+    prof = np.sqrt(np.maximum(var, 0.0)) * np.exp(
+        -extra_decay * np.arange(dim)).astype(np.float32)
+    rot = rng.standard_normal((n, dim)).astype(np.float32) * prof
+    return (rot @ basis.T).astype(np.float32)
 
 
 def synthetic_queries(n: int, dim: int, corpus: np.ndarray, *, seed: int = 1) -> np.ndarray:

@@ -193,6 +193,88 @@ def _greedy_search_np(rot, adj, entry, q, ef):
     return [int(result_ids[i]) for i in order]
 
 
+def _select_heuristic_np(rot, a, cand, mmax):
+    """hnswlib's diversity heuristic: keep c unless some already-selected
+    s is closer to c than c is to a (preserves long-range bridges —
+    distance-only trimming fragments clustered corpora).
+
+    Module-level (not a ``build_graph`` closure) because the mutable-index
+    engine (``index.mutable``) replays the EXACT builder arithmetic for
+    incremental upserts; any drift here would break the rebuilt-index
+    bit-identity contract."""
+    cand = np.unique(cand[cand >= 0])
+    cand = cand[cand != a]
+    if cand.size == 0:
+        return cand
+    d_a = np.einsum("nd,nd->n", rot[cand] - rot[a], rot[cand] - rot[a])
+    order = np.argsort(d_a)
+    selected: list[int] = []
+    rest: list[int] = []
+    for i in order:
+        c, dc = cand[i], d_a[i]
+        if len(selected) >= mmax:
+            break
+        dsel = [
+            float(np.dot(rot[c] - rot[s], rot[c] - rot[s]))
+            for s in selected
+        ]
+        if all(ds > dc for ds in dsel):
+            selected.append(int(c))
+        else:
+            rest.append(int(c))
+    # keepPrunedConnections: fill remaining slots with nearest pruned
+    for c in rest:
+        if len(selected) >= mmax:
+            break
+        selected.append(c)
+    return np.asarray(selected, np.int64)
+
+
+def _connect_np(rot, adj, deg, a, b, m):
+    """Append edge a->b into the over-provisioned adjacency; past capacity,
+    re-select a's neighbourhood to m with the diversity heuristic."""
+    if deg[a] < adj.shape[1]:
+        adj[a, deg[a]] = b
+        deg[a] += 1
+    else:
+        keep = _select_heuristic_np(
+            rot, a, np.concatenate([adj[a, : deg[a]], [b]]), m)
+        adj[a, : len(keep)] = keep
+        adj[a, len(keep):] = -1
+        deg[a] = len(keep)
+
+
+def _insert_node_np(rot, adj, deg, v, *, m, ef_construction):
+    """One NSW insertion: beam-search the first v rows for node v's
+    ``ef_construction`` nearest, connect bidirectionally to the best m.
+    Returns the connect targets — every node whose adjacency row may have
+    changed (the set a mutable index must re-trim)."""
+    found = _greedy_search_np(rot[:v], adj[:v], 0, rot[v], ef_construction)
+    targets = _select_heuristic_np(rot, v, np.asarray(found[: 2 * m]), m)
+    for u in targets:
+        _connect_np(rot, adj, deg, v, u, m)
+        _connect_np(rot, adj, deg, u, v, m)
+    return targets
+
+
+def _trim_row_np(rot, adj, deg, v, m):
+    """Node v's serving row: its over-provisioned adjacency trimmed to m
+    (diversity-aware), -1 padded.  Depends only on (rot, adj[v], deg[v]) —
+    re-trimming after every touch converges to the batch end-trim."""
+    nbrs = adj[v, : deg[v]]
+    if nbrs.size > m:
+        nbrs = _select_heuristic_np(rot, v, nbrs, m)
+    out = np.full((m,), -1, np.int64)
+    out[: nbrs.size] = nbrs
+    return out
+
+
+def _medoid_entry_np(rot):
+    """The builder's entry rule: the node nearest the corpus mean."""
+    return int(np.argmin(
+        np.einsum("nd,nd->n", rot - rot.mean(0), rot - rot.mean(0))))
+
+
 def build_graph(
     data,
     *,
@@ -234,63 +316,15 @@ def build_graph(
     adj = np.full((n, 2 * m), -1, np.int64)  # over-provision, trim at the end
     deg = np.zeros(n, np.int64)
 
-    def select_heuristic(a, cand, mmax):
-        """hnswlib's diversity heuristic: keep c unless some already-selected
-        s is closer to c than c is to a (preserves long-range bridges —
-        distance-only trimming fragments clustered corpora)."""
-        cand = np.unique(cand[cand >= 0])
-        cand = cand[cand != a]
-        if cand.size == 0:
-            return cand
-        d_a = np.einsum("nd,nd->n", rot[cand] - rot[a], rot[cand] - rot[a])
-        order = np.argsort(d_a)
-        selected: list[int] = []
-        rest: list[int] = []
-        for i in order:
-            c, dc = cand[i], d_a[i]
-            if len(selected) >= mmax:
-                break
-            dsel = [
-                float(np.dot(rot[c] - rot[s], rot[c] - rot[s]))
-                for s in selected
-            ]
-            if all(ds > dc for ds in dsel):
-                selected.append(int(c))
-            else:
-                rest.append(int(c))
-        # keepPrunedConnections: fill remaining slots with nearest pruned
-        for c in rest:
-            if len(selected) >= mmax:
-                break
-            selected.append(c)
-        return np.asarray(selected, np.int64)
-
-    def connect(a, b):
-        if deg[a] < adj.shape[1]:
-            adj[a, deg[a]] = b
-            deg[a] += 1
-        else:  # re-select with the diversity heuristic
-            keep = select_heuristic(a, np.concatenate([adj[a, : deg[a]], [b]]), m)
-            adj[a, : len(keep)] = keep
-            adj[a, len(keep):] = -1
-            deg[a] = len(keep)
-
     for v in range(1, n):
-        entry = 0
-        found = _greedy_search_np(rot[:v], adj[:v], entry, rot[v], ef_construction)
-        targets = select_heuristic(v, np.asarray(found[: 2 * m]), m)
-        for u in targets:
-            connect(v, u)
-            connect(u, v)
+        _insert_node_np(rot, adj, deg, v, m=m,
+                        ef_construction=ef_construction)
 
     # Trim to M (diversity-aware) and pick the medoid entry.
     final = np.full((n, m), -1, np.int64)
     for v in range(n):
-        nbrs = adj[v, : deg[v]]
-        if nbrs.size > m:
-            nbrs = select_heuristic(v, nbrs, m)
-        final[v, : nbrs.size] = nbrs
-    entry = int(np.argmin(np.einsum("nd,nd->n", rot - rot.mean(0), rot - rot.mean(0))))
+        final[v] = _trim_row_np(rot, adj, deg, v, m)
+    entry = _medoid_entry_np(rot)
     corpus_q = qscales = None
     adj_rot = adj_codes = adj_ids = gscales = None
     a_block = block_d = 0
@@ -552,16 +586,29 @@ class GraphScanStats(NamedTuple):
     s2_skip_rate: float = 0.0  # 1 - fetched/total (fetch elision)
 
 
-def _beam_seed_rsq(index: GraphIndex, q_rot: jax.Array, k: int) -> jax.Array:
+def _beam_seed_rsq(index: GraphIndex, q_rot: jax.Array, k: int, *,
+                   entry=None, alive=None) -> jax.Array:
     """Seed threshold from the entry point's int8-prescreened neighbourhood
     (same arithmetic as ``search_graph(seed_r=True)``): verify the k
     apparent-nearest exactly and widen the k-th by the first-checkpoint
     overshoot band.  Sound floor — the k verified rows are real corpus
-    rows, so the final k-th distance can only be smaller."""
+    rows, so the final k-th distance can only be smaller.
+
+    ``entry`` overrides the builder's medoid (degraded mode passes the
+    surviving-corpus fallback, which is alive by construction, so its
+    neighbour row is readable).  ``alive`` — an (N,) bool mask, False on
+    tombstoned nodes — excludes dead neighbours from the prescreen sample
+    exactly like -1 padding: the seed then rests on k verified SURVIVING
+    rows, which still upper-bound the final k-th distance (the result set
+    draws from a superset of those k rows), so the floor stays sound with
+    tombstones held fixed and identical for every shard count."""
     table = index.estimator.table
     m = index.degree
-    nbrs0 = index.neighbors[index.entry]  # (M,)
+    e = index.entry if entry is None else entry
+    nbrs0 = index.neighbors[e]  # (M,)
     nvalid = nbrs0 >= 0
+    if alive is not None:
+        nvalid = nvalid & alive[jnp.maximum(nbrs0, 0)]
     codes0 = index.corpus_q[jnp.maximum(nbrs0, 0)]
     deq0 = codes0.astype(jnp.float32) * index.qscales[None, :]
     approx = jnp.sum((deq0[None, :, :] - q_rot[:, None, :]) ** 2, axis=-1)
@@ -667,11 +714,21 @@ def _prep_wave_state(index: GraphIndex, queries: jax.Array, *, k: int,
     top_ids[:qn, 0] = entry
 
     # Pad rows carry r²=0 (everything prunes, window never fills); real
-    # rows floor the threshold with the optional seeded r².
+    # rows floor the threshold with the optional seeded r².  With
+    # tombstones, the seed samples the (possibly fallback) entry's ALIVE
+    # neighbours only — computed once here, host-side, so every shard
+    # count sees the identical floor.
     seed_vec = np.zeros((q_pad,), np.float32)
     if seed_r:
+        alive = None
+        if tombstones:
+            amask = np.ones((index.corpus_rot.shape[0],), bool)
+            for b, c in tombstones:
+                amask[int(b): int(b) + int(c)] = False
+            alive = jnp.asarray(amask)
         seed_vec[:qn] = np.asarray(
-            _beam_seed_rsq(index, jnp.asarray(q_sorted[:qn]), k))
+            _beam_seed_rsq(index, jnp.asarray(q_sorted[:qn]), k,
+                           entry=entry, alive=alive))
     else:
         seed_vec[:qn] = np.inf
     return inv, q_sorted, q_tiles, q_pad, qn, entry, top_sq, top_ids, seed_vec
@@ -695,6 +752,7 @@ def _run_wave_loop(
     use_ref: bool,
     wave_step=None,
     tombstones=(),
+    exclude=(),
 ):
     """THE wave driver — every beam engine (single-replica fused/host,
     host-simulated sharded, mesh-backed sharded) runs this one loop, so
@@ -711,7 +769,20 @@ def _run_wave_loop(
     identity).  Because the tombstones are wave-0 state and frozen-wave
     schedules are shard-count-invariant, a degraded S-shard run is
     bit-identical to the single-host oracle with the same tombstones —
-    the provable failover contract.
+    the provable failover contract.  ``seed_r`` composes: the threshold
+    seed is computed in ``_prep_wave_state`` from the surviving entry's
+    alive neighbours only (see ``_beam_seed_rsq``), wave-0 state like the
+    tombstones themselves.
+
+    ``exclude`` ((base, count) node ranges, a subset of ``tombstones``) is
+    the mutable-index delete filter: tombstoned nodes are never expanded,
+    but surviving shards' adjacency replicas may still ADMIT them to beam
+    windows (degraded-mode semantics, docs/SERVING.md §6).  A dead shard's
+    rows are merely unreachable — admitting replicas is correct — but a
+    DELETED row must never be returned, so the epilogue drops excluded ids
+    from the ef windows and re-sorts before taking the top k.  Filtering
+    the full window (not the k columns) keeps k results whenever fewer
+    than ef-k excluded ids were admitted.
 
     Host-side numpy orchestration: frontier selection and wave-count
     bookkeeping; everything per-candidate — screening, beam maintenance,
@@ -737,11 +808,7 @@ def _run_wave_loop(
     if not 1 <= k <= ef:
         raise ValueError(f"need 1 <= k <= ef, got k={k} ef={ef}")
     tombstones = tuple((int(b), int(c)) for b, c in tombstones)
-    if tombstones and seed_r:
-        raise ValueError(
-            "degraded-mode search (tombstones) does not support seed_r "
-            "threshold seeding: the seed reads the builder entry's "
-            "neighbourhood, which a dead shard may own")
+    exclude = tuple((int(b), int(c)) for b, c in exclude)
     thresh_col = (k - 1) if decoupled else (ef - 1)
     est = index.estimator
     n = index.corpus_rot.shape[0]
@@ -896,8 +963,24 @@ def _run_wave_loop(
                 exch_bytes += wave_exch
             waves += 1
 
-    dists = np.sqrt(np.maximum(top_sq[:qn], 0.0))[inv][:, :k]
-    ids = top_ids[:qn][inv][:, :k]
+    top_sq_f = top_sq[:qn]
+    top_ids_f = top_ids[:qn]
+    if exclude:
+        # Delete filter: drop excluded ids from the full ef windows, then
+        # re-sort so the best k SURVIVING entries surface.  Host-side and
+        # shard-count-independent (the merged window is identical for
+        # every S), so it preserves the bit-identity contracts.
+        dead = np.zeros((n,), bool)
+        for b, c in exclude:
+            dead[b: b + c] = True
+        drop = (top_ids_f >= 0) & dead[np.maximum(top_ids_f, 0)]
+        top_sq_f = np.where(drop, np.inf, top_sq_f)
+        top_ids_f = np.where(drop, -1, top_ids_f).astype(np.int32)
+        order_ex = np.argsort(top_sq_f, axis=1, kind="stable")
+        top_sq_f = np.take_along_axis(top_sq_f, order_ex, axis=1)
+        top_ids_f = np.take_along_axis(top_ids_f, order_ex, axis=1)
+    dists = np.sqrt(np.maximum(top_sq_f, 0.0))[inv][:, :k]
+    ids = top_ids_f[inv][:, :k]
     acc = dict(waves=waves, sem=sem, s1_tiles=s1_tiles, s2_slabs=s2_slabs,
                exch_bytes=exch_bytes, qn=qn)
     return dists, ids, acc
@@ -917,6 +1000,8 @@ def _beam_scan(
     route_mult: float,
     interpret: bool | None,
     use_ref: bool,
+    tombstones=(),
+    exclude=(),
 ):
     """The single-replica beam engines: the shared wave loop
     (``_run_wave_loop`` with one shard and in-wave threshold tightening)
@@ -926,7 +1011,8 @@ def _beam_scan(
         index, queries, k=k, ef=ef, expand=expand, block_q=block_q,
         max_waves=max_waves, seed_r=seed_r, decoupled=decoupled,
         route_mult=route_mult, num_shards=1, tighten=True,
-        interpret=interpret, use_ref=use_ref)
+        interpret=interpret, use_ref=use_ref, tombstones=tombstones,
+        exclude=exclude)
     qn = acc["qn"]
     sem = acc["sem"]
     waves = acc["waves"]
@@ -979,6 +1065,8 @@ def search_graph_fused(
     route_mult: float = 1.0,
     interpret: bool | None = None,
     use_ref: bool = False,
+    tombstones=(),
+    exclude=(),
 ):
     """Batched graph search through the fused beam-scan megakernel.
 
@@ -1003,11 +1091,19 @@ def search_graph_fused(
     the frontier proposal gate to ``route_mult · r²`` without touching the
     screen threshold — the recall/bytes dial the fig8 sweep turns (an
     entry past r cannot enter the result but can route the walk).
+
+    ``tombstones``/``exclude`` are the mutable-index hooks ((base, count)
+    node ranges — a single row is ``(id, 1)``): tombstoned nodes are
+    pre-visited (never expanded; free growth-slab slots and deleted rows
+    both ride this), excluded ids are additionally dropped from the result
+    windows (deleted rows must not be returned even via adjacency
+    replicas).  Same machinery as degraded-mode sharded serving.
     """
     return _beam_scan(index, queries, k=k, ef=ef, expand=expand,
                       block_q=block_q, max_waves=max_waves, seed_r=seed_r,
                       decoupled=decoupled, route_mult=route_mult,
-                      interpret=interpret, use_ref=use_ref)
+                      interpret=interpret, use_ref=use_ref,
+                      tombstones=tombstones, exclude=exclude)
 
 
 def search_graph_beam_host(
@@ -1022,6 +1118,8 @@ def search_graph_beam_host(
     seed_r: bool = False,
     decoupled: bool = True,
     route_mult: float = 1.0,
+    tombstones=(),
+    exclude=(),
 ):
     """The host two-stage graph screen: the identical wave schedule run
     through the pure-jnp oracle (gathered neighbour blocks, same
@@ -1033,7 +1131,8 @@ def search_graph_beam_host(
     return _beam_scan(index, queries, k=k, ef=ef, expand=expand,
                       block_q=block_q, max_waves=max_waves, seed_r=seed_r,
                       decoupled=decoupled, route_mult=route_mult,
-                      interpret=None, use_ref=True)
+                      interpret=None, use_ref=True, tombstones=tombstones,
+                      exclude=exclude)
 
 
 # ---------------------------------------------------------------------------
@@ -1186,6 +1285,7 @@ def _beam_scan_sharded(
     use_ref: bool,
     wave_step=None,
     tombstones=(),
+    exclude=(),
 ):
     """The corpus-sharded engines: the shared wave loop
     (``_run_wave_loop`` with the wave-start threshold FROZEN —
@@ -1201,7 +1301,7 @@ def _beam_scan_sharded(
         max_waves=max_waves, seed_r=seed_r, decoupled=decoupled,
         route_mult=route_mult, num_shards=num_shards, tighten=False,
         interpret=interpret, use_ref=use_ref, wave_step=wave_step,
-        tombstones=tombstones)
+        tombstones=tombstones, exclude=exclude)
     qn = acc["qn"]
     sem = acc["sem"]
     waves = acc["waves"]
@@ -1275,6 +1375,7 @@ def search_graph_sharded(
     use_ref: bool = False,
     wave_step=None,
     tombstones=(),
+    exclude=(),
 ):
     """Corpus-sharded batched graph search: the global walk split over
     ``num_shards`` contiguous node ranges with cross-shard frontier
@@ -1307,8 +1408,12 @@ def search_graph_sharded(
     but may still be *admitted* to result windows through neighbour-row
     replicas stored in surviving shards' adjacency slabs (that data is
     genuinely available; docs/SERVING.md §6 discusses the semantics).
-    ``seed_r`` is rejected with tombstones (the seed reads the builder
-    entry's neighbourhood, which may be dead).
+    ``seed_r`` composes with tombstones: the threshold seed samples only
+    the ALIVE neighbours of the (possibly fallback) entry — still a sound
+    floor, computed once host-side so it is identical for every shard
+    count.  ``exclude`` ((base, count) ranges, mutable-index deletes)
+    additionally drops those ids from the result windows in the epilogue —
+    unlike dead-shard rows, a deleted row must never be returned.
 
     Returns (dists (Q, K), ids (Q, K), GraphShardedStats) — degraded runs
     carry ``tombstoned_nodes`` and ``dead_shards`` in the stats.
@@ -1317,4 +1422,5 @@ def search_graph_sharded(
         index, queries, k=k, ef=ef, expand=expand, block_q=block_q,
         max_waves=max_waves, seed_r=seed_r, decoupled=decoupled,
         route_mult=route_mult, num_shards=num_shards, interpret=interpret,
-        use_ref=use_ref, wave_step=wave_step, tombstones=tombstones)
+        use_ref=use_ref, wave_step=wave_step, tombstones=tombstones,
+        exclude=exclude)

@@ -1,0 +1,879 @@
+"""Streaming mutable indexes over the tile-aligned layouts (ISSUE 8).
+
+Every index in this repo is built offline into sentinel-padded, tile-aligned
+slabs.  This module makes those slabs *mutable* without giving up the two
+properties the serving stack leans on:
+
+  * **Layout invariants** — an upsert is a row write plus an offset-table
+    edit inside pre-reserved growth headroom (``capacity``); a delete is a
+    tombstone (the PR-7 pre-visited-bitmap machinery), never a compaction.
+    Kernels keep seeing the exact shapes they were built for.
+  * **Rebuild equivalence** — a mutated index answers queries with the SAME
+    ids as a from-scratch rebuild of the final corpus (oracle-asserted in
+    tests).  For the graph this is enforced at the *array* level: upserts
+    replay the builder's exact arithmetic (``_insert_node_np`` /
+    ``_trim_row_np`` from ``index.graph``), so the mutated adjacency is
+    bit-identical to ``build_graph`` over the concatenated corpus.
+
+Quantized mirrors stay honest via *eager requantization on clip*: int8
+scales are ``max|x_d|/127`` over the corpus, so a new row outside the fitted
+envelope changes the scales — the engine detects it and re-encodes every
+code slab from the new scales immediately.  Mutated scales therefore always
+equal rebuild scales, and the no-false-prune error band is re-asserted,
+never assumed.
+
+Deletes are mark-deletes: the row keeps its slot (and, in the graph, keeps
+routing walks as a waypoint) but is tombstoned out of expansion and
+``exclude``-filtered out of result windows.  The rebuild comparator applies
+the same tombstones, so both sides agree exactly.
+
+:class:`DriftWatchdog` closes the loop on DADE staleness (the regime the
+DCO benchmark study flags as untested): it runs the paper's hypothesis test
+in reverse (``calibration.violation_rates``) on a reservoir sample of the
+live corpus, and when the observed false-prune rate escapes the calibrated
+``P_s`` band it recalibrates the epsilon table and hot-swaps it — guarded
+by a paired screen-parity proof on the same reservoir pairs.  The PCA
+transform itself stays frozen (refitting it would invalidate every rotated
+slab); only the table moves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibration as calib
+from repro.core.estimators import Estimator, build_estimator
+from repro.index.flat import FlatIndex, search_flat
+from repro.index.graph import (
+    GraphIndex,
+    _SENTINEL,
+    _insert_node_np,
+    _medoid_entry_np,
+    _trim_row_np,
+    search_graph_fused,
+)
+from repro.index.ivf import IVFIndex, build_ivf, search_ivf
+from repro.quant.scalar import (
+    fit_block_scales,
+    fit_scales,
+    quantize,
+    quantize_block,
+    wants_quant,
+)
+from repro.runtime.chaos import current_chaos
+
+__all__ = [
+    "MutationLedger",
+    "MutableFlat",
+    "MutableIVF",
+    "MutableGraph",
+    "DriftWatchdog",
+    "ids_to_ranges",
+]
+
+
+def ids_to_ranges(ids) -> tuple:
+    """Sorted ids -> merged ``((base, count), ...)`` ranges — the wire format
+    of the ``tombstones=`` / ``exclude=`` hooks in the graph drivers."""
+    out: list[tuple[int, int]] = []
+    for i in sorted(int(i) for i in ids):
+        if out and i == out[-1][0] + out[-1][1]:
+            out[-1] = (out[-1][0], out[-1][1] + 1)
+        else:
+            out.append((i, 1))
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class MutationLedger:
+    """Closed mutation accounting: ``applied == upserts + deletes + rejected``
+    at all times (the invariant ``scripts/check_metrics_schema.py`` enforces
+    on the exported ``mutate.*`` family).  ``rejected`` counts refused
+    operations (capacity exhausted, unknown/double delete); ``requantizes``
+    counts full int8 re-encodes triggered by scale clips."""
+
+    applied: int = 0
+    upserts: int = 0
+    deletes: int = 0
+    rejected: int = 0
+    requantizes: int = 0
+
+    def check(self) -> None:
+        assert self.applied == self.upserts + self.deletes + self.rejected, (
+            f"mutation ledger not closed: applied={self.applied} != "
+            f"{self.upserts}+{self.deletes}+{self.rejected}")
+
+    def as_metrics(self, prefix: str = "mutate") -> dict[str, float]:
+        return {
+            f"{prefix}.applied": float(self.applied),
+            f"{prefix}.upserts": float(self.upserts),
+            f"{prefix}.deletes": float(self.deletes),
+            f"{prefix}.rejected": float(self.rejected),
+            f"{prefix}.requantize": float(self.requantizes),
+        }
+
+
+class _MutableBase:
+    """Shared bookkeeping: version-keyed view cache, ledger, estimator swap."""
+
+    def __init__(self, estimator: Estimator):
+        self.estimator = estimator
+        self.ledger = MutationLedger()
+        self._version = 0
+        self._cache: tuple[int, object] | None = None
+
+    def _bump(self) -> None:
+        self._version += 1
+
+    def set_estimator(self, est: Estimator) -> None:
+        """Hot-swap the estimator (recalibrated epsilon table).  The
+        transform must be the SAME object: rotated slabs were produced by
+        it, and a different rotation would silently invalidate every row."""
+        if est.transform is not self.estimator.transform:
+            raise ValueError(
+                "set_estimator: transform changed — recalibration swaps the "
+                "epsilon table only; the rotation is frozen with the slabs")
+        self.estimator = est
+        self._bump()
+
+
+# ---------------------------------------------------------------------------
+# Flat
+# ---------------------------------------------------------------------------
+
+
+class MutableFlat(_MutableBase):
+    """Mutable linear-scan index: append-only growth slab + alive bitmap.
+
+    ``view()`` gathers the live rows into a :class:`FlatIndex` (ids remapped
+    back to global ids by :meth:`search`).  The int8 mirror keeps the
+    superset-fitted scales (all rows ever written) — still a sound envelope
+    for every live row, and re-fitted eagerly whenever a new row clips."""
+
+    def __init__(self, data, *, capacity: int | None = None,
+                 method: str = "dade", key: jax.Array | None = None,
+                 estimator: Estimator | None = None, quant=None,
+                 **est_kwargs):
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        data = jnp.asarray(data, jnp.float32)
+        if estimator is None:
+            estimator = build_estimator(method, data, key, quant=quant,
+                                        **est_kwargs)
+        super().__init__(estimator)
+        rot0 = np.asarray(estimator.rotate(data))
+        n, dim = rot0.shape
+        cap = int(capacity) if capacity is not None else 2 * n
+        if cap < n:
+            raise ValueError(f"capacity {cap} < initial corpus {n}")
+        self.capacity = cap
+        self.count = n
+        self._corpus = np.zeros((cap, dim), np.float32)
+        self._corpus[:n] = np.asarray(data)
+        self._rot = np.zeros((cap, dim), np.float32)
+        self._rot[:n] = rot0
+        self._alive = np.zeros(cap, bool)
+        self._alive[:n] = True
+        self._quant = wants_quant(quant, estimator.quant)
+        if self._quant:
+            self._amax = np.max(np.abs(rot0), axis=0)
+            self._qscales = np.asarray(fit_scales(jnp.asarray(rot0)))
+            self._codes = np.zeros((cap, dim), np.int8)
+            self._codes[:n] = np.asarray(
+                quantize(jnp.asarray(rot0), jnp.asarray(self._qscales)))
+
+    @property
+    def live_count(self) -> int:
+        return int(self._alive[: self.count].sum())
+
+    def upsert(self, vec) -> int:
+        """Append one vector; returns its global id, or -1 when rejected
+        (capacity exhausted)."""
+        self.ledger.applied += 1
+        if self.count >= self.capacity:
+            self.ledger.rejected += 1
+            return -1
+        v = self.count
+        x = jnp.asarray(vec, jnp.float32)[None]
+        row = np.asarray(self.estimator.rotate(x))[0]
+        self._corpus[v] = np.asarray(x)[0]
+        self._rot[v] = row
+        self._alive[v] = True
+        self.count = v + 1
+        if self._quant:
+            if np.any(np.abs(row) > self._amax):
+                self._requantize()
+            else:
+                self._codes[v] = np.asarray(
+                    quantize(jnp.asarray(row)[None],
+                             jnp.asarray(self._qscales)))[0]
+        self.ledger.upserts += 1
+        self._bump()
+        return v
+
+    def _requantize(self) -> None:
+        rot = jnp.asarray(self._rot[: self.count])
+        self._amax = np.max(np.abs(self._rot[: self.count]), axis=0)
+        self._qscales = np.asarray(fit_scales(rot))
+        self._codes[: self.count] = np.asarray(
+            quantize(rot, jnp.asarray(self._qscales)))
+        self.ledger.requantizes += 1
+
+    def delete(self, gid: int) -> bool:
+        self.ledger.applied += 1
+        gid = int(gid)
+        if not (0 <= gid < self.count and self._alive[gid]):
+            self.ledger.rejected += 1
+            return False
+        self._alive[gid] = False
+        self.ledger.deletes += 1
+        self._bump()
+        return True
+
+    def view(self) -> tuple[FlatIndex, np.ndarray]:
+        """(FlatIndex over the gathered live rows, live-row -> global-id map)."""
+        if self._cache is not None and self._cache[0] == self._version:
+            return self._cache[1]
+        live = np.flatnonzero(self._alive[: self.count]).astype(np.int32)
+        idx = FlatIndex(
+            estimator=self.estimator,
+            corpus_rot=jnp.asarray(self._rot[live]),
+            corpus=jnp.asarray(self._corpus[live]),
+            corpus_q=jnp.asarray(self._codes[live]) if self._quant else None,
+            qscales=jnp.asarray(self._qscales) if self._quant else None,
+        )
+        self._cache = (self._version, (idx, live))
+        return idx, live
+
+    def search(self, queries, *, k: int = 10, **kwargs):
+        """Flat K-NN over the live rows; ids are GLOBAL ids."""
+        idx, live = self.view()
+        res = search_flat(idx, queries, k=k, **kwargs)
+        ids = np.asarray(res.ids)
+        gids = np.where(ids >= 0, live[np.maximum(ids, 0)], -1).astype(np.int32)
+        return res._replace(ids=jnp.asarray(gids))
+
+
+# ---------------------------------------------------------------------------
+# IVF
+# ---------------------------------------------------------------------------
+
+
+class MutableIVF(_MutableBase):
+    """Mutable IVF over per-cluster growth slabs, centroids frozen.
+
+    Upserts assign to the nearest frozen centroid (``_assign``) and land in
+    the lowest free slot of that cluster's sentinel-padded slab; deletes
+    punch a hole (id -1 / sentinel row) that ``search_ivf``'s per-slot
+    validity mask skips natively and later upserts reuse.  When a cluster's
+    slab is full the upsert is REJECTED (ledger ``rejected``) — spilling to
+    a wrong cluster would silently break the probe ordering contract.
+
+    Scope bound: only the padded-gather engine (``search_ivf``) is served;
+    the fused CSR layout is an offline artifact — rebuild it via
+    :meth:`compact` when churn quiesces.  Centroid refresh (re-clustering)
+    is likewise offline; the rebuild comparator (:meth:`compact`) therefore
+    keeps the frozen centroids, making mutated-vs-rebuilt comparisons
+    well-defined."""
+
+    def __init__(self, data, *, growth: int = 128, n_clusters: int = 64,
+                 method: str = "dade", key: jax.Array | None = None,
+                 estimator: Estimator | None = None, quant=None,
+                 **build_kwargs):
+        base = build_ivf(data, method=method, n_clusters=n_clusters, key=key,
+                         estimator=estimator, quant=quant, **build_kwargs)
+        super().__init__(base.estimator)
+        self._quant = base.has_quant
+        self.centroids = np.asarray(base.centroids)
+        nc, cap0, dim = base.buckets.shape
+        growth = (int(growth) + 127) // 128 * 128
+        cap = cap0 + growth
+        self.capacity = cap
+        self._buckets = np.full((nc, cap, dim), 1e18, np.float32)
+        self._buckets[:, :cap0] = np.asarray(base.buckets)
+        self._bucket_ids = np.full((nc, cap), -1, np.int32)
+        self._bucket_ids[:, :cap0] = np.asarray(base.bucket_ids)
+        sizes = np.asarray(base.bucket_sizes).astype(np.int64)
+        self._fill = sizes.copy()  # high-water slot per cluster
+        self._live = sizes.copy()  # live rows per cluster
+        self.count = int(sizes.sum())  # global ids handed out so far
+        rot0 = np.asarray(self.estimator.rotate(jnp.asarray(data, jnp.float32)))
+        self._rot_seen = [rot0]  # every row ever written (scale refits)
+        self._slot: dict[int, tuple[int, int]] = {}
+        for c in range(nc):
+            for s in range(int(sizes[c])):
+                self._slot[int(self._bucket_ids[c, s])] = (c, s)
+        self._deleted: set[int] = set()
+        if self._quant:
+            self._amax = np.max(np.abs(rot0), axis=0)
+            self._qscales = np.asarray(base.qscales)
+            self._qbuckets = np.zeros((nc, cap, dim), np.int8)
+            self._qbuckets[:, :cap0] = np.asarray(base.qbuckets)
+
+    def _assign(self, rot_row: np.ndarray) -> int:
+        """The frozen-centroid assignment rule — shared with the rebuild
+        comparator (:meth:`compact`) so both sides bucket identically."""
+        d = self.centroids - rot_row[None, :]
+        return int(np.argmin(np.einsum("nd,nd->n", d, d)))
+
+    @property
+    def live_count(self) -> int:
+        return int(self._live.sum())
+
+    def upsert(self, vec) -> int:
+        self.ledger.applied += 1
+        x = jnp.asarray(vec, jnp.float32)[None]
+        row = np.asarray(self.estimator.rotate(x))[0]
+        c = self._assign(row)
+        holes = np.flatnonzero(self._bucket_ids[c, : self._fill[c]] < 0)
+        if holes.size:
+            s = int(holes[0])
+        elif self._fill[c] < self.capacity:
+            s = int(self._fill[c])
+            self._fill[c] += 1
+        else:
+            self.ledger.rejected += 1
+            return -1
+        gid = self.count
+        self.count = gid + 1
+        self._buckets[c, s] = row
+        self._bucket_ids[c, s] = gid
+        self._slot[gid] = (c, s)
+        self._live[c] += 1
+        self._rot_seen.append(row[None, :])
+        if self._quant:
+            if np.any(np.abs(row) > self._amax):
+                self._requantize()
+            else:
+                self._qbuckets[c, s] = np.asarray(
+                    quantize(jnp.asarray(row)[None],
+                             jnp.asarray(self._qscales)))[0]
+        self.ledger.upserts += 1
+        self._bump()
+        return gid
+
+    def _requantize(self) -> None:
+        seen = np.concatenate(self._rot_seen, axis=0)
+        self._rot_seen = [seen]
+        self._amax = np.max(np.abs(seen), axis=0)
+        self._qscales = np.asarray(fit_scales(jnp.asarray(seen)))
+        scales = jnp.asarray(self._qscales)
+        for c in range(self._buckets.shape[0]):
+            f = int(self._fill[c])
+            if not f:
+                continue
+            sl = self._bucket_ids[c, :f] >= 0
+            rows = jnp.asarray(self._buckets[c, :f][sl])
+            self._qbuckets[c, :f][sl] = np.asarray(quantize(rows, scales))
+        self.ledger.requantizes += 1
+
+    def delete(self, gid: int) -> bool:
+        self.ledger.applied += 1
+        gid = int(gid)
+        if gid in self._deleted or gid not in self._slot:
+            self.ledger.rejected += 1
+            return False
+        c, s = self._slot[gid]
+        self._bucket_ids[c, s] = -1
+        self._buckets[c, s] = 1e18
+        if self._quant:
+            self._qbuckets[c, s] = 0
+        self._live[c] -= 1
+        self._deleted.add(gid)
+        self.ledger.deletes += 1
+        self._bump()
+        return True
+
+    def view(self) -> IVFIndex:
+        """IVFIndex over the (hole-y) growth slabs — padded-gather engine
+        only (``starts``/``flat_*`` None)."""
+        if self._cache is not None and self._cache[0] == self._version:
+            return self._cache[1]
+        idx = IVFIndex(
+            estimator=self.estimator,
+            centroids=jnp.asarray(self.centroids),
+            buckets=jnp.asarray(self._buckets),
+            bucket_ids=jnp.asarray(self._bucket_ids),
+            bucket_sizes=jnp.asarray(self._live, jnp.int32),
+            qbuckets=jnp.asarray(self._qbuckets) if self._quant else None,
+            qscales=jnp.asarray(self._qscales) if self._quant else None,
+            max_bucket=int(self._fill.max()),
+        )
+        self._cache = (self._version, idx)
+        return idx
+
+    def compact(self) -> IVFIndex:
+        """From-scratch layout of the LIVE corpus under the frozen
+        centroids/estimator: holes squeezed, scales refit on live rows —
+        the rebuild comparator for the churn-equivalence oracle."""
+        nc, _, dim = self._buckets.shape
+        rows: list[list[tuple[int, np.ndarray]]] = [[] for _ in range(nc)]
+        for gid in sorted(self._slot):
+            if gid in self._deleted:
+                continue
+            c, s = self._slot[gid]
+            rows[c].append((gid, self._buckets[c, s]))
+        cap = max(1, max((len(r) for r in rows), default=1))
+        cap = (cap + 127) // 128 * 128
+        buckets = np.full((nc, cap, dim), 1e18, np.float32)
+        bucket_ids = np.full((nc, cap), -1, np.int32)
+        sizes = np.zeros(nc, np.int32)
+        for c in range(nc):
+            for s, (gid, row) in enumerate(rows[c]):
+                buckets[c, s] = row
+                bucket_ids[c, s] = gid
+            sizes[c] = len(rows[c])
+        qbuckets = qscales = None
+        if self._quant:
+            live_rot = np.concatenate(
+                [buckets[c, : sizes[c]] for c in range(nc) if sizes[c]], axis=0)
+            qscales = np.asarray(fit_scales(jnp.asarray(live_rot)))
+            qbuckets = np.zeros((nc, cap, dim), np.int8)
+            for c in range(nc):
+                if sizes[c]:
+                    qbuckets[c, : sizes[c]] = np.asarray(quantize(
+                        jnp.asarray(buckets[c, : sizes[c]]),
+                        jnp.asarray(qscales)))
+        return IVFIndex(
+            estimator=self.estimator,
+            centroids=jnp.asarray(self.centroids),
+            buckets=jnp.asarray(buckets),
+            bucket_ids=jnp.asarray(bucket_ids),
+            bucket_sizes=jnp.asarray(sizes),
+            qbuckets=None if qbuckets is None else jnp.asarray(qbuckets),
+            qscales=None if qscales is None else jnp.asarray(qscales),
+            max_bucket=int(sizes.max()),
+        )
+
+    def search(self, queries, *, k: int = 10, **kwargs):
+        return search_ivf(self.view(), queries, k=k, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Graph
+# ---------------------------------------------------------------------------
+
+
+class MutableGraph(_MutableBase):
+    """Mutable NSW graph in capacity slabs, array-bit-identical to rebuild.
+
+    The constructor replays ``build_graph``'s exact insertion loop into
+    over-allocated slabs and KEEPS the over-provisioned adjacency + degree
+    state the one-shot builder throws away — that state is what lets an
+    upsert continue the construction sequence exactly where a from-scratch
+    build of the longer corpus would be.  After every upsert the touched
+    rows are re-trimmed (``_trim_row_np`` depends only on the row's own
+    over-provisioned neighbours + immutable rot rows, so trim-after-last-
+    touch == the builder's end-of-build trim) and the entry medoid is
+    recomputed lazily.  Consequence, asserted in tests: after any upsert
+    sequence, ``neighbors``/``entry``/codes equal ``build_graph`` over the
+    concatenated corpus bit-for-bit.
+
+    Deletes are mark-deletes: the row stays a routing waypoint (exactly as
+    a rebuild of the concatenated corpus would have it) but is tombstoned
+    (never expanded, never seeds the threshold) and ``exclude``-filtered
+    from result windows.  :meth:`search` wires both automatically.
+    """
+
+    def __init__(self, data, *, m: int = 16, ef_construction: int = 100,
+                 capacity: int | None = None, method: str = "dade",
+                 key: jax.Array | None = None,
+                 estimator: Estimator | None = None, quant=None,
+                 scan_block_d: int | None = None,
+                 adj_block: int | None = None, adj_dtype: str = "float32",
+                 **est_kwargs):
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        data = jnp.asarray(data, jnp.float32)
+        if estimator is None:
+            estimator = build_estimator(method, data, key, quant=quant,
+                                        **est_kwargs)
+        super().__init__(estimator)
+        rot0 = np.asarray(estimator.rotate(data))
+        n, dim = rot0.shape
+        cap = int(capacity) if capacity is not None else 2 * n
+        if cap < n:
+            raise ValueError(f"capacity {cap} < initial corpus {n}")
+        self.capacity = cap
+        self.count = n
+        self.m = int(m)
+        self.efc = int(ef_construction)
+        self._corpus = np.zeros((cap, dim), np.float32)
+        self._corpus[:n] = np.asarray(data)
+        self._rot = np.zeros((cap, dim), np.float32)
+        self._rot[:n] = rot0
+        # The builder's working state, kept live: over-provisioned adjacency
+        # (2m slots) + degrees, and the trimmed serving rows.
+        self._adj = np.full((cap, 2 * self.m), -1, np.int64)
+        self._deg = np.zeros(cap, np.int64)
+        for v in range(1, n):
+            _insert_node_np(self._rot, self._adj, self._deg, v, m=self.m,
+                            ef_construction=self.efc)
+        self._final = np.full((cap, self.m), -1, np.int64)
+        for v in range(n):
+            self._final[v] = _trim_row_np(self._rot, self._adj, self._deg,
+                                          v, self.m)
+        self._entry: int | None = _medoid_entry_np(self._rot[:n])
+        self._deleted: set[int] = set()
+        self._quant = wants_quant(quant, estimator.quant)
+        self.scan_block_d = 0
+        self.adj_block = 0
+        if self._quant:
+            self._amax = np.max(np.abs(rot0), axis=0)
+            self._qscales = np.asarray(fit_scales(jnp.asarray(rot0)))
+            self._codes = np.zeros((cap, dim), np.int8)
+            self._codes[:n] = np.asarray(
+                quantize(jnp.asarray(rot0), jnp.asarray(self._qscales)))
+            if scan_block_d is None:
+                block_d = int(np.asarray(estimator.table.dims)[0])
+            else:
+                block_d = int(scan_block_d)
+            d_pad = (dim + block_d - 1) // block_d * block_d
+            if adj_block is None:
+                a_block = (max(self.m, 1) + 31) // 32 * 32
+            else:
+                a_block = int(adj_block)
+            if a_block < self.m:
+                raise ValueError(f"adj_block {a_block} < graph degree {self.m}")
+            self.scan_block_d = block_d
+            self.adj_block = a_block
+            self._adt = jnp.dtype(adj_dtype)
+            self._rot_pad = np.zeros((cap, d_pad), np.float32)
+            self._rot_pad[:n, :dim] = rot0
+            self._bamax = np.max(
+                np.abs(self._rot_pad[:n]).reshape(n, -1, block_d), axis=(0, 2))
+            self._gscales = np.asarray(
+                fit_block_scales(jnp.asarray(self._rot_pad[:n]), block_d))
+            self._codes_blk = np.zeros((cap, d_pad), np.int8)
+            self._codes_blk[:n] = np.asarray(quantize_block(
+                jnp.asarray(self._rot_pad[:n]), jnp.asarray(self._gscales),
+                block_d))
+            self._adj_rot = np.full((cap * a_block, d_pad), _SENTINEL,
+                                    np.float32)
+            self._adj_codes = np.zeros((cap * a_block, d_pad), np.int8)
+            self._adj_ids = np.full((cap * a_block,), -1, np.int32)
+            for v in range(n):
+                self._refresh_adj_row(v)
+
+    # ---- quant slab maintenance -----------------------------------------
+
+    def _refresh_adj_row(self, v: int) -> None:
+        nbrs = self._final[v][self._final[v] >= 0]
+        a = v * self.adj_block
+        b = a + self.adj_block
+        self._adj_rot[a:b] = _SENTINEL
+        self._adj_codes[a:b] = 0
+        self._adj_ids[a:b] = -1
+        self._adj_rot[a: a + len(nbrs)] = self._rot_pad[nbrs]
+        self._adj_codes[a: a + len(nbrs)] = self._codes_blk[nbrs]
+        self._adj_ids[a: a + len(nbrs)] = nbrs
+
+    def _requantize(self) -> None:
+        """Full re-encode from refit scales (a new row clipped).  Refitting
+        over the whole slab reproduces exactly what ``build_graph`` would
+        fit over the concatenated corpus, keeping codes rebuild-identical."""
+        c = self.count
+        rot = jnp.asarray(self._rot[:c])
+        self._amax = np.max(np.abs(self._rot[:c]), axis=0)
+        self._qscales = np.asarray(fit_scales(rot))
+        self._codes[:c] = np.asarray(quantize(rot, jnp.asarray(self._qscales)))
+        block_d = self.scan_block_d
+        self._bamax = np.max(
+            np.abs(self._rot_pad[:c]).reshape(c, -1, block_d), axis=(0, 2))
+        self._gscales = np.asarray(
+            fit_block_scales(jnp.asarray(self._rot_pad[:c]), block_d))
+        self._codes_blk[:c] = np.asarray(quantize_block(
+            jnp.asarray(self._rot_pad[:c]), jnp.asarray(self._gscales),
+            block_d))
+        for v in range(c):
+            self._refresh_adj_row(v)
+        self.ledger.requantizes += 1
+
+    # ---- mutations -------------------------------------------------------
+
+    def upsert(self, vec) -> int:
+        """Insert one vector via the builder's own incremental link step;
+        returns its global id, or -1 when capacity is exhausted."""
+        self.ledger.applied += 1
+        if self.count >= self.capacity:
+            self.ledger.rejected += 1
+            return -1
+        v = self.count
+        x = jnp.asarray(vec, jnp.float32)[None]
+        row = np.asarray(self.estimator.rotate(x))[0]
+        self._corpus[v] = np.asarray(x)[0]
+        self._rot[v] = row
+        self.count = v + 1
+        targets = _insert_node_np(self._rot, self._adj, self._deg, v,
+                                  m=self.m, ef_construction=self.efc)
+        touched = {v, *(int(t) for t in np.asarray(targets).ravel())}
+        for t in touched:
+            self._final[t] = _trim_row_np(self._rot, self._adj, self._deg,
+                                          t, self.m)
+        self._entry = None  # medoid moved; recomputed lazily at view()
+        if self._quant:
+            dim = row.shape[0]
+            self._rot_pad[v, :dim] = row
+            row_pad = self._rot_pad[v]
+            bmax = np.max(np.abs(row_pad).reshape(-1, self.scan_block_d),
+                          axis=1)
+            if np.any(np.abs(row) > self._amax) or np.any(bmax > self._bamax):
+                self._requantize()
+            else:
+                self._codes[v] = np.asarray(quantize(
+                    jnp.asarray(row)[None], jnp.asarray(self._qscales)))[0]
+                self._codes_blk[v] = np.asarray(quantize_block(
+                    jnp.asarray(row_pad)[None], jnp.asarray(self._gscales),
+                    self.scan_block_d))[0]
+            for t in touched:
+                self._refresh_adj_row(t)
+        self.ledger.upserts += 1
+        self._bump()
+        return v
+
+    def delete(self, gid: int) -> bool:
+        """Mark-delete: the row keeps routing (as in a rebuild of the
+        concatenated corpus) but is tombstoned + excluded at search time."""
+        self.ledger.applied += 1
+        gid = int(gid)
+        if not (0 <= gid < self.count) or gid in self._deleted:
+            self.ledger.rejected += 1
+            return False
+        self._deleted.add(gid)
+        self.ledger.deletes += 1
+        self._bump()
+        return True
+
+    # ---- views -----------------------------------------------------------
+
+    @property
+    def live_count(self) -> int:
+        return self.count - len(self._deleted)
+
+    @property
+    def tombstones(self) -> tuple:
+        """Deleted ids as the drivers' ``((base, count), ...)`` ranges —
+        pass as BOTH ``tombstones=`` (never expand) and ``exclude=``
+        (never return); :meth:`search` does."""
+        return ids_to_ranges(self._deleted)
+
+    @property
+    def index(self) -> GraphIndex:
+        """GraphIndex over the written prefix of the slabs.  Arrays are
+        bit-identical to ``build_graph`` on the concatenated corpus."""
+        if self._cache is not None and self._cache[0] == self._version:
+            return self._cache[1]
+        c = self.count
+        if self._entry is None:
+            self._entry = _medoid_entry_np(self._rot[:c])
+        kw: dict = {}
+        if self._quant:
+            kw = dict(
+                corpus_q=jnp.asarray(self._codes[:c]),
+                qscales=jnp.asarray(self._qscales),
+                adj_rot=jnp.asarray(
+                    self._adj_rot[: c * self.adj_block]).astype(self._adt),
+                adj_codes=jnp.asarray(self._adj_codes[: c * self.adj_block]),
+                adj_ids=jnp.asarray(self._adj_ids[: c * self.adj_block]),
+                gscales=jnp.asarray(self._gscales),
+                adj_block=self.adj_block,
+                scan_block_d=self.scan_block_d,
+            )
+        idx = GraphIndex(
+            estimator=self.estimator,
+            corpus_rot=jnp.asarray(self._rot[:c]),
+            neighbors=jnp.asarray(self._final[:c], jnp.int32),
+            entry=jnp.asarray(self._entry, jnp.int32),
+            **kw,
+        )
+        self._cache = (self._version, idx)
+        return idx
+
+    def search(self, queries, *, k: int = 10, **kwargs):
+        """Fused beam search over the live graph: deleted rows are
+        tombstoned out of expansion/seeding and excluded from results."""
+        t = self.tombstones
+        return search_graph_fused(self.index, queries, k=k, tombstones=t,
+                                  exclude=t, **kwargs)
+
+    # ---- snapshots (checkpoint.save_named base for the WAL) --------------
+
+    def snapshot_arrays(self) -> tuple[dict[str, np.ndarray], dict]:
+        """(arrays, extra) for ``CheckpointManager.save_named``: the full
+        mutable state EXCEPT the estimator (restored deterministically by
+        the caller — same corpus seed or ``index_io`` artifact).  Quant
+        slabs are derived state and re-encoded on restore."""
+        c = self.count
+        arrays = {
+            "adj": self._adj[:c],
+            "corpus": self._corpus[:c],
+            "deg": self._deg[:c],
+            "deleted": np.asarray(sorted(self._deleted), np.int64),
+            "final": self._final[:c],
+        }
+        extra = {"count": c, "m": self.m, "ef_construction": self.efc,
+                 "capacity": self.capacity,
+                 "entry": int(self._entry) if self._entry is not None else -1,
+                 "ledger": dataclasses.asdict(self.ledger)}
+        return arrays, extra
+
+    @classmethod
+    def from_snapshot(cls, arrays: dict, extra: dict, estimator: Estimator,
+                      **kwargs) -> "MutableGraph":
+        """Rebuild a MutableGraph from ``snapshot_arrays`` output.  The
+        construction replay is skipped — slabs are restored directly, then
+        quant mirrors re-derived (bit-identical: same rot, refit scales)."""
+        c = int(extra["count"])
+        self = cls(arrays["corpus"][: max(1, min(2, c))], m=extra["m"],
+                   ef_construction=extra["ef_construction"],
+                   capacity=extra["capacity"], estimator=estimator, **kwargs)
+        rot = np.asarray(estimator.rotate(
+            jnp.asarray(arrays["corpus"], jnp.float32)))
+        self.count = c
+        self._corpus[:c] = arrays["corpus"]
+        self._rot[:c] = rot
+        self._adj[:c] = arrays["adj"]
+        self._adj[c:] = -1
+        self._deg[:c] = arrays["deg"]
+        self._deg[c:] = 0
+        self._final[:c] = arrays["final"]
+        self._final[c:] = -1
+        self._deleted = set(int(i) for i in arrays["deleted"])
+        self._entry = int(extra["entry"]) if int(extra["entry"]) >= 0 else None
+        self.ledger = MutationLedger(**extra.get("ledger", {}))
+        if self._quant:
+            dim = rot.shape[1]
+            self._rot_pad[:] = 0.0
+            self._rot_pad[:c, :dim] = rot
+            self._codes[c:] = 0
+            self._adj_rot[:] = _SENTINEL
+            self._adj_codes[:] = 0
+            self._adj_ids[:] = -1
+            self._requantize()
+            self.ledger.requantizes -= 1  # restore derivation, not a clip
+        self._bump()
+        return self
+
+
+# ---------------------------------------------------------------------------
+# Drift watchdog
+# ---------------------------------------------------------------------------
+
+
+class DriftWatchdog:
+    """DADE staleness detector + recalibration swap (tentpole part 3).
+
+    Maintains a reservoir sample (Vitter's algorithm R, seeded — replays
+    are deterministic) of the ORIGINAL-space live corpus.  ``check()`` runs
+    the paper's hypothesis test in reverse (:func:`calibration.
+    violation_rates`): the observed per-checkpoint false-prune rate on the
+    reservoir.  Calibration promises ~``p_s``; when the worst non-final
+    checkpoint exceeds ``fire_factor * p_s`` the table is stale and
+    :meth:`maybe_recalibrate` refits it on the reservoir — swapping ONLY if
+    a paired parity proof passes: violation rates of the new table, on the
+    SAME sampled pairs, must restore the band and not regress the old
+    table's.  The transform is never refit (slabs depend on it); a
+    ``stale_transform`` chaos fault suppresses the swap to drill the
+    no-recalibration regime."""
+
+    def __init__(self, data, *, reservoir: int = 1024, p_s: float = 0.1,
+                 fire_factor: float = 3.0, num_pairs: int = 2048,
+                 seed: int = 0):
+        data = np.asarray(data, np.float32)
+        self.p_s = float(p_s)
+        self.fire_factor = float(fire_factor)
+        self.num_pairs = int(num_pairs)
+        self._rng = np.random.default_rng(seed)
+        self._key = jax.random.PRNGKey(seed)
+        r = min(int(reservoir), data.shape[0])
+        sel = self._rng.choice(data.shape[0], size=r, replace=False)
+        self._buf = data[np.sort(sel)].copy()
+        self._seen = data.shape[0]
+        self.checks = 0
+        self.fired = 0
+        self.recalibrations = 0
+        self.suppressed = 0
+        self.parity_failed = 0
+        self.last_stat = 0.0
+
+    def observe(self, vec) -> None:
+        """Fold one upserted vector into the reservoir (algorithm R)."""
+        self._seen += 1
+        j = int(self._rng.integers(0, self._seen))
+        if j < self._buf.shape[0]:
+            self._buf[j] = np.asarray(vec, np.float32)
+
+    def _rates(self, table, transform, key) -> np.ndarray:
+        return np.asarray(calib.violation_rates(
+            table, transform, jnp.asarray(self._buf), key,
+            num_pairs=self.num_pairs))
+
+    def check(self, estimator: Estimator) -> dict:
+        """Measure staleness; returns a report (no side effects on the
+        index).  ``stat`` is the worst non-final checkpoint's violation
+        rate; ``fired`` when it escapes the ``fire_factor * p_s`` band."""
+        self.checks += 1
+        table = estimator.table
+        if table.num_steps < 2:
+            return {"stat": 0.0, "threshold": 0.0, "fired": False}
+        key = jax.random.fold_in(self._key, self.checks)
+        rates = self._rates(table, estimator.transform, key)
+        stat = float(rates[:-1].max())
+        self.last_stat = stat
+        thr = self.fire_factor * self.p_s
+        fired = stat > thr
+        if fired:
+            self.fired += 1
+        return {"stat": stat, "threshold": thr, "fired": fired, "_key": key}
+
+    def maybe_recalibrate(self, holder: _MutableBase) -> dict:
+        """Check; on fire, recalibrate on the reservoir and hot-swap the
+        holder's table iff the paired parity proof passes.  Honors the
+        ``stale_transform`` chaos fault (swap suppressed)."""
+        est = holder.estimator
+        report = self.check(est)
+        key = report.pop("_key", None)
+        report.update(swapped=False, suppressed=False, parity_ok=None)
+        if not report["fired"]:
+            return report
+        if current_chaos().stale_transform_active():
+            self.suppressed += 1
+            report["suppressed"] = True
+            return report
+        table = est.table
+        delta_d = int(np.asarray(table.dims)[0])
+        # Recalibration pairs come from a stream disjoint from the check
+        # stream (two-level fold; fold_in data must be uint32-range).
+        recal_key = jax.random.fold_in(
+            jax.random.fold_in(self._key, 0x7ec4), self.checks)
+        new_table = calib.calibrate(
+            est.transform, jnp.asarray(self._buf), recal_key,
+            p_s=self.p_s, delta_d=delta_d, num_pairs=max(self.num_pairs, 2048))
+        # Paired parity proof: same key -> same pairs for both tables.
+        old_rates = self._rates(table, est.transform, key)
+        new_rates = self._rates(new_table, est.transform, key)
+        worst_new = float(new_rates[:-1].max())
+        parity = (worst_new <= self.fire_factor * self.p_s
+                  and worst_new <= float(old_rates[:-1].max()))
+        report["parity_ok"] = parity
+        if not parity:
+            self.parity_failed += 1
+            return report
+        holder.set_estimator(dataclasses.replace(est, table=new_table))
+        self.recalibrations += 1
+        report["swapped"] = True
+        return report
+
+    def as_metrics(self, prefix: str = "calib.drift") -> dict[str, float]:
+        return {
+            f"{prefix}.checks": float(self.checks),
+            f"{prefix}.fired": float(self.fired),
+            f"{prefix}.recalibrations": float(self.recalibrations),
+            f"{prefix}.suppressed": float(self.suppressed),
+            f"{prefix}.parity_failed": float(self.parity_failed),
+            f"{prefix}.stat": float(self.last_stat),
+        }

@@ -27,6 +27,18 @@ queue overload, snapshot corruption); ``--deadline-ms`` / ``--queue-watermark``
 snapshot; ``--verify-degraded-oracle`` asserts a post-failover engine is
 bit-identical to the surviving-corpus oracle.  docs/SERVING.md §6 is the
 degraded-mode runbook.
+
+Churn (``repro.index.mutable``): ``--mutate-rate M`` turns the graph route
+into a streaming mutable index — M mutations (3:1 upsert:delete, upserts
+drawn from the drifted distribution) interleave between requests, each
+write-ahead logged to ``--wal`` before it is applied; an existing log is
+replayed onto a fresh base at startup (the crash-recovery path, drilled by
+``--chaos torn_upsert``).  A drift watchdog checks DADE staleness every
+request and hot-swaps a recalibrated epsilon table behind a parity proof
+(suppressed under ``--chaos stale_transform``).  ``--verify-graph-oracle``
+here asserts the POST-CHURN index returns bit-identical ids to a
+from-scratch rebuild of the final corpus.  docs/SERVING.md §7 is the churn
+runbook.
 """
 
 import argparse
@@ -123,6 +135,23 @@ def main() -> None:
                          "estimator) from DIR instead of rebuilding, or "
                          "build once and save there; per-leaf sha256 digests "
                          "reject corrupted slabs and fall back to a rebuild")
+    ap.add_argument("--mutate-rate", type=float, default=0.0, metavar="MUTS",
+                    help="churn drill (--index graph, single replica): apply "
+                         "MUTS mutations between requests through the "
+                         "streaming mutable index (3:1 upsert:delete; "
+                         "upserts drawn from the drifted distribution so "
+                         "the DADE staleness watchdog has something to "
+                         "catch), write-ahead logged to --wal; reports "
+                         "recall under churn plus the mutate.* and "
+                         "calib.drift.* metric families")
+    ap.add_argument("--wal", default=None, metavar="PATH",
+                    help="mutation-log path for --mutate-rate (defaults to "
+                         "<--index-ckpt>/mutations.wal when a snapshot dir "
+                         "is given; unset with no snapshot dir = unlogged "
+                         "churn).  An existing log is REPLAYED onto a fresh "
+                         "base before serving — the crash-recovery path; a "
+                         "torn tail record (crash mid-append) is truncated "
+                         "and the mutation it never committed is dropped")
     ap.add_argument("--verify-degraded-oracle", action="store_true",
                     help="after a --chaos shard_death drill on the sharded "
                          "graph route, assert the degraded engine returns "
@@ -130,6 +159,14 @@ def main() -> None:
                          "(single-shard reference walk with the same "
                          "tombstones; exits nonzero on mismatch)")
     args = ap.parse_args()
+
+    if args.mutate_rate > 0 and args.index != "graph":
+        raise SystemExit("--mutate-rate requires --index graph (the "
+                         "streaming mutable index is the graph route)")
+    if args.mutate_rate > 0 and args.graph_shards != 1:
+        raise SystemExit("--mutate-rate serves a single replica "
+                         "(--graph-shards 1): mutable growth slabs are not "
+                         "corpus-sharded")
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
@@ -395,6 +432,261 @@ def main() -> None:
             _, gt = exact_knn(jnp.asarray(q), jnp.asarray(corpus), svc.k)
             payloads.append((prep(q), np.asarray(gt)))
         return payloads
+
+    if args.index == "graph" and args.mutate_rate > 0:
+        # Streaming churn route (ISSUE 8): the graph is a MutableGraph —
+        # upserts continue the builder's insertion sequence inside
+        # pre-reserved capacity slabs (array-bit-identical to a rebuild of
+        # the grown corpus), deletes tombstone.  Every mutation is
+        # write-ahead logged BEFORE it is applied, so a crash (drilled by
+        # --chaos torn_upsert, which tears a record mid-append) recovers by
+        # rebuilding the base and replaying the log — and the recovered
+        # index is the same index, provable against the rebuild oracle.
+        from repro.checkpoint.wal import MutationLog, replay_into
+        from repro.data.pipeline import drifted_vectors
+        from repro.index.graph import build_graph, search_graph_fused
+        from repro.index.mutable import DriftWatchdog, MutableGraph
+        from repro.kernels.ops import min_block_q
+        from repro.obs import record_drift, record_mutations
+        from repro.runtime.chaos import ChaosError
+
+        bq = min_block_q(jnp.int8) if on_tpu() else 8
+        g_m, g_efc = 16, max(2 * args.ef, 64)
+        n_mut = int(round(args.requests * args.mutate_rate))
+        cap = n + 2 * n_mut + 64
+        wal_path = args.wal or (
+            os.path.join(args.index_ckpt, "mutations.wal")
+            if args.index_ckpt else None)
+        # Upsert traffic comes from the drifted distribution (faster
+        # spectrum decay in the fitted basis), the regime where a stale
+        # epsilon table over-prunes — giving the watchdog a real signal.
+        pool = drifted_vectors(est.transform, max(n_mut, 1), seed=11)
+        rng_m = np.random.default_rng(13)
+
+        def fresh_base() -> MutableGraph:
+            return MutableGraph(corpus, m=g_m, ef_construction=g_efc,
+                                capacity=cap, estimator=est, quant="int8")
+
+        st: dict = {}
+
+        def boot() -> None:
+            """(Re)build serving state: fresh base + WAL replay.  Called at
+            startup and again after a torn-append crash — the recovered
+            index equals the pre-crash applied state (the torn record was
+            never applied, so truncating it is exactly correct)."""
+            st["log"] = MutationLog(wal_path) if wal_path else None
+            st["idx"] = fresh_base()
+            st["wd"] = DriftWatchdog(corpus, reservoir=min(1024, n),
+                                     p_s=svc.p_s, num_pairs=1024)
+            st["ups"] = []
+            log = st["log"]
+            if log is not None and (log.seq or log.recovered_torn):
+                recs = log.replay()
+                for rec in recs:
+                    if rec["op"] == "upsert":
+                        st["wd"].observe(rec["vec"])
+                        st["ups"].append(np.asarray(rec["vec"], np.float32))
+                counts = replay_into(st["idx"], recs)
+                reg.counter("serve.wal.replayed").add(len(recs))
+                if log.recovered_torn:
+                    reg.counter("serve.wal.recovered_torn").add(1)
+                print(f"wal: replayed {counts} from {wal_path}"
+                      + (" (torn tail truncated)" if log.recovered_torn
+                         else ""))
+            dead = {g for b, c in st["idx"].tombstones
+                    for g in range(b, b + c)}
+            st["live"] = [g for g in range(st["idx"].count) if g not in dead]
+
+        boot()
+
+        class _WalHolder:
+            """Append-before-apply for recalibration swaps: the new table
+            hits the log before the serving estimator, so replay reproduces
+            the exact estimator history too."""
+
+            @property
+            def estimator(self):
+                return st["idx"].estimator
+
+            def set_estimator(self, e) -> None:
+                if st["log"] is not None:
+                    st["log"].append_set_table(e.table)
+                st["idx"].set_estimator(e)
+
+        holder = _WalHolder()
+
+        def mutate_once() -> None:
+            idx, log = st["idx"], st["log"]
+            if st["live"] and rng_m.random() < 0.25:
+                gid = st["live"][int(rng_m.integers(len(st["live"])))]
+                if log is not None:
+                    log.append_delete(gid)
+                idx.delete(gid)
+                st["live"].remove(gid)
+                return
+            vec = pool[min(idx.ledger.upserts, len(pool) - 1)]
+            if idx.count >= idx.capacity:
+                # Refused mutations never reach the WAL: the log holds
+                # APPLIED operations only, so replay cannot diverge on a
+                # capacity boundary.
+                idx.ledger.applied += 1
+                idx.ledger.rejected += 1
+                return
+            if log is not None:
+                log.append_upsert(idx.count, vec)
+            gid = idx.upsert(vec)
+            st["wd"].observe(vec)
+            st["ups"].append(np.asarray(vec, np.float32))
+            st["live"].append(gid)
+
+        def crash_recover(e: Exception) -> None:
+            print(f"chaos: {e}")
+            if st["log"] is not None:
+                st["log"].close()
+            print("chaos: simulated crash — recovering (fresh base + wal "
+                  "replay)")
+            boot()
+
+        def apply_mutations(count: int) -> None:
+            for _ in range(count):
+                try:
+                    mutate_once()
+                except ChaosError as e:
+                    crash_recover(e)
+                    mutate_once()  # the fault is one-shot; retry commits
+
+        def drift_tick() -> None:
+            try:
+                rep = st["wd"].maybe_recalibrate(holder)
+            except ChaosError as e:
+                crash_recover(e)
+                return
+            if rep["swapped"]:
+                print(f"drift: stat={rep['stat']:.3f} > "
+                      f"{rep['threshold']:.3f}; epsilon table recalibrated "
+                      f"and hot-swapped (parity proof passed)")
+            elif rep.get("suppressed"):
+                print(f"drift: stat={rep['stat']:.3f} fired but swap "
+                      f"suppressed (stale_transform drill)")
+            elif rep["fired"]:
+                print(f"drift: fired (stat={rep['stat']:.3f}) but parity "
+                      f"proof failed; stale table kept")
+
+        def m_step(batch_np):
+            d, i, _ = st["idx"].search(
+                jnp.asarray(batch_np, jnp.float32), k=svc.k, ef=args.ef,
+                expand=args.expand, block_q=bq)
+            return np.asarray(d), np.asarray(i)
+
+        compile_ms = warmup(
+            m_step, np.asarray(
+                synthetic_queries(svc.query_batch, svc.dim, corpus,
+                                  seed=999), np.float32))
+
+        sched = make_scheduler(m_step)
+        lat = reg.histogram("serve.request.latency_ms")
+        reqs, gts, lat_ms = [], [], []
+        rng_q = np.random.default_rng(9)
+        deadline_s = args.deadline_ms / 1e3 if args.deadline_ms else None
+        t0 = time.perf_counter()
+        with current_tracer().span("serve.drive", churn=True):
+            for r in range(args.requests):
+                apply_mutations(int(round(args.mutate_rate)))
+                drift_tick()
+                nq = int(rng_q.integers(svc.query_batch // 2,
+                                        2 * svc.query_batch))
+                q = synthetic_queries(nq, svc.dim, corpus, seed=100 + r)
+                # Ground truth against the LIVE corpus at submit time —
+                # recall under churn is measured against what the index
+                # should currently know, not the frozen seed corpus.
+                live = np.asarray(sorted(st["live"]), np.int64)
+                rows = (np.concatenate([corpus, np.stack(st["ups"])])
+                        if st["ups"] else corpus)[live]
+                _, gt = exact_knn(jnp.asarray(q), jnp.asarray(rows), svc.k)
+                reqs.append(sched.submit(np.asarray(q, np.float32),
+                                         deadline_s=deadline_s))
+                gts.append(live[np.asarray(gt)])
+                done = sched.drain(force=True)
+                t_done = time.perf_counter()
+                for req in done:
+                    ms = (t_done - req.enqueued_at) * 1e3
+                    lat.observe(ms)
+                    lat_ms.append(ms)
+        dt = time.perf_counter() - t0
+
+        served, shed = serve_accounting(sched, reqs, gts)
+        recalls = request_recalls(served)
+        rec = float(np.mean(recalls)) if recalls else 0.0
+        total_q = sum(len(g) for _, g in served)
+        lat_note = latency_note(lat_ms)
+        idx, wd = st["idx"], st["wd"]
+        idx.ledger.check()
+        n_tomb = idx.count - idx.live_count
+        record_mutations(reg, idx.ledger, tombstones=n_tomb)
+        record_drift(reg, wd)
+        wal_records = st["log"].records_written if st["log"] else 0
+        if st["log"] is not None:
+            reg.counter("serve.wal.appended").add(wal_records)
+
+        if args.verify_graph_oracle:
+            # The churn acceptance check: the mutated index must return
+            # bit-identical ids to a from-scratch build_graph over the
+            # final corpus with the same tombstones (and the same — possibly
+            # recalibrated — estimator).
+            full = (np.concatenate([corpus, np.stack(st["ups"])])
+                    if st["ups"] else corpus)
+            ridx = build_graph(full, estimator=idx.estimator, m=g_m,
+                               ef_construction=g_efc, quant="int8")
+            vq = np.asarray(
+                synthetic_queries(svc.query_batch, svc.dim, corpus, seed=77),
+                np.float32)
+            t = idx.tombstones
+            dv, iv, _ = idx.search(jnp.asarray(vq), k=svc.k, ef=args.ef,
+                                   expand=args.expand, block_q=bq)
+            do, io_, _ = search_graph_fused(
+                ridx, jnp.asarray(vq), k=svc.k, ef=args.ef,
+                expand=args.expand, block_q=bq, tombstones=t, exclude=t)
+            if not np.array_equal(np.asarray(iv), np.asarray(io_)):
+                raise SystemExit(
+                    "post-churn: mutated index ids diverge from the "
+                    "from-scratch rebuild oracle")
+            if not np.allclose(np.asarray(dv), np.asarray(do),
+                               rtol=5e-5, atol=1e-5):
+                raise SystemExit(
+                    "post-churn: mutated index distances diverge from the "
+                    "from-scratch rebuild oracle")
+            print(f"verify-churn: mutated index ({idx.ledger.upserts} "
+                  f"upserts, {idx.ledger.deletes} deletes, "
+                  f"{idx.ledger.requantizes} requantizes) bit-identical to "
+                  f"the from-scratch rebuild ({svc.query_batch} queries)")
+
+        print(f"method={args.method} index=graph churn corpus={n} "
+              f"live={idx.live_count} requests={len(served)}/"
+              f"{sched.stats['submitted']} rows={total_q} "
+              f"QPS={total_q/dt:.0f} recall@{svc.k}={rec:.3f} "
+              f"compile_ms={compile_ms:.0f} "
+              f"mutate(applied={idx.ledger.applied} "
+              f"upserts={idx.ledger.upserts} deletes={idx.ledger.deletes} "
+              f"rejected={idx.ledger.rejected} "
+              f"requantize={idx.ledger.requantizes} tombstones={n_tomb}) "
+              f"wal(records={wal_records}) "
+              f"drift(checks={wd.checks} fired={wd.fired} "
+              f"recal={wd.recalibrations} suppressed={wd.suppressed} "
+              f"stat={wd.last_stat:.3f})"
+              f"{shed_note(sched)}{lat_note}")
+        emit({"qps": total_q / dt, "recall": rec,
+              "compile_ms": compile_ms, "queries": total_q,
+              "requests_submitted": sched.stats["submitted"],
+              "requests_served": sched.stats["served"],
+              "requests_shed": shed,
+              "mutations_applied": idx.ledger.applied,
+              "tombstones": n_tomb,
+              "drift_fired": wd.fired,
+              "drift_recalibrations": wd.recalibrations,
+              "wal_records": wal_records})
+        if st["log"] is not None:
+            st["log"].close()
+        return
 
     if args.index == "graph":
         # Batched beam-scan route: host-built NSW graph, one megakernel

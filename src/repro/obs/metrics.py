@@ -36,7 +36,7 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "merge_snapshots",
     "LATENCY_BUCKETS_MS",
     "record_fused_scan", "record_graph_scan", "record_graph_sharded",
-    "record_fused_serve_totals",
+    "record_fused_serve_totals", "record_mutations", "record_drift",
 ]
 
 _NAME_RE = re.compile(r"^[a-z0-9_]+(\.[a-z0-9_]+)*$")
@@ -329,6 +329,42 @@ def record_graph_sharded(reg: MetricsRegistry, st, *, queries: int) -> None:
             st.tombstoned_nodes)
         reg.gauge("graph.sharded.degraded.num_dead").set(
             float(len(st.dead_shards)))
+
+
+def record_mutations(reg: MetricsRegistry, ledger, *,
+                     tombstones: int | None = None) -> None:
+    """Feed a ``MutationLedger`` (``index.mutable``) into the registry as
+    the ``mutate.*`` family.  The ledger is cumulative — call this ONCE per
+    snapshot (the serve driver does, at drain), or feed per-interval delta
+    ledgers.  The family is closed by construction and the schema check
+    enforces it on the emitted snapshot:
+    ``mutate.applied == mutate.upserts + mutate.deletes + mutate.rejected``.
+    ``tombstones`` (live deleted-row count) lands as a gauge; when the
+    sharded engine also reports ``graph.sharded.degraded.tombstoned_nodes``
+    the schema check asserts the engine tombstoned at least these rows."""
+    reg.counter("mutate.applied").add(ledger.applied)
+    reg.counter("mutate.upserts").add(ledger.upserts)
+    reg.counter("mutate.deletes").add(ledger.deletes)
+    reg.counter("mutate.rejected").add(ledger.rejected)
+    reg.counter("mutate.requantize").add(ledger.requantizes)
+    if tombstones is not None:
+        reg.gauge("mutate.tombstones").set(float(tombstones))
+
+
+def record_drift(reg: MetricsRegistry, watchdog) -> None:
+    """Feed a ``DriftWatchdog`` (``index.mutable``) into the registry as
+    the ``calib.drift.*`` family.  Cumulative like the mutation ledger —
+    once per snapshot.  ``calib.drift.stat`` is the last measured worst
+    non-final-checkpoint violation rate (the staleness statistic); the
+    counters tell the recalibration story: checks taken, threshold
+    crossings, completed swaps, chaos-suppressed swaps, and swaps refused
+    by the paired parity proof."""
+    reg.counter("calib.drift.checks").add(watchdog.checks)
+    reg.counter("calib.drift.fired").add(watchdog.fired)
+    reg.counter("calib.drift.recalibrations").add(watchdog.recalibrations)
+    reg.counter("calib.drift.suppressed").add(watchdog.suppressed)
+    reg.counter("calib.drift.parity_failed").add(watchdog.parity_failed)
+    reg.gauge("calib.drift.stat").set(float(watchdog.last_stat))
 
 
 def record_fused_serve_totals(reg: MetricsRegistry, *, s1_tiles: float,

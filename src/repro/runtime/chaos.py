@@ -32,6 +32,15 @@ Fault kinds (specs parse from ``kind[:key=val]*`` joined by ``;``):
   * ``slab_corruption`` — flips one byte of an index-snapshot leaf before
     restore (``serve.py --index-ckpt``), proving the per-leaf sha256
     digests catch rotten slabs and the service falls back to a rebuild.
+  * ``torn_upsert``    — the mutation log (``checkpoint.wal``) writes a
+    deliberately truncated record and raises mid-append: the crash a
+    power cut leaves behind.  Recovery must detect the torn tail by
+    digest, truncate it, and replay to the exact pre-crash index
+    (``serve.py --mutate-rate`` drills this).
+  * ``stale_transform`` — suppresses the drift watchdog's recalibration
+    swap (``index.mutable``): the DADE epsilon table stays stale while
+    the corpus drifts — the silent-erosion regime fig10 prices against
+    the recalibrated run.
 
 Every fired fault is appended to ``ChaosController.events`` and counted
 under ``serve.fault.*`` when a ``repro.obs`` registry is attached, so a
@@ -56,13 +65,15 @@ __all__ = [
 ]
 
 FAULT_KINDS = ("shard_death", "shard_stall", "step_error", "queue_overload",
-               "slab_corruption")
+               "slab_corruption", "torn_upsert", "stale_transform")
 
-# Per-kind default firing budgets (-1 = unlimited).  Death and overload are
-# states, not events — once armed they hold; stalls and step errors are
-# discrete firings that default to one occurrence unless the spec says more.
+# Per-kind default firing budgets (-1 = unlimited).  Death, overload, and a
+# stale transform are states, not events — once armed they hold; stalls,
+# step errors, torn upserts, and slab corruption are discrete firings that
+# default to one occurrence unless the spec says more.
 _DEFAULT_COUNT = {"shard_death": -1, "shard_stall": 1, "step_error": 1,
-                  "queue_overload": -1, "slab_corruption": 1}
+                  "queue_overload": -1, "slab_corruption": 1,
+                  "torn_upsert": 1, "stale_transform": -1}
 
 
 class ChaosError(RuntimeError):
@@ -165,6 +176,12 @@ class NullChaos:
 
     def take_corruption(self):
         return None
+
+    def take_torn_upsert(self):
+        return None
+
+    def stale_transform_active(self) -> bool:
+        return False
 
 
 NULL_CHAOS = NullChaos()
@@ -294,6 +311,37 @@ class ChaosController:
             self._fire(i, "serve.fault.slab_corruption", leaf=spec.leaf)
             return spec
         return None
+
+    def take_torn_upsert(self) -> FaultSpec | None:
+        """Pop an armed ``torn_upsert`` fault (one-shot): the mutation log
+        (``checkpoint.wal``) truncates the record it is appending and
+        raises ``ChaosError`` — the torn-tail crash WAL replay must
+        recover from.  Mutations apply BETWEEN dispatched batches, so like
+        ``take_corruption`` this arms at ``steps >= after`` (``after=2``
+        = two healthy batches, then the crash before the next one)."""
+        for i, spec in enumerate(self.specs):
+            if spec.kind != "torn_upsert" or self.steps < spec.after:
+                continue
+            if not self._spend(i):
+                continue
+            self._fire(i, "serve.fault.torn_upsert")
+            return spec
+        return None
+
+    def stale_transform_active(self) -> bool:
+        """True while a ``stale_transform`` fault is armed: the drift
+        watchdog still measures staleness but its recalibration swap is
+        suppressed — serving continues on the stale epsilon table (the
+        no-recalibration regime fig10 prices).  State, not event; the
+        first suppressed swap is announced and counted once."""
+        for i, spec in enumerate(self.specs):
+            if spec.kind != "stale_transform" or not self._armed(spec):
+                continue
+            if i not in self._announced:
+                self._announced.add(i)
+                self._fire(i, "serve.fault.stale_transform")
+            return True
+        return False
 
 
 def corrupt_checkpoint_leaf(step_dir: str, *, leaf: int = 0) -> str:

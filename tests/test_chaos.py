@@ -252,11 +252,27 @@ def test_failover_rejects_impossible_configs(small_graph, queries):
     q = jnp.asarray(np.asarray(queries)[:8, :corpus.shape[1]])
     with pytest.raises(ValueError, match="every node is tombstoned"):
         _search(gidx, q, shards=2, tombs=((0, corpus.shape[0]),))
-    with pytest.raises(ValueError, match="seed_r"):
-        _search(gidx, q, shards=2, tombs=((0, 120),), seed_r=True)
     from repro.index.graph import dead_shard_tombstones
     with pytest.raises(ValueError):
         dead_shard_tombstones(corpus.shape[0], 2, (5,))  # shard out of range
+
+
+def test_failover_seed_r_composes_with_tombstones(small_graph, queries):
+    # Regression (ISSUE 8): seed_r + tombstones used to be rejected
+    # outright.  The threshold seed now samples alive neighbours only, so
+    # the composed run must stay bit-identical to the surviving-corpus
+    # oracle — and with ``exclude`` (the mutable-index delete semantics,
+    # what MutableGraph.search passes) no deleted id may surface.
+    gidx, corpus = small_graph
+    q = jnp.asarray(np.asarray(queries)[:8, :corpus.shape[1]])
+    tombs = ((0, 120),)
+    d_deg, i_deg, _ = _search(gidx, q, shards=2, tombs=tombs, seed_r=True,
+                              exclude=tombs)
+    d_ora, i_ora, _ = _search(gidx, q, shards=1, tombs=tombs, use_ref=True,
+                              seed_r=True, exclude=tombs)
+    np.testing.assert_array_equal(i_deg, i_ora)
+    np.testing.assert_allclose(d_deg, d_ora, rtol=5e-5, atol=1e-5)
+    assert not np.any((i_deg >= 0) & (i_deg < 120))
 
 
 def test_disabled_chaos_is_bit_identical(small_graph, queries):

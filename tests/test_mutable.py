@@ -1,0 +1,510 @@
+"""Streaming mutable index (ISSUE 8): rebuild equivalence, crash-safe WAL,
+drift watchdog, retention GC.
+
+The tentpole contracts under test:
+
+  * a mutated index equals a from-scratch rebuild of the final corpus —
+    for the graph at the ARRAY level (upserts replay the builder's exact
+    arithmetic, so adjacency/codes/scales are bit-identical), for flat/IVF
+    at the search level with global-id remapping;
+  * recovery = base snapshot + WAL replay is bit-identical to the
+    uninterrupted run, including through a ``torn_upsert`` chaos crash
+    (truncated record mid-append) and a manually torn tail; a digest
+    mismatch on a COMPLETE record is corruption and refuses, loudly;
+  * the drift watchdog fires on drifted upsert traffic, recalibrates on
+    its reservoir, and hot-swaps only behind the paired parity proof —
+    and the ``stale_transform`` chaos fault suppresses the swap;
+  * ``CheckpointManager`` retention prunes ``save_named`` steps and never
+    resolves (and eventually sweeps) torn step directories.
+"""
+
+import json
+import os
+import struct
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.wal import MutationLog, replay_into
+from repro.core.estimators import build_estimator
+from repro.data.pipeline import drifted_vectors
+from repro.index.flat import build_flat, search_flat
+from repro.index.graph import build_graph, search_graph_fused
+from repro.index.ivf import search_ivf
+from repro.index.mutable import (
+    DriftWatchdog, MutableFlat, MutableGraph, MutableIVF, ids_to_ranges)
+from repro.runtime.chaos import ChaosError, parse_chaos, use_chaos
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_ids_to_ranges_merges_runs():
+    assert ids_to_ranges([]) == ()
+    assert ids_to_ranges([3]) == ((3, 1),)
+    assert ids_to_ranges([5, 3, 4, 9, 11, 12]) == ((3, 3), (9, 1), (11, 2))
+
+
+# ---- graph: array-level rebuild equivalence --------------------------------
+
+
+@pytest.fixture(scope="module")
+def churned_graph(aniso_corpus):
+    """A quantized MutableGraph after 30 upserts (one forcing a scale clip
+    -> eager requantization) plus the from-scratch rebuild of the
+    concatenated corpus under the SAME estimator."""
+    corpus = np.asarray(aniso_corpus)[:160]
+    extra = np.asarray(aniso_corpus)[160:190].copy()
+    extra[7] = 3.0 * extra[7]  # guaranteed outside the fitted int8 envelope
+    est = build_estimator("dade", jnp.asarray(corpus), jax.random.PRNGKey(0),
+                          delta_d=16)
+    mg = MutableGraph(corpus, m=8, ef_construction=24, estimator=est,
+                      quant="int8", capacity=220)
+    for row in extra:
+        assert mg.upsert(row) >= 0
+    ref = build_graph(np.concatenate([corpus, extra]), estimator=est,
+                      m=8, ef_construction=24, quant="int8")
+    return mg, ref, corpus, extra
+
+
+def test_graph_upserts_bit_identical_to_rebuild(churned_graph):
+    mg, ref, corpus, extra = churned_graph
+    assert mg.ledger.requantizes >= 1  # the clip row actually clipped
+    mg.ledger.check()
+    idx = mg.index
+    assert int(idx.entry) == int(ref.entry)
+    np.testing.assert_array_equal(np.asarray(idx.neighbors),
+                                  np.asarray(ref.neighbors))
+    np.testing.assert_array_equal(np.asarray(idx.corpus_rot),
+                                  np.asarray(ref.corpus_rot))
+    # quantized mirrors: requantize-on-clip must land on the exact scales a
+    # rebuild fits, so every code slab matches bit-for-bit
+    np.testing.assert_array_equal(np.asarray(idx.qscales),
+                                  np.asarray(ref.qscales))
+    np.testing.assert_array_equal(np.asarray(idx.corpus_q),
+                                  np.asarray(ref.corpus_q))
+    np.testing.assert_array_equal(np.asarray(idx.gscales),
+                                  np.asarray(ref.gscales))
+    np.testing.assert_array_equal(np.asarray(idx.adj_ids),
+                                  np.asarray(ref.adj_ids))
+    np.testing.assert_array_equal(np.asarray(idx.adj_codes),
+                                  np.asarray(ref.adj_codes))
+    np.testing.assert_array_equal(np.asarray(idx.adj_rot),
+                                  np.asarray(ref.adj_rot))
+
+
+def test_graph_deletes_search_identical_to_rebuild(churned_graph, queries):
+    mg, ref, corpus, extra = churned_graph
+    doomed = [0, 1, 2, 37, 161, 185]
+    for gid in doomed:
+        assert mg.delete(gid)
+    assert not mg.delete(37)       # double delete refused
+    assert not mg.delete(10**6)    # unknown id refused
+    assert mg.ledger.rejected == 2
+    mg.ledger.check()
+    assert mg.live_count == mg.count - len(doomed)
+    assert mg.tombstones == ids_to_ranges(doomed)
+
+    q = jnp.asarray(np.asarray(queries)[:8, : corpus.shape[1]])
+    kw = dict(k=5, ef=16, expand=2, block_q=8)
+    d_mut, i_mut, _ = mg.search(q, **kw)
+    t = mg.tombstones
+    d_reb, i_reb, _ = search_graph_fused(ref, q, tombstones=t, exclude=t, **kw)
+    np.testing.assert_array_equal(np.asarray(i_mut), np.asarray(i_reb))
+    np.testing.assert_allclose(np.asarray(d_mut), np.asarray(d_reb),
+                               rtol=5e-5, atol=1e-5)
+    assert not np.isin(np.asarray(i_mut), doomed).any()
+
+
+def test_graph_snapshot_roundtrip(churned_graph):
+    mg, _, _, _ = churned_graph
+    arrays, extra = mg.snapshot_arrays()
+    mg2 = MutableGraph.from_snapshot(arrays, extra, mg.estimator,
+                                     quant="int8")
+    assert (mg2.count, mg2.live_count) == (mg.count, mg.live_count)
+    assert mg2.ledger == mg.ledger
+    np.testing.assert_array_equal(np.asarray(mg2.index.neighbors),
+                                  np.asarray(mg.index.neighbors))
+    np.testing.assert_array_equal(np.asarray(mg2.index.corpus_q),
+                                  np.asarray(mg.index.corpus_q))
+    assert int(mg2.index.entry) == int(mg.index.entry)
+
+
+def test_graph_capacity_refusal(aniso_corpus):
+    corpus = np.asarray(aniso_corpus)[:40]
+    est = build_estimator("dade", jnp.asarray(corpus), jax.random.PRNGKey(0),
+                          delta_d=16)
+    mg = MutableGraph(corpus, m=4, ef_construction=8, estimator=est,
+                      capacity=41)
+    assert mg.upsert(corpus[0]) == 40
+    assert mg.upsert(corpus[1]) == -1  # slab full: refused, never applied
+    assert mg.ledger.rejected == 1
+    mg.ledger.check()
+
+
+# ---- flat / IVF: search-level rebuild equivalence --------------------------
+
+
+def test_flat_mutations_match_fresh_build(aniso_corpus, queries):
+    corpus = np.asarray(aniso_corpus)[:200]
+    extra = np.asarray(aniso_corpus)[200:230]
+    est = build_estimator("dade", jnp.asarray(corpus), jax.random.PRNGKey(0),
+                          delta_d=16)
+    mf = MutableFlat(corpus, estimator=est, capacity=260)
+    for row in extra:
+        assert mf.upsert(row) >= 0
+    for gid in (0, 5, 201, 17):
+        assert mf.delete(gid)
+    mf.ledger.check()
+
+    _, live = mf.view()
+    final = np.concatenate([corpus, extra])[live]
+    fresh = build_flat(jnp.asarray(final), estimator=est)
+    q = jnp.asarray(np.asarray(queries)[:8, : corpus.shape[1]])
+    res_m = mf.search(q, k=5)
+    res_f = search_flat(fresh, q, k=5)
+    np.testing.assert_array_equal(np.asarray(res_m.ids),
+                                  live[np.asarray(res_f.ids)])
+    np.testing.assert_array_equal(np.asarray(res_m.dists),
+                                  np.asarray(res_f.dists))
+    assert not np.isin(np.asarray(res_m.ids), [0, 5, 201, 17]).any()
+
+
+def test_flat_requantize_on_clip(aniso_corpus):
+    corpus = np.asarray(aniso_corpus)[:120]
+    est = build_estimator("dade", jnp.asarray(corpus), jax.random.PRNGKey(0),
+                          delta_d=16)
+    mf = MutableFlat(corpus, estimator=est, quant="int8", capacity=150)
+    assert mf.upsert(corpus[3]) >= 0          # inside the envelope: no refit
+    assert mf.ledger.requantizes == 0
+    assert mf.upsert(4.0 * corpus[3]) >= 0    # clips: eager full re-encode
+    assert mf.ledger.requantizes == 1
+    from repro.quant.scalar import fit_scales, quantize
+    rot = jnp.asarray(mf._rot[: mf.count])
+    np.testing.assert_array_equal(mf._qscales, np.asarray(fit_scales(rot)))
+    np.testing.assert_array_equal(
+        mf._codes[: mf.count],
+        np.asarray(quantize(rot, jnp.asarray(mf._qscales))))
+
+
+def test_ivf_mutated_matches_compact_rebuild(aniso_corpus, queries):
+    corpus = np.asarray(aniso_corpus)[:256]
+    extra = np.asarray(aniso_corpus)[256:296]
+    mi = MutableIVF(jnp.asarray(corpus), n_clusters=8, growth=128,
+                    delta_d=16, key=jax.random.PRNGKey(0))
+    for row in extra:
+        assert mi.upsert(row) >= 0
+    for gid in (3, 60, 257, 280):
+        assert mi.delete(gid)
+    assert not mi.delete(3)  # double delete refused
+    mi.ledger.check()
+    assert mi.live_count == 256 + 40 - 4
+
+    q = jnp.asarray(np.asarray(queries)[:8, : corpus.shape[1]])
+    d_m, i_m, _ = search_ivf(mi.view(), q, k=5, n_probe=8)
+    d_c, i_c, _ = search_ivf(mi.compact(), q, k=5, n_probe=8)
+    np.testing.assert_array_equal(np.asarray(i_m), np.asarray(i_c))
+    np.testing.assert_allclose(np.asarray(d_m), np.asarray(d_c),
+                               rtol=1e-6, atol=1e-6)
+    assert not np.isin(np.asarray(i_m), [3, 60, 257, 280]).any()
+
+
+def test_ivf_hole_reuse_and_reject_on_full(aniso_corpus):
+    corpus = np.asarray(aniso_corpus)[:100]
+    mi = MutableIVF(jnp.asarray(corpus), n_clusters=1, growth=128,
+                    delta_d=16, key=jax.random.PRNGKey(0))
+    # a delete punches a hole that the next upsert must reuse (the slab
+    # high-water mark does not move)
+    assert mi.delete(10)
+    fill_before = int(mi._fill[0])
+    gid = mi.upsert(corpus[10])
+    assert gid == 100 and int(mi._fill[0]) == fill_before
+    # fill the single cluster's slab to capacity: the overflowing upsert is
+    # REFUSED (spilling to a wrong cluster would break probe ordering)
+    while mi.upsert(corpus[gid % 100]) >= 0:
+        gid += 1
+    assert mi.ledger.rejected == 1
+    assert mi.upsert(corpus[0]) == -1
+    assert mi.ledger.rejected == 2
+    mi.ledger.check()
+
+
+# ---- WAL: crash-safe mutation log ------------------------------------------
+
+
+def _small_graph_base(aniso_corpus):
+    corpus = np.asarray(aniso_corpus)[:60]
+    est = build_estimator("dade", jnp.asarray(corpus), jax.random.PRNGKey(0),
+                          delta_d=16)
+    return corpus, lambda: MutableGraph(corpus, m=6, ef_construction=16,
+                                        estimator=est, capacity=90)
+
+
+def _logged_churn(mg, log, corpus, n_up=6, deletes=(2, 11)):
+    """Apply a churn sequence write-ahead: every record lands in the log
+    BEFORE the mutation is applied (the serve loop's discipline)."""
+    for i in range(n_up):
+        vec = corpus[i] + 0.01 * (i + 1)
+        gid = mg.count
+        log.append_upsert(gid, vec)
+        assert mg.upsert(vec) == gid
+    for gid in deletes:
+        log.append_delete(gid)
+        assert mg.delete(gid)
+
+
+def _assert_same_graph(a, b):
+    assert (a.count, a.live_count) == (b.count, b.live_count)
+    assert a.tombstones == b.tombstones
+    np.testing.assert_array_equal(np.asarray(a.index.neighbors),
+                                  np.asarray(b.index.neighbors))
+    np.testing.assert_array_equal(np.asarray(a.index.corpus_rot),
+                                  np.asarray(b.index.corpus_rot))
+    assert int(a.index.entry) == int(b.index.entry)
+
+
+def test_wal_roundtrip_replays_bit_identical(aniso_corpus, tmp_path):
+    corpus, base = _small_graph_base(aniso_corpus)
+    live, log = base(), MutationLog(str(tmp_path / "m.wal"))
+    _logged_churn(live, log, corpus)
+    log.append_set_table(live.estimator.table)  # recalibration swaps log too
+    log.close()
+
+    log2 = MutationLog(str(tmp_path / "m.wal"))
+    assert not log2.recovered_torn
+    records = log2.replay()
+    assert [r["op"] for r in records] == ["upsert"] * 6 + ["delete"] * 2 + [
+        "set_table"]
+    recovered = base()
+    counts = replay_into(recovered, records)
+    assert counts == {"upsert": 6, "delete": 2, "set_table": 1}
+    _assert_same_graph(recovered, live)
+    # the logged table round-trips bit-exactly (base64 raw bytes, no text)
+    np.testing.assert_array_equal(
+        np.asarray(recovered.estimator.table.eps),
+        np.asarray(live.estimator.table.eps))
+    # the append cursor continues past the replayed history
+    assert log2.append_delete(0) == 10
+    log2.close()
+
+
+def test_wal_torn_tail_truncated_on_open(aniso_corpus, tmp_path):
+    corpus, base = _small_graph_base(aniso_corpus)
+    live, log = base(), MutationLog(str(tmp_path / "m.wal"))
+    _logged_churn(live, log, corpus, n_up=4, deletes=())
+    log.close()
+    size = os.path.getsize(tmp_path / "m.wal")
+    with open(tmp_path / "m.wal", "ab") as f:  # a torn fifth record
+        f.write(struct.pack(">I", 100) + b"partial")
+
+    log2 = MutationLog(str(tmp_path / "m.wal"))
+    assert log2.recovered_torn
+    assert os.path.getsize(tmp_path / "m.wal") == size  # tail truncated
+    assert len(log2.replay()) == 4
+    log2.close()
+
+
+def test_wal_digest_mismatch_is_corruption_not_crash(aniso_corpus, tmp_path):
+    corpus, base = _small_graph_base(aniso_corpus)
+    live, log = base(), MutationLog(str(tmp_path / "m.wal"))
+    _logged_churn(live, log, corpus, n_up=3, deletes=())
+    log.close()
+    with open(tmp_path / "m.wal", "r+b") as f:  # flip a byte INSIDE record 1
+        f.seek(8)
+        b = f.read(1)
+        f.seek(8)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(IOError, match="digest mismatch"):
+        MutationLog(str(tmp_path / "m.wal"))
+
+
+def test_wal_torn_upsert_chaos_crash_recovery(aniso_corpus, tmp_path):
+    corpus, base = _small_graph_base(aniso_corpus)
+    live, log = base(), MutationLog(str(tmp_path / "m.wal"))
+    _logged_churn(live, log, corpus, n_up=5, deletes=(2,))
+    with use_chaos(parse_chaos("torn_upsert")):
+        with pytest.raises(ChaosError, match="torn upsert"):
+            log.append_upsert(live.count, corpus[0])
+    # write-ahead discipline: the torn record's mutation was never applied,
+    # so the log's complete prefix IS the live state
+    log.close()
+
+    log2 = MutationLog(str(tmp_path / "m.wal"))
+    assert log2.recovered_torn
+    records = log2.replay()
+    assert len(records) == 6
+    recovered = base()
+    replay_into(recovered, records)
+    _assert_same_graph(recovered, live)
+    # the recovered log keeps accepting appends at the right sequence
+    assert log2.append_upsert(recovered.count, corpus[1]) == 7
+    log2.close()
+
+
+def test_wal_replay_divergence_detected(aniso_corpus, tmp_path):
+    corpus, base = _small_graph_base(aniso_corpus)
+    live, log = base(), MutationLog(str(tmp_path / "m.wal"))
+    _logged_churn(live, log, corpus, n_up=2, deletes=())
+    log.close()
+    records = MutationLog(str(tmp_path / "m.wal")).replay()
+    est = live.estimator
+    wrong_base = MutableGraph(corpus[:59], m=6, ef_construction=16,
+                              estimator=est, capacity=90)
+    with pytest.raises(ValueError, match="wal replay diverged"):
+        replay_into(wrong_base, records)
+
+
+# ---- drift watchdog --------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def drift_setup(aniso_corpus):
+    sub = np.asarray(aniso_corpus)[:400]
+    est = build_estimator("dade", jnp.asarray(sub), jax.random.PRNGKey(0),
+                          delta_d=16, p_s=0.05)
+    drift = np.asarray(drifted_vectors(est.transform, 400, extra_decay=0.15,
+                                       seed=11))
+    return sub, est, drift
+
+
+def _observed_watchdog(sub, drift, **kw):
+    wd = DriftWatchdog(sub, reservoir=256, p_s=0.05, num_pairs=1024, seed=3,
+                       **kw)
+    for row in drift:
+        wd.observe(row)
+    return wd
+
+
+def test_watchdog_quiet_on_fresh_table(drift_setup):
+    sub, est, _ = drift_setup
+    wd = DriftWatchdog(sub, reservoir=256, p_s=0.05, num_pairs=1024, seed=3)
+    rep = wd.check(est)
+    assert not rep["fired"]
+    assert rep["stat"] <= rep["threshold"]
+
+
+def test_watchdog_fires_and_recalibrates_with_parity(drift_setup):
+    sub, est, drift = drift_setup
+    holder = MutableFlat(sub, estimator=est)
+    wd = _observed_watchdog(sub, drift)
+    rep = wd.maybe_recalibrate(holder)
+    assert rep["fired"] and rep["parity_ok"] and rep["swapped"]
+    assert holder.estimator is not est           # table hot-swapped
+    assert holder.estimator.transform is est.transform  # rotation frozen
+    # the swap repaired the contract: staleness back inside the band
+    assert wd.check(holder.estimator)["stat"] <= rep["threshold"]
+    assert (wd.fired, wd.recalibrations, wd.suppressed) == (1, 1, 0)
+    m = wd.as_metrics()
+    assert m["calib.drift.recalibrations"] == 1.0
+
+
+def test_watchdog_stale_transform_chaos_suppresses_swap(drift_setup):
+    sub, est, drift = drift_setup
+    holder = MutableFlat(sub, estimator=est)
+    wd = _observed_watchdog(sub, drift)
+    chaos = parse_chaos("stale_transform")
+    with use_chaos(chaos):
+        chaos.on_engine_step()  # arm (state faults hold once steps > after)
+        rep = wd.maybe_recalibrate(holder)
+    assert rep["fired"] and rep["suppressed"] and not rep["swapped"]
+    assert holder.estimator is est  # still serving the stale table
+    assert wd.suppressed == 1 and wd.recalibrations == 0
+
+
+def test_set_estimator_rejects_changed_transform(aniso_corpus):
+    sub = np.asarray(aniso_corpus)[:80]
+    est = build_estimator("dade", jnp.asarray(sub), jax.random.PRNGKey(0),
+                          delta_d=16)
+    other = build_estimator("dade", jnp.asarray(sub[40:]),
+                            jax.random.PRNGKey(1), delta_d=16)
+    holder = MutableFlat(sub, estimator=est)
+    with pytest.raises(ValueError, match="transform"):
+        holder.set_estimator(other)
+
+
+# ---- checkpoint retention / torn step dirs ---------------------------------
+
+
+def test_manager_gc_prunes_save_named_and_skips_torn_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for step in (1, 2, 3):
+        mgr.save_named(step, {"a": np.arange(4) + step},
+                       extra={"step_tag": step})
+    assert mgr.all_steps() == [2, 3]  # keep=2 pruned step 1
+    assert not os.path.exists(tmp_path / "step_000000001")
+
+    # a torn step dir (no committed tree.json) must never resolve ...
+    os.makedirs(tmp_path / "step_000000004")
+    assert mgr.all_steps() == [2, 3]
+    assert mgr.latest_step() == 3
+    # ... and the next GC sweeps it
+    mgr.save_named(5, {"a": np.arange(4)})
+    assert not os.path.exists(tmp_path / "step_000000004")
+    assert mgr.all_steps() == [3, 5]
+
+    arrays, extra = mgr.restore_named(3)
+    np.testing.assert_array_equal(arrays["a"], np.arange(4) + 3)
+    assert extra["step_tag"] == 3
+
+
+# ---- metrics schema checker (mutation invariants) --------------------------
+
+
+def _schema_check(tmp_path, metrics, report=None):
+    doc = {
+        "schema_version": 1,
+        "provenance": {"git_sha": "t", "jax_version": "0",
+                       "device_kind": "cpu", "date": "d"},
+        "config": {},
+        "report": report or {"queries": 8.0},
+        "metrics": metrics,
+    }
+    path = tmp_path / "metrics.json"
+    path.write_text(json.dumps(doc))
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts",
+                                      "check_metrics_schema.py"), str(path)],
+        capture_output=True, text=True)
+
+
+def _mutate_metrics(applied=5.0, upserts=3.0, deletes=2.0, rejected=0.0):
+    return {
+        "serve.queries": {"type": "counter", "value": 8.0},
+        "serve.requests": {"type": "counter", "value": 1.0},
+        "mutate.applied": {"type": "counter", "value": applied},
+        "mutate.upserts": {"type": "counter", "value": upserts},
+        "mutate.deletes": {"type": "counter", "value": deletes},
+        "mutate.rejected": {"type": "counter", "value": rejected},
+        "mutate.requantize": {"type": "counter", "value": 1.0},
+        "mutate.tombstones": {"type": "gauge", "value": 2.0},
+    }
+
+
+def test_schema_check_accepts_closed_mutation_ledger(tmp_path):
+    r = _schema_check(tmp_path, _mutate_metrics())
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_schema_check_rejects_open_ledger_and_orphans(tmp_path):
+    r = _schema_check(tmp_path, _mutate_metrics(applied=4.0))
+    assert r.returncode == 1
+    assert "mutate.applied=4.0" in r.stdout
+
+    orphan = _mutate_metrics()
+    del orphan["mutate.applied"]
+    r = _schema_check(tmp_path, orphan)
+    assert r.returncode == 1
+    assert "without mutate.applied" in r.stdout
+
+
+def test_schema_check_rejects_engine_serving_deleted_rows(tmp_path):
+    m = _mutate_metrics()
+    m["graph.sharded.degraded.tombstoned_nodes"] = {
+        "type": "gauge", "value": 1.0}  # fewer than mutate.tombstones=2
+    r = _schema_check(tmp_path, m)
+    assert r.returncode == 1
+    assert "engine serving deleted rows" in r.stdout
