@@ -1,0 +1,229 @@
+"""Fig. 11 (paper Fig. 5/6 discipline, beyond-paper engines): the DCO
+method matrix through ONE kernel family.
+
+The paper's central comparison — DADE vs ADSampling vs FDScanning — has so
+far only been produced by the host engines; the fused megakernels spoke
+DADE alone.  With the estimator-pluggable spec (``core.estimators
+.kernel_spec``) every method runs the SAME demand-paged pipeline, so this
+figure fills the matrix
+
+    method in {fdscanning, adsampling, dade}
+      x index in {flat host, IVF-fused, graph-fused}
+
+at matched recall, reporting all three cost axes: dims consumed
+(semantic), bytes fetched (DMA ledger), and wall-clock QPS (interpret-mode
+wall clock on CPU — recorded for trajectory, never banded).
+
+Matching discipline (fig7/fig8's): each method's fused engines sweep their
+knob (n_probe / route_mult) until recall reaches that method's own flat
+host recall; the cross-method comparison rows then compare fetched bytes
+AT those matched operating points.  The headline row
+``fig11_dade_vs_adsampling`` asserts the paper's claim on this fixture:
+DADE consumes no more fetched bytes than ADSampling at matched recall,
+through the identical kernel.
+
+FDScanning runs with the same ``scan_block_d`` as the others: its single
+checkpoint at D means every intermediate kernel checkpoint carries the
+``EPS_DISABLED`` sentinel — the paged DMA pipeline is exercised, but no
+screen fires until the terminal exact retire (host semantics, honest
+bytes).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    emit, estimator, fixture, host_tables, recall, record,
+)
+from repro.core import exact_knn
+from repro.index.graph import build_graph, search_graph_fused
+from repro.index.ivf import build_ivf, search_ivf_fused
+from repro.quant import quantize_corpus
+from repro.quant.screen import knn_search_quant_host
+
+METHODS = ("fdscanning", "adsampling", "dade")
+BLOCK_D = 32       # shared kernel checkpoint grid — the matrix's point
+BLOCK_C = 128
+GRAPH_NODES = 4000  # sub-corpus for the O(N·ef·M) host graph builds
+GRAPH_M = 32
+GRAPH_EF = 32
+GRAPH_EXPAND = 2
+
+
+def _flat_host(est, corpus, queries, gt):
+    """Flat host two-stage screen (the PR-1 engine, per-method tables)."""
+    k = gt.shape[1]
+    nq = len(queries)
+    q_rot = np.asarray(est.rotate(jnp.asarray(queries)))
+    c_rot = np.asarray(est.rotate(jnp.asarray(corpus)))
+    qc = quantize_corpus(jnp.asarray(c_rot))
+    codes, scales = np.asarray(qc.codes), np.asarray(qc.scales)
+    dims, eps, scale = host_tables(est)
+    got, total_bytes, fp_dims = [], 0, 0.0
+    t0 = time.perf_counter()
+    for qi in range(nq):
+        ids, _, stats = knn_search_quant_host(
+            q_rot[qi], codes, scales, c_rot, k, dims, eps, scale, wave=256)
+        got.append(ids)
+        total_bytes += stats["bytes_scanned"]
+        fp_dims += stats["avg_fp_dims"]
+    dt = time.perf_counter() - t0
+    return {
+        "recall": recall(np.stack(got), gt),
+        "qps": nq / dt,
+        "bytes_per_query": total_bytes / nq,
+        "avg_fp_dims": fp_dims / nq,
+    }
+
+
+def _ivf_fused(est, corpus, queries, gt, target_recall):
+    """Fused IVF wave scan, n_probe swept to the method's host recall."""
+    k = gt.shape[1]
+    nq = len(queries)
+    n_clusters = max(8, len(corpus) // 312)
+    idx = build_ivf(corpus, estimator=est, n_clusters=n_clusters,
+                    quant="int8", scan_block_d=BLOCK_D)
+    qj = jnp.asarray(queries)
+    sweep = [p for p in (8, 16, 24, 32, 48, 64) if p < n_clusters]
+    sweep.append(n_clusters)
+    for n_probe in sweep:
+        search_ivf_fused(idx, qj, k=k, n_probe=n_probe,
+                         block_q=4, block_c=BLOCK_C)  # compile
+        t0 = time.perf_counter()
+        _, ids, st = search_ivf_fused(idx, qj, k=k, n_probe=n_probe,
+                                      block_q=4, block_c=BLOCK_C)
+        dt = time.perf_counter() - t0
+        r = recall(ids, gt)
+        if r >= target_recall or n_probe == sweep[-1]:
+            return {
+                "recall": r,
+                "qps": nq / dt,
+                "matched_n_probe": n_probe,
+                "avg_fp_dims": st.avg_fp_dims,
+                "avg_int8_dims": st.avg_int8_dims,
+                "bytes_per_query": st.bytes_per_query,
+                "fetched_bytes_per_query": st.fetched_bytes_per_query,
+                "s2_skip_rate": st.s2_skip_rate,
+            }
+    raise AssertionError("unreachable: sweep always returns on last probe")
+
+
+def _graph_fused(est, sub, queries, gt, target_recall):
+    """Fused graph beam scan, route_mult swept to the matched recall."""
+    k = gt.shape[1]
+    nq = len(queries)
+    g = build_graph(sub, estimator=est, m=GRAPH_M, ef_construction=64,
+                    quant="int8", scan_block_d=BLOCK_D,
+                    adj_dtype="bfloat16")
+    qj = jnp.asarray(queries)
+    out = None
+    for rm in (1.0, 1.1, 1.2, 1.5, 2.0):
+        t0 = time.perf_counter()
+        _, ids, st = search_graph_fused(
+            g, qj, k=k, ef=GRAPH_EF, expand=GRAPH_EXPAND, block_q=8,
+            route_mult=rm)
+        dt = time.perf_counter() - t0
+        r = recall(ids, gt)
+        out = {
+            "recall": r,
+            "qps": nq / dt,
+            "matched_route_mult": rm,
+            "avg_fp_dims": st.avg_fp_dims,
+            "avg_int8_dims": st.avg_int8_dims,
+            "waves": st.waves,
+            "bytes_per_query": st.bytes_per_query,
+            "fetched_bytes_per_query": st.fetched_bytes_per_query,
+            "s2_skip_rate": st.s2_skip_rate,
+        }
+        if r >= target_recall:
+            break
+    return out
+
+
+def main():
+    corpus, queries, gt = fixture()
+    n_sub = min(len(corpus), GRAPH_NODES)
+    sub = np.asarray(corpus)[:n_sub]
+    _, gt_sub = exact_knn(jnp.asarray(queries), jnp.asarray(sub),
+                          gt.shape[1])
+    gt_sub = np.asarray(gt_sub)
+
+    cells = {}
+    for method in METHODS:
+        est = estimator(method, corpus, delta_d=BLOCK_D, p_s=0.1)
+        flat = _flat_host(est, corpus, queries, gt)
+        emit(f"fig11.flat@{method}", 0.0,
+             f"recall={flat['recall']:.3f};qps={flat['qps']:.0f};"
+             f"bytes_per_q={flat['bytes_per_query']:.0f};"
+             f"fp_dims={flat['avg_fp_dims']:.1f}")
+        record(f"fig11_flat@{method}", **flat)
+
+        ivf = _ivf_fused(est, corpus, queries, gt,
+                         target_recall=flat["recall"])
+        emit(f"fig11.ivf@{method}", 0.0,
+             f"recall={ivf['recall']:.3f};qps={ivf['qps']:.0f};"
+             f"n_probe={ivf['matched_n_probe']};"
+             f"fetched_bytes_per_q={ivf['fetched_bytes_per_query']:.0f};"
+             f"fp_dims={ivf['avg_fp_dims']:.1f}")
+        record(f"fig11_ivf@{method}", **ivf)
+
+        # Sub-corpus estimator for the graph cell (calibration must see
+        # the corpus it screens); the common cache keys on the kwargs.
+        est_sub = estimator(method, sub, delta_d=BLOCK_D, p_s=0.1,
+                            num_pairs=2048)
+        flat_sub = _flat_host(est_sub, sub, queries, gt_sub)
+        graph = _graph_fused(est_sub, sub, queries, gt_sub,
+                             target_recall=flat_sub["recall"])
+        emit(f"fig11.graph@{method}", 0.0,
+             f"recall={graph['recall']:.3f};qps={graph['qps']:.0f};"
+             f"route_mult={graph['matched_route_mult']:g};"
+             f"fetched_bytes_per_q={graph['fetched_bytes_per_query']:.0f};"
+             f"fp_dims={graph['avg_fp_dims']:.1f}")
+        record(f"fig11_graph@{method}", **graph)
+        cells[method] = {"flat": flat, "ivf": ivf, "graph": graph}
+
+    # --- headline comparison rows (the paper's claim, fused engines) ----
+    dade, ads, fds = cells["dade"], cells["adsampling"], cells["fdscanning"]
+    ivf_ratio = (ads["ivf"]["fetched_bytes_per_query"]
+                 / max(dade["ivf"]["fetched_bytes_per_query"], 1.0))
+    graph_ratio = (ads["graph"]["fetched_bytes_per_query"]
+                   / max(dade["graph"]["fetched_bytes_per_query"], 1.0))
+    flat_ratio = (ads["flat"]["bytes_per_query"]
+                  / max(dade["flat"]["bytes_per_query"], 1.0))
+    record("fig11_dade_vs_adsampling",
+           ivf_fetched_ratio=ivf_ratio, graph_fetched_ratio=graph_ratio,
+           flat_bytes_ratio=flat_ratio,
+           dade_ivf_recall=dade["ivf"]["recall"],
+           ads_ivf_recall=ads["ivf"]["recall"],
+           dade_ivf_fetched=dade["ivf"]["fetched_bytes_per_query"],
+           ads_ivf_fetched=ads["ivf"]["fetched_bytes_per_query"])
+    record("fig11_dade_vs_fdscanning",
+           ivf_fetched_ratio=(fds["ivf"]["fetched_bytes_per_query"]
+                              / max(dade["ivf"]["fetched_bytes_per_query"],
+                                    1.0)),
+           flat_bytes_ratio=(fds["flat"]["bytes_per_query"]
+                             / max(dade["flat"]["bytes_per_query"], 1.0)))
+    emit("fig11.dade_vs_adsampling", 0.0,
+         f"ivf_fetched_ratio={ivf_ratio:.2f};"
+         f"graph_fetched_ratio={graph_ratio:.2f};"
+         f"flat_bytes_ratio={flat_ratio:.2f}")
+    # The claim this figure exists to keep honest: at matched recall,
+    # through the identical demand-paged kernel, DADE's data-aware
+    # schedule fetches no more than ADSampling's distribution-free one —
+    # and the exhaustive FDScanning cell bounds both from above.
+    assert ivf_ratio >= 1.0, (
+        f"DADE fetched MORE than ADSampling through the fused IVF engine: "
+        f"ratio {ivf_ratio:.3f} "
+        f"({dade['ivf']['fetched_bytes_per_query']:.0f} vs "
+        f"{ads['ivf']['fetched_bytes_per_query']:.0f} B/query)")
+    assert (fds["ivf"]["fetched_bytes_per_query"]
+            >= dade["ivf"]["fetched_bytes_per_query"]), (
+        "FDScanning fetched fewer bytes than DADE — the no-pruning cell "
+        "cannot be the cheapest")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,12 +35,13 @@ def main() -> None:
     from benchmarks import (
         fig1_variance, fig2_time_recall, fig3_feasibility,
         fig4_ps_sensitivity, fig5_delta_d, fig6_quant, fig7_ivf_fused,
-        fig8_graph_fused, fig9_graph_sharded, fig10_churn, kernel_bench,
+        fig8_graph_fused, fig9_graph_sharded, fig10_churn,
+        fig11_method_matrix, kernel_bench,
     )
     mods = [fig1_variance, fig3_feasibility, fig4_ps_sensitivity,
             fig5_delta_d, kernel_bench, fig2_time_recall, fig6_quant,
             fig7_ivf_fused, fig8_graph_fused, fig9_graph_sharded,
-            fig10_churn]
+            fig10_churn, fig11_method_matrix]
     if args.only:
         wanted = {m.strip() for m in args.only.split(",") if m.strip()}
         mods = [m for m in mods if m.__name__.split(".")[-1] in wanted]

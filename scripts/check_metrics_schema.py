@@ -145,6 +145,35 @@ def check(path: str) -> int:
         orphan = sorted(k for k in metrics if k.startswith("mutate."))[0]
         fails.append(f"consistency: {orphan} present without mutate.applied")
 
+    # dco.method.<name>: the method "dimension" rides in the counter name
+    # (the registry has no label syntax).  Any serve snapshot that carries
+    # DCO accounting must say which estimator produced it, the suffix must
+    # be a known method, and the per-method query counts must cross-foot
+    # with serve.queries (counters merge additively, so a merged
+    # multi-method snapshot still foots).
+    known_methods = ("fdscanning", "adsampling", "dade",
+                     "pca_fixed", "rp_fixed")
+    method_keys = sorted(k for k in metrics if k.startswith("dco.method."))
+    for k in method_keys:
+        suffix = k[len("dco.method."):]
+        if suffix not in known_methods:
+            fails.append(f"{k}: unknown DCO method suffix {suffix!r} "
+                         f"(known: {', '.join(known_methods)})")
+        if metrics[k].get("type") != "counter":
+            fails.append(f"{k}: dco.method tag must be a counter, "
+                         f"got {metrics[k].get('type')!r}")
+    if any(k.startswith("dco.") and not k.startswith("dco.method.")
+           for k in metrics) and not method_keys:
+        fails.append("consistency: dco.* accounting present without a "
+                     "dco.method.* tag (snapshot does not say which "
+                     "estimator produced it)")
+    if method_keys and value("serve.queries") is not None:
+        tagged = sum(value(k) or 0 for k in method_keys)
+        if tagged != value("serve.queries"):
+            fails.append(
+                f"consistency: sum(dco.method.*)={tagged} != "
+                f"serve.queries={value('serve.queries')}")
+
     shard_keys = sorted(
         k for k in metrics
         if k.startswith("graph.sharded.shard") and k.endswith(".fetched_bytes"))

@@ -18,14 +18,48 @@ from typing import Literal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import calibration as calib
 from repro.core import transforms as tf
 from repro.quant.scalar import QuantConfig
 
-__all__ = ["Estimator", "build_estimator"]
+__all__ = [
+    "Estimator", "EstimatorSpec", "UnsupportedMethodError", "build_estimator",
+    "kernel_spec", "blocked_schedule", "first_enabled_eps", "EPS_DISABLED",
+    "SEED_SLACK",
+]
 
 MethodName = Literal["fdscanning", "adsampling", "dade", "pca_fixed", "rp_fixed"]
+
+# Sentinel epsilon for a DISABLED checkpoint: the blocked screen tests
+# ``est > (1+eps)^2 * r^2`` and ``(1+EPS_DISABLED)^2 ~ 1e38`` stays finite in
+# fp32 (max ~3.4e38), so a disabled checkpoint's threshold is astronomically
+# loose for real rows yet still collapses to 0 for pad rows (which carry
+# r^2 = 0) — pad pruning keeps working.  It must NOT be inf: inf * 0 = NaN
+# would turn every pad-row threshold into a non-comparison.
+EPS_DISABLED = 1.0e19
+
+# Relative float slack applied to SEEDED thresholds (IVF/graph/service
+# threshold warm-up).  A seed verifies k real rows exactly and widens the
+# k-th by the first checkpoint's (1+eps)^2 overshoot band — but a method
+# whose first epsilon is 0 (fdscanning: single exact checkpoint at D) gets
+# widening 1.0, so when the global k-th neighbour IS a verified seed row
+# the threshold sits exactly ON its distance, and the kernels' blockwise
+# re-accumulation can land a few ULPs above it and prune the row.  A 1e-5
+# relative widening is far below any measurable byte/recall effect and
+# keeps every method sound under float reassociation.
+SEED_SLACK = 1e-5
+
+
+class UnsupportedMethodError(ValueError):
+    """The fused megakernel cannot express this estimator.
+
+    The demand-paged pipeline retires every surviving row with the EXACT
+    full-D fp32 distance at its final checkpoint; estimators whose terminal
+    estimate is itself approximate (the fixed-dimension projection baselines
+    pca_fixed / rp_fixed) would silently change semantics if forced through
+    it, so the kernel entry points refuse them by name."""
 
 
 @jax.tree_util.register_pytree_node_class
@@ -135,3 +169,128 @@ def build_estimator(
     else:
         raise ValueError(f"unknown DCO method: {method}")
     return Estimator(method=method, transform=transform, table=table, quant=quant)
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimatorSpec:
+    """Everything the fused kernels need from an estimator, blocked.
+
+    The kernels are method-oblivious: the int8 stage-1 prefilter and the
+    demand-paged fp32 stage 2 read the per-checkpoint ``eps``/``scale``
+    arrays as DATA (``(1, S)`` fp32 kernel inputs), never branch on the
+    method name.  A spec is an :class:`Estimator`'s epsilon table resampled
+    onto the kernel's ``block_d`` checkpoint grid:
+
+      * checkpoints at or past a calibrated dim take the entry at the
+        largest calibrated dim <= checkpoint (the test applied is one the
+        calibration covered — conservative);
+      * checkpoints BELOW the first calibrated dim are disabled
+        (``eps = EPS_DISABLED``): the method never calibrated a test there,
+        so the kernel must not invent one.  FDScanning (single checkpoint
+        at D) run with a small ``block_d`` keeps the paged DMA pipeline but
+        prunes nothing until the terminal exact retire — its host
+        semantics;
+      * the terminal checkpoint (>= true D) is the exact retire:
+        eps = 0, scale = 1.
+
+    The orthogonal transform is NOT part of the spec: rotation happens at
+    index build / query ingest on the host, the kernel only ever sees
+    rotated rows.
+    """
+
+    method: str
+    block_d: int
+    d_pad: int
+    eps: jax.Array      # (S,) float32 per-checkpoint epsilon
+    scale: jax.Array    # (S,) float32 per-checkpoint unbias factor
+    eps_lo: jax.Array   # (S,) float32 lower-tail band (0 where disabled)
+
+    @property
+    def s_steps(self) -> int:
+        return self.d_pad // self.block_d
+
+
+def blocked_schedule(table: calib.EpsilonTable, dim: int, block_d: int):
+    """Resample an EpsilonTable onto the block-checkpoint grid.
+
+    Returns ``(eps, scale, eps_lo, d_pad)`` with numpy float32 arrays of
+    length ``d_pad // block_d``.  See :class:`EstimatorSpec` for the
+    resampling rule (including the EPS_DISABLED sentinel for checkpoints
+    below the first calibrated dim).
+    """
+    dims = np.asarray(table.dims)
+    eps = np.asarray(table.eps)
+    eps_lo = np.asarray(table.eps_lo)
+    scale = np.asarray(table.scale)
+    first_cal = int(dims[0])
+    d_pad = ((dim + block_d - 1) // block_d) * block_d
+    s_count = d_pad // block_d
+    out_eps, out_scale, out_lo = [], [], []
+    for s in range(s_count):
+        cp = min((s + 1) * block_d, dim)
+        if cp >= dim:
+            out_eps.append(0.0)
+            out_scale.append(1.0)
+            out_lo.append(0.0)
+        elif cp < first_cal:
+            out_eps.append(EPS_DISABLED)
+            out_scale.append(1.0)
+            out_lo.append(0.0)
+        else:
+            i = int(np.searchsorted(dims, cp, side="right")) - 1
+            out_eps.append(float(eps[i]))
+            out_scale.append(float(scale[i]))
+            out_lo.append(float(eps_lo[i]))
+    return (
+        np.asarray(out_eps, np.float32),
+        np.asarray(out_scale, np.float32),
+        np.asarray(out_lo, np.float32),
+        d_pad,
+    )
+
+
+def kernel_spec(estimator: Estimator, dim: int, block_d: int) -> EstimatorSpec:
+    """Blocked kernel view of an estimator; the single fused entry gate.
+
+    Raises :class:`UnsupportedMethodError` for estimators the fused
+    pipeline cannot express: anything whose terminal checkpoint is not the
+    exact full-D distance (the fixed-dim baselines).  The check is
+    structural — on the table, not the method name — so a hand-built table
+    with an approximate terminal is refused too.
+    """
+    table = estimator.table
+    last_dim = int(np.asarray(table.dims)[-1])
+    last_eps = float(np.asarray(table.eps)[-1])
+    last_scale = float(np.asarray(table.scale)[-1])
+    if last_dim < dim or last_eps != 0.0 or last_scale != 1.0:
+        raise UnsupportedMethodError(
+            f"method {estimator.method!r} is not expressible in the fused "
+            f"kernels: its terminal checkpoint (dim {last_dim}, "
+            f"eps {last_eps}, scale {last_scale}) is not the exact full-D "
+            f"retire (dim >= {dim}, eps 0, scale 1) the demand-paged "
+            f"stage 2 performs — route it through the host engines")
+    eps, scale, eps_lo, d_pad = blocked_schedule(table, dim, block_d)
+    return EstimatorSpec(
+        method=estimator.method,
+        block_d=block_d,
+        d_pad=d_pad,
+        eps=jnp.asarray(eps),
+        scale=jnp.asarray(scale),
+        eps_lo=jnp.asarray(eps_lo),
+    )
+
+
+def first_enabled_eps(eps: jax.Array) -> jax.Array:
+    """First non-disabled checkpoint epsilon of a blocked schedule.
+
+    Threshold seeding widens an exact sample radius by ``(1+eps_1)^2`` so a
+    true neighbor whose ESTIMATE overshoots is still admitted; the widening
+    epsilon must come from the first checkpoint that actually screens.  For
+    a schedule whose early checkpoints are disabled (fdscanning under a
+    small block_d) the disabled sentinel would widen the seed to ~1e38 —
+    sound but useless.  Traceable (pure jnp), usable inside shard_map.
+    """
+    eps = jnp.asarray(eps)
+    enabled = eps < EPS_DISABLED / 2
+    idx = jnp.argmax(enabled)
+    return jnp.where(jnp.any(enabled), eps[idx], 0.0)

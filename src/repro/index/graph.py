@@ -61,12 +61,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dco import dco_screen
-from repro.core.estimators import Estimator, build_estimator
+from repro.core.estimators import SEED_SLACK, Estimator, build_estimator
 from repro.obs.trace import current_tracer
 from repro.kernels.ops import (
     fused_fetch_totals,
     graph_scan_kernel,
     graph_vis_words,
+    kernel_spec,
     pack_vis_ranges,
     unpack_vis,
 )
@@ -346,6 +347,9 @@ def build_graph(
         else:
             block_d = int(scan_block_d)
         dim = rot.shape[1]
+        # Refuse fused layouts for estimators the kernel can't express
+        # (fixed-dim baselines) at build time, by name.
+        kernel_spec(estimator, dim, block_d)
         d_pad = (dim + block_d - 1) // block_d * block_d
         if adj_block is None:
             a_block = (max(m, 1) + 31) // 32 * 32  # int8 sublane grid
@@ -447,7 +451,8 @@ def search_graph(
         _, sel = jax.lax.top_k(-approx, kk)  # (Q, kk) best by int8 estimate
         rows0 = index.corpus_rot[jnp.maximum(nbrs0, 0)][sel]  # (Q, kk, D)
         exact0 = jnp.sum((rows0 - q_rot[:, None, :]) ** 2, axis=-1)
-        kth = jnp.max(exact0, axis=1) * (1.0 + table.eps[0]) ** 2
+        kth = (jnp.max(exact0, axis=1) * (1.0 + table.eps[0]) ** 2
+               * (1.0 + SEED_SLACK))
         # A sound floor needs k *distinct* verified candidates.
         enough = (jnp.sum(nvalid) >= k) & (kk == k)
         r_seed = jnp.where(enough, kth, jnp.inf)
@@ -617,7 +622,8 @@ def _beam_seed_rsq(index: GraphIndex, q_rot: jax.Array, k: int, *,
     _, sel = jax.lax.top_k(-approx, kk)
     rows0 = index.corpus_rot[jnp.maximum(nbrs0, 0)][sel]  # (Q, kk, D)
     exact0 = jnp.sum((rows0 - q_rot[:, None, :]) ** 2, axis=-1)
-    kth = jnp.max(exact0, axis=1) * (1.0 + table.eps[0]) ** 2
+    kth = (jnp.max(exact0, axis=1) * (1.0 + table.eps[0]) ** 2
+           * (1.0 + SEED_SLACK))
     enough = (jnp.sum(nvalid) >= k) & (kk == k)
     return jnp.where(enough, kth, jnp.inf)
 

@@ -37,11 +37,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dco import dco_screen_batch
-from repro.core.estimators import Estimator, build_estimator
+from repro.core.estimators import SEED_SLACK, Estimator, build_estimator
 from repro.obs.trace import current_tracer
 from repro.core.topk import merge_topk
 from repro.index.kmeans import kmeans
-from repro.kernels.ops import fused_fetch_totals, ivf_scan_kernel
+from repro.kernels.ops import fused_fetch_totals, ivf_scan_kernel, kernel_spec
 from repro.quant.accounting import (
     ID_BYTES,
     fetched_tile_bytes,
@@ -201,6 +201,10 @@ def build_ivf(
             block_d = int(np.asarray(estimator.table.dims)[0])
         else:
             block_d = int(scan_block_d)
+        # Building the fused layout for an estimator the kernel can't
+        # express (fixed-dim baselines) is always a mistake — refuse here,
+        # by name, not waves deep into the first search.
+        kernel_spec(estimator, dim, block_d)
         align = 128
         d_pad = (dim + block_d - 1) // block_d * block_d
         astarts = np.zeros(n_clusters + 1, np.int64)
@@ -267,7 +271,9 @@ def _quant_seed_rsq(index: IVFIndex, q_rot: jax.Array, seed_bucket: jax.Array,
     kth = jnp.max(exact_sq, axis=1)
     # Clamp the all-pad degenerate case (bucket smaller than k) back to inf.
     kth = jnp.where(kth >= _SENTINEL, jnp.inf, kth)
-    return kth * (1.0 + table.eps[0]) ** 2
+    # SEED_SLACK keeps zero-widening methods (fdscanning: eps[0] = 0) sound
+    # when the k-th neighbour is itself a verified seed row.
+    return kth * (1.0 + table.eps[0]) ** 2 * (1.0 + SEED_SLACK)
 
 
 @partial(jax.jit, static_argnames=("k", "n_probe", "use_quant", "seed_r"))

@@ -16,12 +16,16 @@ fallback; ref.py -- pure-jnp oracles (fetch decisions included).
 """
 
 from repro.kernels.ops import (
+    EPS_DISABLED,
+    EstimatorSpec,
+    UnsupportedMethodError,
     block_table,
     dco_screen_kernel,
     fused_fetch_totals,
     graph_scan_kernel,
     graph_vis_words,
     ivf_scan_kernel,
+    kernel_spec,
     min_block_q,
     on_tpu,
     quant_screen_kernel,
@@ -35,6 +39,10 @@ from repro.kernels.ref import (
 )
 
 __all__ = [
+    "EPS_DISABLED",
+    "EstimatorSpec",
+    "UnsupportedMethodError",
+    "kernel_spec",
     "block_table",
     "dco_screen_kernel",
     "fused_fetch_totals",

@@ -30,7 +30,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.calibration import EpsilonTable
-from repro.core.estimators import Estimator
+from repro.core.estimators import (
+    EPS_DISABLED, Estimator, EstimatorSpec, UnsupportedMethodError,
+    blocked_schedule, kernel_spec,
+)
 from repro.kernels import dade_dco as _dade
 from repro.kernels import graph_scan as _graph_scan
 from repro.kernels import ivf_scan as _ivf_scan
@@ -43,6 +46,7 @@ __all__ = [
     "graph_scan_kernel", "ivf_cap_tiles", "build_window_offsets",
     "block_table", "on_tpu", "min_block_q", "fused_fetch_totals",
     "graph_vis_words", "unpack_vis",
+    "EstimatorSpec", "UnsupportedMethodError", "kernel_spec", "EPS_DISABLED",
 ]
 
 # Minimum second-to-minor tile dimension (sublane count) per operand byte
@@ -158,33 +162,23 @@ def block_table(table: EpsilonTable, dim: int, block_d: int):
     The kernel checkpoints at d = DB, 2DB, ..., D_pad.  For each checkpoint we
     take the table entry at the largest calibrated dim <= checkpoint (so the
     test applied is one the calibration actually covered; conservative).
-    Checkpoints beyond the true D (zero-padded dims) reuse the final exact
-    entry (eps=0, scale=1) — padded dims add zero to the distance.
+    Checkpoints BELOW the first calibrated dim carry the ``EPS_DISABLED``
+    sentinel — the method never calibrated a test there, so the kernel must
+    not invent one (the single-checkpoint FDScanning table under a small
+    block_d keeps the paged pipeline but screens only at the terminal
+    retire).  Checkpoints beyond the true D (zero-padded dims) reuse the
+    final exact entry (eps=0, scale=1) — padded dims add zero.
+
+    Thin jnp adapter over :func:`repro.core.estimators.blocked_schedule`
+    (the single source of the resampling rule — the numpy conformance
+    references use it directly).
     """
-    dims = np.asarray(table.dims)
-    eps = np.asarray(table.eps)
-    eps_lo = np.asarray(table.eps_lo)
-    scale = np.asarray(table.scale)
-    d_pad = ((dim + block_d - 1) // block_d) * block_d
-    s_count = d_pad // block_d
-    out_eps, out_scale, out_lo = [], [], []
-    for s in range(s_count):
-        cp = min((s + 1) * block_d, dim)
-        i = int(np.searchsorted(dims, cp, side="right")) - 1
-        i = max(i, 0)
-        if cp >= dim:
-            out_eps.append(0.0)
-            out_scale.append(1.0)
-            out_lo.append(0.0)
-        else:
-            out_eps.append(float(eps[i]))
-            out_scale.append(float(scale[i]))
-            out_lo.append(float(eps_lo[i]))
+    eps, scale, eps_lo, d_pad = blocked_schedule(table, dim, block_d)
     return (
-        jnp.asarray(out_eps, jnp.float32),
-        jnp.asarray(out_scale, jnp.float32),
+        jnp.asarray(eps, jnp.float32),
+        jnp.asarray(scale, jnp.float32),
         d_pad,
-        jnp.asarray(out_lo, jnp.float32),
+        jnp.asarray(eps_lo, jnp.float32),
     )
 
 
@@ -234,7 +228,8 @@ def dco_screen_kernel(
     qn, dim = q_rot.shape
     n = cands_rot.shape[0]
 
-    eps, scale, d_pad, _ = block_table(estimator.table, dim, block_d)
+    spec = kernel_spec(estimator, dim, block_d)
+    eps, scale = spec.eps, spec.scale
     q = _pad_axis(q_rot.astype(jnp.float32), 1, block_d, 0.0)
     c = _pad_axis(cands_rot.astype(jnp.float32), 1, block_d, 0.0)
     q = _pad_axis(q, 0, block_q, 0.0)
@@ -297,8 +292,9 @@ def quant_screen_kernel(
     qn, dim = q_rot.shape
     n = codes.shape[0]
 
-    eps, scale, d_pad, _ = block_table(estimator.table, dim, block_d)
-    s_count = d_pad // block_d
+    spec = kernel_spec(estimator, dim, block_d)
+    eps, scale = spec.eps, spec.scale
+    s_count = spec.s_steps
     sc = _pad_axis(scales.astype(jnp.float32), 0, block_d, 0.0)
     ecum = jnp.sqrt(cum_err_sq(sc, (jnp.arange(s_count) + 1) * block_d))
 
@@ -411,10 +407,11 @@ def ivf_scan_kernel(
     if cap_tiles > n_pad // block_c:
         raise ValueError("flat corpus tail padding too small for max_bucket")
 
-    eps, scale, d_pad_tbl, _ = block_table(estimator.table, dim, block_d)
-    if d_pad_tbl != d_pad:
+    spec = kernel_spec(estimator, dim, block_d)
+    eps, scale = spec.eps, spec.scale
+    if spec.d_pad != d_pad:
         raise ValueError(
-            f"blocked table spans {d_pad_tbl} dims, flat corpus has {d_pad}")
+            f"blocked table spans {spec.d_pad} dims, flat corpus has {d_pad}")
 
     q = _pad_axis(q_rot.astype(jnp.float32), 1, block_d, 0.0)
     q = _pad_axis(q, 0, block_q, 0.0)
@@ -542,10 +539,11 @@ def graph_scan_kernel(
     if n_adj % block_c:
         raise ValueError(f"adjacency rows {n_adj} % block_c {block_c} != 0")
 
-    eps, scale, d_pad_tbl, _ = block_table(estimator.table, dim, block_d)
-    if d_pad_tbl != d_pad:
+    spec = kernel_spec(estimator, dim, block_d)
+    eps, scale = spec.eps, spec.scale
+    if spec.d_pad != d_pad:
         raise ValueError(
-            f"blocked table spans {d_pad_tbl} dims, adjacency has {d_pad}")
+            f"blocked table spans {spec.d_pad} dims, adjacency has {d_pad}")
 
     q = _pad_axis(q_rot.astype(jnp.float32), 1, block_d, 0.0)
     q = _pad_axis(q, 0, block_q, 0.0)

@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.dade_ivf import ServiceConfig
+from repro.core.estimators import SEED_SLACK, first_enabled_eps
 from repro.launch.mesh import shard_map
 from repro.obs.trace import current_tracer
 from repro.quant.scalar import cum_err_sq
@@ -364,7 +365,14 @@ def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
         r0 = kth_local
         for ax in axes:
             r0 = jax.lax.pmin(r0, ax)
-        return r0 * (1.0 + eps[0]) ** 2
+        # Widen by the first ENABLED checkpoint's overshoot band: a
+        # blocked schedule whose early checkpoints are disabled (the
+        # EPS_DISABLED sentinel — fdscanning under a small block_d) must
+        # seed from the first epsilon that actually screens, not ~1e19.
+        # SEED_SLACK keeps the zero-widening case sound under float
+        # reassociation (see core.estimators).
+        return (r0 * (1.0 + first_enabled_eps(eps)) ** 2
+                * (1.0 + SEED_SLACK))
 
     def local_search(corpus, queries, eps, scale, eps_lo):
         """Per-shard screen. corpus: (N_local, D). Runs inside shard_map."""

@@ -54,7 +54,8 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--method", default="dade",
-                    choices=["dade", "adsampling", "fdscanning"])
+                    choices=["dade", "adsampling", "fdscanning",
+                             "pca_fixed", "rp_fixed"])
     ap.add_argument("--p-s", type=float, default=0.02)
     ap.add_argument("--index", default="flat", choices=["flat", "graph"],
                     help="flat: sharded wave scan over the whole corpus "
@@ -181,13 +182,13 @@ def main() -> None:
     from repro.configs.dade_ivf import ServiceConfig
     from repro.core import build_estimator, exact_knn
     from repro.data.pipeline import synthetic_queries, synthetic_vectors
-    from repro.kernels.ops import block_table
+    from repro.kernels.ops import block_table, kernel_spec
     from repro.launch.annservice import build_search_step, search_input_specs
     from repro.launch.mesh import make_mesh_compat
     from repro.obs import (
         MetricsRegistry, Tracer, set_tracer, write_chrome_trace,
         write_metrics_json, record_graph_scan, record_graph_sharded,
-        record_fused_serve_totals,
+        record_fused_serve_totals, record_dco_method,
     )
     from repro.obs.trace import current_tracer
 
@@ -255,13 +256,21 @@ def main() -> None:
             reg.counter("serve.ckpt.restored").add(1)
             print(f"index-ckpt: restored estimator from {args.index_ckpt}")
     if est is None:
+        fixed_dim = svc.dim // 2 if args.method.endswith("_fixed") else None
         est = build_estimator(args.method, corpus[:50000],
                               jax.random.PRNGKey(0),
-                              p_s=svc.p_s, delta_d=svc.delta_d)
+                              p_s=svc.p_s, delta_d=svc.delta_d,
+                              fixed_dim=fixed_dim)
         if args.index == "flat" and args.index_ckpt:
             save_estimator(args.index_ckpt, est, config=est_cfg)
             reg.counter("serve.ckpt.saved").add(1)
             print(f"index-ckpt: saved estimator to {args.index_ckpt}")
+    # Every serving engine (blocked host screen, fused megakernels) retires
+    # surviving rows with the exact full-D distance; estimators whose
+    # terminal estimate is approximate (the fixed-dim baselines) cannot be
+    # expressed here — refuse by name BEFORE any engine builds, instead of
+    # silently serving different semantics under the requested flag.
+    kernel_spec(est, svc.dim, svc.delta_d)
     eps, scale, d_pad, eps_lo = block_table(est.table, svc.dim, svc.delta_d)
     c_rot = np.pad(np.asarray(est.rotate(jnp.asarray(corpus))),
                    ((0, 0), (0, d_pad - svc.dim)))
@@ -398,6 +407,13 @@ def main() -> None:
 
     def emit(report: dict) -> None:
         """Write the machine-readable outputs next to the printed line."""
+        # Tag the snapshot with the DCO method that answered this run's
+        # queries (the method dimension rides in the counter NAME —
+        # dco.method.<method>; the schema check cross-foots it against
+        # serve.queries).  Emitted here so every route — flat, graph,
+        # sharded, churn — carries the tag.
+        record_dco_method(reg, args.method,
+                          queries=reg.counter("serve.queries").value)
         for key, val in report.items():
             if isinstance(val, (int, float)):
                 reg.gauge(f"serve.report.{key}").set(val)

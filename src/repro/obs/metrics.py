@@ -37,6 +37,7 @@ __all__ = [
     "LATENCY_BUCKETS_MS",
     "record_fused_scan", "record_graph_scan", "record_graph_sharded",
     "record_fused_serve_totals", "record_mutations", "record_drift",
+    "record_dco_method", "DCO_METHODS",
 ]
 
 _NAME_RE = re.compile(r"^[a-z0-9_]+(\.[a-z0-9_]+)*$")
@@ -378,3 +379,26 @@ def record_fused_serve_totals(reg: MetricsRegistry, *, s1_tiles: float,
     reg.counter("ivf.fused.s2_slabs_fetched").add(s2_slabs)
     reg.counter("dco.semantic.bytes").add(sem_bytes)
     reg.counter("dco.fetched.bytes").add(s1_bytes + s2_bytes)
+
+
+# DCO methods a snapshot may be tagged with — the serving CLI surface plus
+# the host-only fixed-dim baselines.  scripts/check_metrics_schema.py
+# mirrors this list (pure stdlib, can't import us).
+DCO_METHODS = ("fdscanning", "adsampling", "dade", "pca_fixed", "rp_fixed")
+
+
+def record_dco_method(reg: MetricsRegistry, method: str, *,
+                      queries: float) -> None:
+    """Tag the snapshot with the DCO method that served ``queries``.
+
+    Metric names are the only dimension the dependency-free registry has
+    (``_NAME_RE`` forbids label syntax on purpose — mergeability stays
+    trivial), so the method rides in the name: ``dco.method.adsampling``
+    counts queries answered under ADSampling tables.  Counters from
+    different methods merge additively across snapshots like every other
+    counter, so a mixed-fleet merge keeps the per-method breakdown."""
+    if method not in DCO_METHODS:
+        raise ValueError(
+            f"unknown DCO method {method!r} for metrics tag; known: "
+            f"{DCO_METHODS}")
+    reg.counter(f"dco.method.{method}").add(queries)

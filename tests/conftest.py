@@ -5,6 +5,11 @@ distributed tests spawn subprocesses with their own flags)."""
 import numpy as np
 import pytest
 
+#: The methods the fused engines must serve identically (the conformance
+#: matrix in test_estimator_conformance.py and the CI matrix step iterate
+#: this; pca_fixed/rp_fixed are refused by kernel_spec and tested as such).
+KERNEL_METHODS = ("fdscanning", "adsampling", "dade")
+
 
 @pytest.fixture(scope="session")
 def aniso_corpus():
@@ -17,3 +22,87 @@ def aniso_corpus():
 def queries(aniso_corpus):
     from repro.data.pipeline import synthetic_queries
     return synthetic_queries(24, 64, aniso_corpus, seed=1)
+
+
+@pytest.fixture(scope="session")
+def fused_idx(aniso_corpus):
+    """Shared int8 IVF index with the fused CSR layout (DADE tables).
+
+    Session-scoped: test_ivf_scan.py and the conformance suite screen it
+    read-only, so one k-means + quantization pass serves every module."""
+    from repro.index.ivf import build_ivf
+    return build_ivf(aniso_corpus, n_clusters=32, quant="int8", delta_d=16)
+
+
+@pytest.fixture(scope="session")
+def graph_idx(aniso_corpus):
+    """Shared (sub-corpus, int8 graph index) pair for the fused beam scan."""
+    from repro.index.graph import build_graph
+    sub = np.asarray(aniso_corpus)[:1200]
+    return sub, build_graph(sub, m=12, ef_construction=48, delta_d=16,
+                            quant="int8")
+
+
+@pytest.fixture(scope="session")
+def method_estimator_factory(aniso_corpus):
+    """``get(method)`` -> calibrated Estimator on the shared corpus.
+
+    A memoising factory rather than a dict fixture so a ``-k <method>``
+    selection (the CI conformance matrix runs one method per job) only
+    pays for the calibrations it actually uses."""
+    import jax
+    from repro.core import build_estimator
+
+    cache = {}
+
+    def get(method):
+        if method not in cache:
+            cache[method] = build_estimator(
+                method, aniso_corpus, jax.random.PRNGKey(3), delta_d=16)
+        return cache[method]
+
+    return get
+
+
+@pytest.fixture(scope="session")
+def method_ivf_factory(aniso_corpus, method_estimator_factory):
+    """``get(method)`` -> int8 fused IVF index built on that method's
+    estimator, scan_block_d=16 so fdscanning's single checkpoint at D
+    exercises the EPS_DISABLED intermediate checkpoints in-kernel."""
+    from repro.index.ivf import build_ivf
+
+    cache = {}
+
+    def get(method):
+        if method not in cache:
+            cache[method] = build_ivf(
+                aniso_corpus, estimator=method_estimator_factory(method),
+                n_clusters=32, quant="int8", scan_block_d=16)
+        return cache[method]
+
+    return get
+
+
+@pytest.fixture(scope="session")
+def method_graph_factory(aniso_corpus, method_estimator_factory):
+    """``get(method)`` -> (sub-corpus, int8 fused graph index) per method.
+
+    Smaller sub-corpus than ``graph_idx`` (the host graph build is the
+    expensive part and three methods pay it)."""
+    import jax
+    from repro.core import build_estimator
+    from repro.index.graph import build_graph
+
+    sub = np.asarray(aniso_corpus)[:800]
+    cache = {}
+
+    def get(method):
+        if method not in cache:
+            est = build_estimator(method, sub, jax.random.PRNGKey(3),
+                                  delta_d=16, num_pairs=2048)
+            cache[method] = (sub, build_graph(
+                sub, estimator=est, m=12, ef_construction=48, quant="int8",
+                scan_block_d=16))
+        return cache[method]
+
+    return get

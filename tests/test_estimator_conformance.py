@@ -1,0 +1,459 @@
+"""Cross-method estimator conformance: one contract, every engine.
+
+The estimator-pluggable spec (``core.estimators.kernel_spec``) promises
+that ANY expressible method — fdscanning, adsampling, dade — runs the same
+demand-paged pipeline with identical semantics.  This suite is the lock on
+that promise, parameterized over (method x index x quant on/off):
+
+  * kernel/oracle bit-identity: the fused/flat kernels against the host
+    oracles (``use_ref=True`` and ``dco_screen_batch``) — ids and passed
+    sets exactly, estimates to a few ULPs;
+  * no-false-prune vs exact fp32: nothing the exact scan keeps is ever
+    dropped (for IVF, full-probe coverage must equal brute force);
+  * ledger conservation: every stats field foots against its total.
+
+Test ids carry the method name (``[fdscanning]`` etc.) — the CI
+conformance matrix selects one method per job with ``-k``.  The fixtures
+(``fused_idx``, ``graph_idx``, the per-method factories) live in
+conftest.py, shared with test_ivf_scan.py / test_graph_scan.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import KERNEL_METHODS
+from _hypothesis_compat import given, settings, st
+
+from repro.core import exact_knn
+from repro.core.dco import dco_screen_batch
+from repro.core.estimators import (
+    EPS_DISABLED, UnsupportedMethodError, kernel_spec,
+)
+from repro.index.graph import build_graph, search_graph_fused
+from repro.index.ivf import build_ivf, search_ivf_fused
+from repro.kernels.ops import dco_screen_kernel, quant_screen_kernel
+from repro.quant import quantize_corpus
+from repro.quant.screen import two_stage_screen
+
+K = 10
+BLOCK_D = 16  # matches the factories' scan_block_d: Δd-aligned checkpoints
+N_FLAT = 512  # flat-cell candidate slab
+
+
+@pytest.fixture(params=KERNEL_METHODS, scope="module")
+def method(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def est(method, method_estimator_factory):
+    return method_estimator_factory(method)
+
+
+@pytest.fixture(scope="module")
+def flat_cell(est, aniso_corpus, queries):
+    """Rotated queries, a rotated candidate slab, and per-query thresholds
+    frozen at each query's exact K-th distance over the slab — a realistic
+    pass/prune mix for the flat screens."""
+    q_rot = est.rotate(jnp.asarray(queries))
+    c_rot = est.rotate(jnp.asarray(aniso_corpus))[:N_FLAT]
+    q, c = np.asarray(q_rot), np.asarray(c_rot)
+    exact_sq = ((q * q).sum(1)[:, None] + (c * c).sum(1)[None, :]
+                - 2.0 * q @ c.T)
+    srt = np.sort(exact_sq, axis=1)
+    # Midpoint of the K-th/(K+1)-th gap: no candidate sits ON the
+    # threshold, so <=-decisions don't flip with accumulation order.
+    r_sq = 0.5 * (srt[:, K - 1] + srt[:, K])
+    return q_rot, c_rot, exact_sq, jnp.asarray(r_sq)
+
+
+# ---- the spec itself --------------------------------------------------------
+
+def test_spec_terminal_exact_retire(method, est):
+    """Every expressible method's blocked schedule ends in the exact
+    full-D retire; fdscanning's intermediate checkpoints are all disabled
+    (EPS_DISABLED sentinel), the calibrated methods' are all live."""
+    dim = est.table.dims[-1]
+    spec = kernel_spec(est, int(dim), BLOCK_D)
+    eps = np.asarray(spec.eps)
+    scale = np.asarray(spec.scale)
+    assert spec.method == method
+    assert eps[-1] == 0.0 and scale[-1] == 1.0
+    if method == "fdscanning":
+        assert np.all(eps[:-1] == EPS_DISABLED)
+    else:
+        assert np.all(eps < EPS_DISABLED / 2)
+
+
+@pytest.mark.parametrize("bad_method", ["pca_fixed", "rp_fixed"])
+def test_inexpressible_methods_refused_by_name(bad_method, aniso_corpus):
+    """Fixed-dim baselines retire on an approximate estimate — the fused
+    pipeline cannot express that, and must say so by method name at build
+    time, not waves deep into the first search."""
+    import jax
+    from repro.core import build_estimator
+
+    est = build_estimator(bad_method, aniso_corpus, jax.random.PRNGKey(3),
+                          fixed_dim=32)
+    dim = np.asarray(aniso_corpus).shape[1]
+    with pytest.raises(UnsupportedMethodError, match=bad_method):
+        kernel_spec(est, dim, BLOCK_D)
+    with pytest.raises(UnsupportedMethodError, match=bad_method):
+        build_ivf(aniso_corpus, estimator=est, n_clusters=8, quant="int8")
+    with pytest.raises(UnsupportedMethodError, match=bad_method):
+        build_graph(np.asarray(aniso_corpus)[:256], estimator=est,
+                    m=8, ef_construction=16, quant="int8")
+
+
+# ---- flat cells -------------------------------------------------------------
+
+def test_flat_kernel_oracle_bit_identity(method, est, flat_cell):
+    """fp32 screen kernel vs its eager oracle: same passed set, same
+    retirement dims, estimates to a few ULPs — for every method."""
+    q_rot, c_rot, _, r_sq = flat_cell
+    kw = dict(block_q=8, block_c=128, block_d=BLOCK_D)
+    sq1, p1, d1 = dco_screen_kernel(est, q_rot, c_rot, r_sq, **kw)
+    sq2, p2, d2 = dco_screen_kernel(est, q_rot, c_rot, r_sq,
+                                    use_ref=True, **kw)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_allclose(np.asarray(sq1), np.asarray(sq2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flat_no_false_prune_vs_exact(method, est, flat_cell):
+    """Nothing the exact fp32 scan keeps is dropped, the kernel's passed
+    set matches the host batch oracle's, and passed rows carry the exact
+    distance (terminal exact retire)."""
+    q_rot, c_rot, exact_sq, r_sq = flat_cell
+    sq, passed, _ = dco_screen_kernel(est, q_rot, c_rot, r_sq,
+                                      block_q=8, block_c=128,
+                                      block_d=BLOCK_D)
+    passed = np.asarray(passed)
+    rb = np.asarray(r_sq)[:, None]
+    in_ball = exact_sq <= rb * (1 - 1e-6)
+    assert not np.any(in_ball & ~passed), "false prune vs exact fp32"
+    # vs the host batch oracle: decisions agree everywhere outside a
+    # few-ULP band around r² (kernel and oracle accumulate blockwise in
+    # different orders, so exactly-on-threshold rows may differ)
+    host = np.asarray(dco_screen_batch(q_rot, c_rot, est.table,
+                                       r_sq).passed)
+    decided = np.abs(exact_sq - rb) > 1e-5 * rb
+    assert np.array_equal(passed & decided, host & decided)
+    assert (passed ^ host).sum() <= passed.size * 1e-3  # band is tiny
+    np.testing.assert_allclose(np.asarray(sq)[passed], exact_sq[passed],
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_flat_quant_kernel_oracle_bit_identity(method, est, flat_cell):
+    """Quant on: the int8 lower-bound prefilter kernel vs its oracle —
+    bit-identical prune decisions and LB dims for every method."""
+    q_rot, c_rot, _, r_sq = flat_cell
+    qc = quantize_corpus(c_rot)
+    kw = dict(block_q=8, block_c=128, block_d=BLOCK_D)
+    lb1, pr1, d1 = quant_screen_kernel(est, q_rot, qc.codes, qc.scales,
+                                       r_sq, **kw)
+    lb2, pr2, d2 = quant_screen_kernel(est, q_rot, qc.codes, qc.scales,
+                                       r_sq, use_ref=True, **kw)
+    assert np.array_equal(np.asarray(pr1), np.asarray(pr2))
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_allclose(np.asarray(lb1), np.asarray(lb2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flat_quant_no_false_prune(method, est, flat_cell):
+    """Quant on: the prefilter's error band makes it conservative — no row
+    inside the exact ball is ever pruned, and the two-stage screen's
+    passed set is bit-identical to the pure fp32 screen's (the documented
+    contract, per method)."""
+    q_rot, c_rot, exact_sq, r_sq = flat_cell
+    qc = quantize_corpus(c_rot)
+    _, pruned, _ = quant_screen_kernel(est, q_rot, qc.codes, qc.scales,
+                                       r_sq, block_q=8, block_c=128,
+                                       block_d=BLOCK_D)
+    in_ball = exact_sq <= np.asarray(r_sq)[:, None] * (1 - 1e-6)
+    assert not np.any(in_ball & np.asarray(pruned)), (
+        "int8 prefilter pruned a true neighbour")
+    ts = two_stage_screen(q_rot, c_rot, qc, est.table, r_sq)
+    base = dco_screen_batch(q_rot, c_rot, est.table, r_sq)
+    assert np.array_equal(np.asarray(ts.passed), np.asarray(base.passed))
+
+
+# ---- IVF-fused cells --------------------------------------------------------
+
+def test_ivf_fused_oracle_bit_identity(method, method_ivf_factory, queries):
+    idx = method_ivf_factory(method)
+    qj = jnp.asarray(queries)
+    d1, i1, st1 = search_ivf_fused(idx, qj, k=K, n_probe=8)
+    d2, i2, st2 = search_ivf_fused(idx, qj, k=K, n_probe=8, use_ref=True)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=5e-5, atol=1e-5)
+    # the DMA counters must match the oracle's fetch decisions exactly
+    assert st1.s1_tiles_fetched == st2.s1_tiles_fetched
+    assert st1.s2_slabs_fetched == st2.s2_slabs_fetched
+    assert st1.rows_per_query == st2.rows_per_query
+
+
+def test_ivf_fused_full_probe_equals_brute_force(method, method_ivf_factory,
+                                                 aniso_corpus, queries):
+    """n_probe = n_clusters scans every bucket: the fused top-K must equal
+    exact brute force — the engine-level no-false-prune property."""
+    idx = method_ivf_factory(method)
+    _, ids, _ = search_ivf_fused(idx, jnp.asarray(queries), k=K,
+                                 n_probe=len(idx.centroids))
+    _, gt = exact_knn(jnp.asarray(queries), jnp.asarray(aniso_corpus), K)
+    ids, gt = np.asarray(ids), np.asarray(gt)
+    for qi in range(len(ids)):
+        assert set(ids[qi].tolist()) == set(gt[qi].tolist()), (
+            f"query {qi}: full-probe fused top-{K} != brute force for "
+            f"method {method!r}")
+
+
+def test_ivf_fused_ledger_conservation(method, method_ivf_factory, queries):
+    """Every stats field foots: slab totals against tiles fetched, the
+    skip rate against its definition, dims against D, and the fdscanning
+    cell consumes exactly full-D int8 (no screen before the terminal
+    retire — the EPS_DISABLED semantics, observable in the ledger)."""
+    idx = method_ivf_factory(method)
+    dim = idx.flat_rot.shape[1]
+    _, _, st = search_ivf_fused(idx, jnp.asarray(queries), k=K, n_probe=8)
+    assert st.s1_tiles_fetched > 0
+    assert st.s2_slabs_total == st.s1_tiles_fetched * (
+        dim // idx.scan_block_d)
+    assert 0 <= st.s2_slabs_fetched <= st.s2_slabs_total
+    assert st.s2_skip_rate == pytest.approx(
+        1.0 - st.s2_slabs_fetched / st.s2_slabs_total)
+    assert 0 < st.passed_per_query <= st.rows_per_query
+    assert 0 < st.avg_int8_dims <= dim and 0 <= st.avg_fp_dims <= dim
+    assert st.fetched_bytes_per_query > 0
+    if method == "fdscanning":
+        assert st.avg_int8_dims == dim  # full-D consumption, exactly
+    else:
+        assert st.avg_int8_dims < dim  # calibrated checkpoints fire
+
+
+# ---- graph-fused cells ------------------------------------------------------
+
+def test_graph_fused_oracle_bit_identity(method, method_graph_factory,
+                                         queries):
+    _, g = method_graph_factory(method)
+    qj = jnp.asarray(queries)
+    kw = dict(k=K, ef=32, expand=2, block_q=8)
+    d1, i1, st1 = search_graph_fused(g, qj, **kw)
+    d2, i2, st2 = search_graph_fused(g, qj, use_ref=True, **kw)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=5e-5, atol=1e-5)
+    assert st1.waves == st2.waves
+    assert st1.s1_tiles_fetched == st2.s1_tiles_fetched
+    assert st1.s2_slabs_fetched == st2.s2_slabs_fetched
+
+
+def test_graph_fused_recalls_and_ledger(method, method_graph_factory,
+                                        queries):
+    """The walk converges to good recall for every method, and the graph
+    ledgers foot the same way the IVF ones do."""
+    sub, g = method_graph_factory(method)
+    _, gt = exact_knn(jnp.asarray(queries), jnp.asarray(sub), K)
+    _, ids, st = search_graph_fused(g, jnp.asarray(queries), k=K, ef=32,
+                                    expand=2, block_q=8)
+    ids, gt = np.asarray(ids), np.asarray(gt)
+    recall = np.mean([
+        len(set(ids[i].tolist()) & set(gt[i].tolist())) / K
+        for i in range(len(ids))
+    ])
+    assert recall >= 0.9, f"method {method!r} recall {recall:.3f}"
+    dim = g.adj_rot.shape[1]
+    assert st.waves > 0
+    assert 0 <= st.s2_slabs_fetched <= st.s2_slabs_total
+    if st.s2_slabs_total:
+        assert st.s2_skip_rate == pytest.approx(
+            1.0 - st.s2_slabs_fetched / st.s2_slabs_total)
+    assert 0 < st.avg_int8_dims <= dim and 0 <= st.avg_fp_dims <= dim
+    assert st.fetched_bytes_per_query > 0
+    if method == "fdscanning":
+        assert st.avg_int8_dims == dim
+    else:
+        assert st.avg_int8_dims < dim
+
+
+# ---- cross-method coherence (runs in tier-1, not the per-method CI jobs) ----
+
+def test_cross_method_screen_ordering(method_estimator_factory, aniso_corpus,
+                                      queries):
+    """At the same frozen thresholds the data-aware schedule consumes no
+    more fp32 dims than the distribution-free one, and the exhaustive
+    method bounds both: dims(dade) <= dims(adsampling) < dims(fdscanning)
+    on the aniso fixture — through the SAME kernel entry point."""
+    dims_used = {}
+    for m in KERNEL_METHODS:
+        est = method_estimator_factory(m)
+        q_rot = est.rotate(jnp.asarray(queries))
+        c_rot = est.rotate(jnp.asarray(aniso_corpus))[:N_FLAT]
+        q, c = np.asarray(q_rot), np.asarray(c_rot)
+        exact_sq = ((q * q).sum(1)[:, None] + (c * c).sum(1)[None, :]
+                    - 2.0 * q @ c.T)
+        r_sq = jnp.asarray(np.sort(exact_sq, axis=1)[:, K - 1])
+        _, _, d = dco_screen_kernel(est, q_rot, c_rot, r_sq, block_q=8,
+                                    block_c=128, block_d=BLOCK_D)
+        dims_used[m] = float(np.asarray(d).mean())
+    assert dims_used["dade"] <= dims_used["adsampling"] + 1e-9
+    assert dims_used["adsampling"] < dims_used["fdscanning"]
+    assert dims_used["fdscanning"] == pytest.approx(
+        np.asarray(aniso_corpus).shape[1])
+
+
+# ---- property tests: the spec contract under hypothesis ---------------------
+#
+# Draws are restricted to exact binary fractions small enough that every
+# f32 sum/product below is EXACT (products on a 1/256 grid, magnitudes far
+# under 2^24), so the jnp helpers and the numpy references agree bit-for-
+# bit — no tolerance, no boundary flakes, and hypothesis can shrink freely.
+
+def _mk_table(dims, eps, scale, eps_lo):
+    from repro.core.calibration import EpsilonTable
+    return EpsilonTable(dims=jnp.asarray(dims, jnp.int32),
+                        eps=jnp.asarray(eps, jnp.float32),
+                        scale=jnp.asarray(scale, jnp.float32),
+                        eps_lo=jnp.asarray(eps_lo, jnp.float32))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_prop_blocked_schedule_contract(data):
+    """blocked_schedule against an independent statement of the rule, over
+    random monotone tables and awkward (Δd, D, block_d) shapes: terminal
+    checkpoints retire exact, pre-calibration checkpoints carry the
+    EPS_DISABLED sentinel, everything else takes the entry at the largest
+    calibrated dim <= checkpoint."""
+    from repro.core.estimators import blocked_schedule
+
+    dim = data.draw(st.integers(8, 160), label="dim")
+    block_d = data.draw(st.sampled_from([4, 8, 16, 24, 32]), label="block_d")
+    cuts = sorted(data.draw(
+        st.sets(st.integers(1, dim - 1), min_size=0, max_size=6),
+        label="cuts"))
+    dims = np.asarray(cuts + [dim], np.int64)
+    s = len(dims)
+    eps = np.asarray(
+        data.draw(st.lists(st.integers(1, 24), min_size=s, max_size=s),
+                  label="eps"), np.float64) / 8.0
+    eps[-1] = 0.0
+    scale = np.asarray(
+        data.draw(st.lists(st.integers(1, 64), min_size=s, max_size=s),
+                  label="scale"), np.float64) / 8.0
+    scale[-1] = 1.0
+    eps_lo = np.asarray(
+        data.draw(st.lists(st.integers(0, 7), min_size=s, max_size=s),
+                  label="eps_lo"), np.float64) / 8.0
+    eps_lo[-1] = 0.0
+    table = _mk_table(dims, eps, scale, eps_lo)
+
+    eps_b, scale_b, lo_b, d_pad = blocked_schedule(table, dim, block_d)
+    assert d_pad == ((dim + block_d - 1) // block_d) * block_d
+    assert len(eps_b) == len(scale_b) == len(lo_b) == d_pad // block_d
+    for step in range(d_pad // block_d):
+        cp = min((step + 1) * block_d, dim)
+        if cp >= dim:
+            want = (0.0, 1.0, 0.0)
+        elif cp < dims[0]:
+            want = (EPS_DISABLED, 1.0, 0.0)
+        else:
+            j = max(i for i in range(s) if dims[i] <= cp)
+            want = (eps[j], scale[j], eps_lo[j])
+        got = (float(eps_b[step]), float(scale_b[step]), float(lo_b[step]))
+        assert got == pytest.approx(want), f"checkpoint {cp}: {got} != {want}"
+    # the terminal checkpoint always exists and is exact
+    assert float(eps_b[-1]) == 0.0 and float(scale_b[-1]) == 1.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_prop_stage2_tile_matches_numpy(data):
+    """The blocked fp32 re-screen (tiles.stage2_tile — the arithmetic the
+    demand-paged kernels share) against a plain numpy reference: identical
+    psum, passed set, dims consumed, and slab-fetch count, including
+    schedules with EPS_DISABLED checkpoints and r² = 0 pad rows."""
+    from repro.kernels.tiles import stage2_tile
+
+    bq = data.draw(st.integers(1, 5), label="bq")
+    bc = data.draw(st.integers(1, 7), label="bc")
+    s_count = data.draw(st.integers(1, 5), label="s")
+    block_d = data.draw(st.sampled_from([4, 8]), label="block_d")
+    d = s_count * block_d
+    draw_grid = lambda n, lo, hi, label: np.asarray(data.draw(
+        st.lists(st.integers(lo, hi), min_size=n, max_size=n), label=label),
+        np.float32) / 4.0
+    q = draw_grid(bq * d, -8, 8, "q").reshape(bq, d)
+    c = draw_grid(bc * d, -8, 8, "c").reshape(bc, d)
+    rsq = draw_grid(bq, 0, 256, "rsq").reshape(bq, 1)
+    eps = np.asarray(
+        data.draw(st.lists(
+            st.one_of(st.integers(0, 16), st.just(-1)),
+            min_size=s_count, max_size=s_count), label="eps"), np.float64)
+    eps = np.where(eps < 0, EPS_DISABLED, eps / 8.0).astype(np.float32)
+    eps[-1] = 0.0
+    scale = draw_grid(s_count, 1, 32, "scale") / 2.0  # 1/8 grid
+    scale[-1] = 1.0
+    active0 = np.asarray(data.draw(
+        st.lists(st.booleans(), min_size=bq * bc, max_size=bq * bc),
+        label="active0")).reshape(bq, bc)
+    valid = np.asarray(data.draw(
+        st.lists(st.booleans(), min_size=bc, max_size=bc),
+        label="valid"))[None, :] & np.ones((bq, bc), bool)
+
+    psum_j, passed_j, d32_j, slabs_j = stage2_tile(
+        jnp.asarray(q), jnp.asarray(c), jnp.asarray(eps), jnp.asarray(scale),
+        jnp.asarray(rsq), jnp.asarray(active0), jnp.asarray(valid),
+        block_d=block_d)
+
+    # numpy reference (same f32 formulas; every step exact on the grid).
+    # A disabled checkpoint's threshold (1+EPS_DISABLED)^2 * r^2 overflows
+    # f32 to inf for r^2 > ~3 — both sides agree (est > inf is False, the
+    # checkpoint never fires), so only the numpy warning needs silencing.
+    psum = np.zeros((bq, bc), np.float32)
+    active = active0.copy()
+    d32 = np.zeros((bq, bc), np.float32)
+    slabs = 0.0
+    with np.errstate(over="ignore"):
+        for sidx in range(s_count):
+            sl = slice(sidx * block_d, (sidx + 1) * block_d)
+            if np.any(active & valid):
+                slabs += 1.0
+            qb, cb = q[:, sl], c[:, sl]
+            qn = (qb * qb).sum(1, dtype=np.float32)[:, None]
+            cn = (cb * cb).sum(1, dtype=np.float32)[None, :]
+            dot = qb @ cb.T
+            psum = psum + np.maximum(qn + cn - 2.0 * dot,
+                                     0.0).astype(np.float32)
+            d32 = d32 + np.where(active, np.float32(block_d),
+                                 np.float32(0.0))
+            est = psum * scale[sidx]
+            thr = (np.float32(1.0) + eps[sidx]) ** 2 * rsq
+            if sidx < s_count - 1:
+                active = active & ~(est > thr)
+    passed = active & (psum <= rsq)
+
+    np.testing.assert_array_equal(np.asarray(psum_j), psum)
+    np.testing.assert_array_equal(np.asarray(passed_j), passed)
+    np.testing.assert_array_equal(np.asarray(d32_j), d32)
+    assert float(slabs_j) == slabs
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_prop_first_enabled_eps(data):
+    """first_enabled_eps: the seed-widening epsilon is the first checkpoint
+    that actually screens; an all-disabled schedule widens by zero."""
+    from repro.core.estimators import first_enabled_eps
+
+    n = data.draw(st.integers(1, 8), label="n")
+    vals = np.asarray(data.draw(st.lists(
+        st.one_of(st.integers(0, 16), st.just(-1)),
+        min_size=n, max_size=n), label="vals"), np.float64)
+    eps = np.where(vals < 0, EPS_DISABLED, vals / 8.0).astype(np.float32)
+    enabled = [float(e) for e in eps if e < EPS_DISABLED / 2]
+    want = enabled[0] if enabled else 0.0
+    assert float(first_enabled_eps(jnp.asarray(eps))) == want

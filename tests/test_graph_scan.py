@@ -42,11 +42,8 @@ def _recall(ids, gt_ids):
     ])
 
 
-@pytest.fixture(scope="module")
-def graph_idx(aniso_corpus):
-    sub = np.asarray(aniso_corpus)[:1200]
-    return sub, build_graph(sub, m=12, ef_construction=48, delta_d=16,
-                            quant="int8")
+# ``graph_idx`` lives in conftest.py now: the estimator-conformance suite
+# walks the same index, so the fixture is shared session-wide.
 
 
 # ---- adjacency-flat layout invariants ---------------------------------------

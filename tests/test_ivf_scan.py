@@ -41,9 +41,8 @@ def _recall(ids, gt_ids):
     ])
 
 
-@pytest.fixture(scope="module")
-def fused_idx(aniso_corpus):
-    return build_ivf(aniso_corpus, n_clusters=32, quant="int8", delta_d=16)
+# ``fused_idx`` lives in conftest.py now: the estimator-conformance suite
+# screens the same index, so the fixture is shared session-wide.
 
 
 # ---- per-block scales: the error bound the kernel's soundness rests on -----

@@ -508,3 +508,89 @@ def test_schema_check_rejects_engine_serving_deleted_rows(tmp_path):
     r = _schema_check(tmp_path, m)
     assert r.returncode == 1
     assert "engine serving deleted rows" in r.stdout
+
+
+# ---- estimator-spec interactions (satellite of the estimator-spec PR) -------
+#
+# The estimator-pluggable kernels promise method-agnostic serving; the
+# mutable layer must keep that promise through churn: a hot-swapped table
+# stays kernel-expressible, and tombstones/threshold-seeding compose with
+# every method, not just dade.
+
+
+def test_watchdog_recalibrates_adsampling_with_parity(aniso_corpus):
+    """Drift fires the watchdog on an ADSampling table too (its analytic
+    D/d scales overshoot once the spectrum decays), the paired parity
+    proof gates the swap, and the refit estimator is still expressible in
+    the fused kernels (terminal exact retire preserved) with staleness
+    back inside the band."""
+    from repro.core.estimators import kernel_spec
+
+    sub = np.asarray(aniso_corpus)[:400]
+    est = build_estimator("adsampling", jnp.asarray(sub),
+                          jax.random.PRNGKey(0), delta_d=16)
+    drift = np.asarray(drifted_vectors(est.transform, 400, extra_decay=0.15,
+                                       seed=11))
+    holder = MutableFlat(sub, estimator=est)
+    wd = _observed_watchdog(sub, drift)
+    rep = wd.maybe_recalibrate(holder)
+    assert rep["fired"] and rep["parity_ok"] and rep["swapped"]
+    new_est = holder.estimator
+    assert new_est is not est
+    assert new_est.transform is est.transform  # rotation frozen
+    spec = kernel_spec(new_est, sub.shape[1], 16)  # still expressible
+    assert float(spec.eps[-1]) == 0.0 and float(spec.scale[-1]) == 1.0
+    assert wd.check(new_est)["stat"] <= rep["threshold"]
+
+
+def test_watchdog_inert_on_fdscanning(aniso_corpus):
+    """FDScanning's single exact checkpoint cannot go stale — under the
+    same drift that fires the calibrated tables, the watchdog reports
+    nothing to recalibrate instead of refitting a table the method does
+    not have."""
+    sub = np.asarray(aniso_corpus)[:400]
+    est = build_estimator("fdscanning", jnp.asarray(sub),
+                          jax.random.PRNGKey(0))
+    drift = np.asarray(drifted_vectors(est.transform, 400, extra_decay=0.15,
+                                       seed=11))
+    holder = MutableFlat(sub, estimator=est)
+    wd = _observed_watchdog(sub, drift)
+    rep = wd.maybe_recalibrate(holder)
+    assert not rep["fired"] and not rep["swapped"]
+    assert holder.estimator is est
+    assert (wd.fired, wd.recalibrations) == (0, 0)
+
+
+@pytest.mark.parametrize("method", ["adsampling", "fdscanning"])
+def test_mutable_graph_deletes_and_seeding_conform(aniso_corpus, queries,
+                                                   method):
+    """Tombstones x threshold seeding x estimator spec: for non-dade
+    methods too, the seeded fused walk over a churned graph (a) equals the
+    unseeded walk (seeding is an optimization, never a semantic), (b)
+    equals the fresh rebuild under the same tombstones, (c) matches the
+    host oracle bit-for-bit, and (d) never serves a deleted row."""
+    corpus = np.asarray(aniso_corpus)[:160]
+    est = build_estimator(method, jnp.asarray(corpus), jax.random.PRNGKey(0),
+                          delta_d=16, num_pairs=1024)
+    mg = MutableGraph(corpus, m=8, ef_construction=24, estimator=est,
+                      quant="int8", capacity=200)
+    doomed = [1, 5, 40]
+    for gid in doomed:
+        assert mg.delete(gid)
+    q = jnp.asarray(np.asarray(queries)[:8])
+    kw = dict(k=5, ef=16, expand=2, block_q=8)
+    d_seed, i_seed, _ = mg.search(q, seed_r=True, **kw)
+    _, i_cold, _ = mg.search(q, seed_r=False, **kw)
+    assert np.array_equal(np.asarray(i_seed), np.asarray(i_cold))
+    t = mg.tombstones
+    ref = build_graph(corpus, estimator=est, m=8, ef_construction=24,
+                      quant="int8")
+    d_reb, i_reb, _ = search_graph_fused(ref, q, tombstones=t, exclude=t,
+                                         seed_r=True, **kw)
+    _, i_ora, _ = search_graph_fused(ref, q, tombstones=t, exclude=t,
+                                     seed_r=True, use_ref=True, **kw)
+    assert np.array_equal(np.asarray(i_seed), np.asarray(i_reb))
+    assert np.array_equal(np.asarray(i_reb), np.asarray(i_ora))
+    np.testing.assert_allclose(np.asarray(d_seed), np.asarray(d_reb),
+                               rtol=5e-5, atol=1e-5)
+    assert not np.isin(np.asarray(i_seed), doomed).any()
