@@ -36,12 +36,12 @@ def main() -> None:
         fig1_variance, fig2_time_recall, fig3_feasibility,
         fig4_ps_sensitivity, fig5_delta_d, fig6_quant, fig7_ivf_fused,
         fig8_graph_fused, fig9_graph_sharded, fig10_churn,
-        fig11_method_matrix, kernel_bench,
+        fig11_method_matrix, fig12_continuous, kernel_bench,
     )
     mods = [fig1_variance, fig3_feasibility, fig4_ps_sensitivity,
             fig5_delta_d, kernel_bench, fig2_time_recall, fig6_quant,
             fig7_ivf_fused, fig8_graph_fused, fig9_graph_sharded,
-            fig10_churn, fig11_method_matrix]
+            fig10_churn, fig11_method_matrix, fig12_continuous]
     if args.only:
         wanted = {m.strip() for m in args.only.split(",") if m.strip()}
         mods = [m for m in mods if m.__name__.split(".")[-1] in wanted]

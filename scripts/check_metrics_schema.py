@@ -119,6 +119,47 @@ def check(path: str) -> int:
         fails.append("consistency: serve.shed.* present without "
                      "serve.requests.submitted")
 
+    # Continuous-batching admission ledger (serve.py --continuous): every
+    # admitted walk leaves the engine exactly once — retired (with a named
+    # reason) or withdrawn by a shed.  When nothing was shed at either
+    # ledger, every served row is a retirement, so the admission ledger
+    # cross-foots with serve.queries.
+    admitted = value("serve.admission.admitted")
+    if admitted is not None:
+        retired = value("serve.admission.retired") or 0
+        adm_shed = value("serve.admission.shed") or 0
+        if admitted != retired + adm_shed:
+            fails.append(
+                f"consistency: serve.admission.admitted={admitted} != "
+                f"retired {retired} + shed {adm_shed}")
+        reasons = ("serve.retire.frontier", "serve.retire.budget",
+                   "serve.retire.stall")
+        by_reason = sum(value(k) or 0 for k in reasons)
+        if by_reason != retired:
+            fails.append(
+                f"consistency: Σ serve.retire.* = {by_reason} != "
+                f"serve.admission.retired {retired}")
+        depth = metrics.get("serve.wave.depth")
+        if depth and depth.get("count") != retired:
+            fails.append(
+                f"consistency: serve.wave.depth count {depth.get('count')} "
+                f"!= serve.admission.retired {retired}")
+        req_shed = sum(value(k) or 0 for k in shed_keys)
+        if adm_shed == 0 and req_shed == 0 \
+                and value("serve.queries") is not None \
+                and retired != value("serve.queries"):
+            fails.append(
+                f"consistency: nothing shed but serve.admission.retired="
+                f"{retired} != serve.queries={value('serve.queries')}")
+        if submitted is None:
+            fails.append("consistency: serve.admission.* present without "
+                         "serve.requests.submitted")
+    elif any(k.startswith("serve.retire.") for k in metrics):
+        orphan = sorted(k for k in metrics
+                        if k.startswith("serve.retire."))[0]
+        fails.append(f"consistency: {orphan} present without "
+                     f"serve.admission.admitted")
+
     if value("graph.sharded.degraded.requests") is not None:
         for g in ("graph.sharded.degraded.recall",
                   "graph.sharded.degraded.recall_delta"):

@@ -992,6 +992,45 @@ def _run_wave_loop(
     return dists, ids, acc
 
 
+def _graph_stats(index: GraphIndex, *, dim: int, k: int, seed_r: bool,
+                 qn: int, waves: float, sem, s1_tiles: float,
+                 s2_slabs: float) -> GraphScanStats:
+    """The ``GraphScanStats`` ledger arithmetic, shared verbatim by the
+    batch epilogue (``_beam_scan``) and the continuous-batching engine's
+    per-query retirement ledger (``launch.annservice``) — one accounting
+    rule, so a query served mid-walk books the exact bytes the same query
+    books when served alone."""
+    rows = max(float(sem[2]), 1.0)
+    d_pad = index.adj_rot.shape[1]
+    fp_bytes = jnp.dtype(index.adj_rot.dtype).itemsize  # f32 or bf16 rows
+    # Seeding streams the entry's int8 neighbour block + k exact rows per
+    # query before wave 0 — count those corpus bytes in every ledger.
+    seed_bytes = (index.degree * dim + 4 * k * dim) if seed_r else 0
+    s2_fetched_b, _, s2_skip, s2_total = stage2_fetch_report(
+        s1_tiles, s2_slabs, block_c=index.adj_block, d_pad=d_pad,
+        block_d=index.scan_block_d, fp_bytes=fp_bytes)
+    fetched = fetched_tile_bytes(
+        s1_tiles, block_c=index.adj_block, dims=d_pad, bytes_per_dim=1,
+        id_bytes=ID_BYTES) + s2_fetched_b
+    return GraphScanStats(
+        waves=float(waves),
+        expansions_per_query=s1_tiles / qn,
+        rows_per_query=rows / qn,
+        avg_int8_dims=float(sem[0]) / rows,
+        avg_fp_dims=float(sem[1]) / rows,
+        passed_per_query=float(sem[3]) / qn,
+        bytes_per_query=float(two_stage_bytes(
+            sem[0], sem[1], fp_bytes=fp_bytes)) / qn + seed_bytes,
+        fetched_bytes_per_query=fetched / qn + seed_bytes,
+        gather_bytes_per_query=row_gather_bytes(
+            rows, dims=dim, fp_bytes=fp_bytes) / qn + seed_bytes,
+        s1_tiles_fetched=s1_tiles,
+        s2_slabs_total=s2_total,
+        s2_slabs_fetched=s2_slabs,
+        s2_skip_rate=s2_skip,
+    )
+
+
 def _beam_scan(
     index: GraphIndex,
     queries: jax.Array,
@@ -1019,41 +1058,11 @@ def _beam_scan(
         route_mult=route_mult, num_shards=1, tighten=True,
         interpret=interpret, use_ref=use_ref, tombstones=tombstones,
         exclude=exclude)
-    qn = acc["qn"]
-    sem = acc["sem"]
-    waves = acc["waves"]
-    s1_tiles = float(acc["s1_tiles"].sum())
-    s2_slabs = float(acc["s2_slabs"].sum())
-
-    rows = max(float(sem[2]), 1.0)
-    d_pad = index.adj_rot.shape[1]
-    fp_bytes = jnp.dtype(index.adj_rot.dtype).itemsize  # f32 or bf16 rows
-    # Seeding streams the entry's int8 neighbour block + k exact rows per
-    # query before wave 0 — count those corpus bytes in every ledger.
-    seed_bytes = (index.degree * dim + 4 * k * dim) if seed_r else 0
-    s2_fetched_b, _, s2_skip, s2_total = stage2_fetch_report(
-        s1_tiles, s2_slabs, block_c=index.adj_block, d_pad=d_pad,
-        block_d=index.scan_block_d, fp_bytes=fp_bytes)
-    fetched = fetched_tile_bytes(
-        s1_tiles, block_c=index.adj_block, dims=d_pad, bytes_per_dim=1,
-        id_bytes=ID_BYTES) + s2_fetched_b
-    stats = GraphScanStats(
-        waves=float(waves),
-        expansions_per_query=s1_tiles / qn,
-        rows_per_query=rows / qn,
-        avg_int8_dims=float(sem[0]) / rows,
-        avg_fp_dims=float(sem[1]) / rows,
-        passed_per_query=float(sem[3]) / qn,
-        bytes_per_query=float(two_stage_bytes(
-            sem[0], sem[1], fp_bytes=fp_bytes)) / qn + seed_bytes,
-        fetched_bytes_per_query=fetched / qn + seed_bytes,
-        gather_bytes_per_query=row_gather_bytes(
-            rows, dims=dim, fp_bytes=fp_bytes) / qn + seed_bytes,
-        s1_tiles_fetched=s1_tiles,
-        s2_slabs_total=s2_total,
-        s2_slabs_fetched=s2_slabs,
-        s2_skip_rate=s2_skip,
-    )
+    stats = _graph_stats(
+        index, dim=dim, k=k, seed_r=seed_r, qn=acc["qn"],
+        waves=acc["waves"], sem=acc["sem"],
+        s1_tiles=float(acc["s1_tiles"].sum()),
+        s2_slabs=float(acc["s2_slabs"].sum()))
     return jnp.asarray(dists), jnp.asarray(ids), stats
 
 
@@ -1308,14 +1317,24 @@ def _beam_scan_sharded(
         route_mult=route_mult, num_shards=num_shards, tighten=False,
         interpret=interpret, use_ref=use_ref, wave_step=wave_step,
         tombstones=tombstones, exclude=exclude)
-    qn = acc["qn"]
-    sem = acc["sem"]
-    waves = acc["waves"]
-    s1_tiles = acc["s1_tiles"]
-    s2_slabs = acc["s2_slabs"]
-    exch_bytes = acc["exch_bytes"]
-    a_block = index.adj_block
+    stats = _graph_sharded_stats(
+        index, dim=dim, k=k, seed_r=seed_r, qn=acc["qn"],
+        waves=acc["waves"], sem=acc["sem"], s1_tiles=acc["s1_tiles"],
+        s2_slabs=acc["s2_slabs"], exch_bytes=acc["exch_bytes"],
+        num_shards=num_shards, tombstones=tombstones)
+    return jnp.asarray(dists), jnp.asarray(ids), stats
 
+
+def _graph_sharded_stats(index: GraphIndex, *, dim: int, k: int,
+                         seed_r: bool, qn: int, waves: float, sem,
+                         s1_tiles, s2_slabs, exch_bytes: float,
+                         num_shards: int, tombstones=()) -> GraphShardedStats:
+    """The ``GraphShardedStats`` ledger arithmetic, shared verbatim by the
+    sharded batch epilogue above and the continuous-batching engine's
+    per-query retirement ledger (``launch.annservice``) — one accounting
+    rule, so a query served mid-walk over shards books the exact bytes the
+    same query books when served alone."""
+    a_block = index.adj_block
     rows = max(float(sem[2]), 1.0)
     d_pad = index.adj_rot.shape[1]
     fp_bytes = jnp.dtype(index.adj_rot.dtype).itemsize
@@ -1331,8 +1350,8 @@ def _beam_scan_sharded(
             (fetched_tile_bytes(s1_tiles[s], block_c=a_block, dims=d_pad,
                                 bytes_per_dim=1, id_bytes=ID_BYTES)
              + s2_fetched_b) / qn)
-    skip = (1.0 - float(s2_slabs.sum()) / s2_total_all) if s2_total_all \
-        else 0.0
+    skip = (1.0 - float(np.asarray(s2_slabs).sum()) / s2_total_all) \
+        if s2_total_all else 0.0
     tomb_nodes = 0
     dead = ()
     if tombstones:
@@ -1344,7 +1363,7 @@ def _beam_scan_sharded(
         ranges = shard_graph_nodes(n, num_shards)
         dead = tuple(s for s, (b, c) in enumerate(ranges)
                      if not alive[b: b + c].any())
-    stats = GraphShardedStats(
+    return GraphShardedStats(
         waves=float(waves),
         num_shards=num_shards,
         rows_per_query=rows / qn,
@@ -1353,15 +1372,14 @@ def _beam_scan_sharded(
             sem[0], sem[1], fp_bytes=fp_bytes)) / qn + seed_bytes,
         fetched_bytes_per_query=float(sum(shard_fetched)) + seed_bytes,
         shard_fetched_bytes_per_query=tuple(shard_fetched),
-        shard_s1_tiles_fetched=tuple(s1_tiles.tolist()),
-        shard_s2_slabs_fetched=tuple(s2_slabs.tolist()),
+        shard_s1_tiles_fetched=tuple(np.asarray(s1_tiles).tolist()),
+        shard_s2_slabs_fetched=tuple(np.asarray(s2_slabs).tolist()),
         s2_skip_rate=skip,
         exchange_bytes_per_wave=exch_bytes / max(waves, 1),
         exchange_bytes_per_query=exch_bytes / qn,
         tombstoned_nodes=float(tomb_nodes),
         dead_shards=dead,
     )
-    return jnp.asarray(dists), jnp.asarray(ids), stats
 
 
 def search_graph_sharded(

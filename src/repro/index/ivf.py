@@ -385,6 +385,122 @@ class FusedScanStats(NamedTuple):
     fetched_bytes_per_query: float = 0.0  # DMA-granular HBM bytes / query
 
 
+def _route_tiles(index: IVFIndex, q_rot: jax.Array, *, n_probe: int,
+                 block_q: int):
+    """Tile-level probe routing for the fused scan.
+
+    Groups queries into tiles of ``block_q`` by nearest centroid and ranks
+    each tile's buckets by rank-weighted votes from its queries' own
+    top-``n_probe`` lists, tie-broken by the tile-min centroid distance.
+    Shared by ``search_ivf_fused`` and the continuous-batching engine (one
+    query per tile there), so the probe plan a solo tile gets is THE plan
+    the batch oracle would compute for that query alone — the routing half
+    of the interleaving-invariance argument is structural.
+
+    Returns ``(order, inv, q_sorted, tile_buckets, window_starts,
+    window_rows)``.
+    """
+    qn = q_rot.shape[0]
+    cd = (
+        jnp.sum(q_rot * q_rot, axis=1)[:, None]
+        + jnp.sum(index.centroids * index.centroids, axis=1)[None, :]
+        - 2.0 * q_rot @ index.centroids.T
+    )
+    # Group queries into tiles of block_q by nearest centroid.
+    nearest = jnp.argmin(cd, axis=1)
+    order = jnp.argsort(nearest)
+    inv = jnp.argsort(order)
+    q_sorted = q_rot[order]
+    cd_sorted = cd[order]
+
+    q_tiles = (qn + block_q - 1) // block_q
+    pad = q_tiles * block_q - qn
+    nc = cd.shape[1]
+    cd_t = jnp.concatenate(
+        [cd_sorted, jnp.full((pad, nc), jnp.inf)], axis=0
+    ).reshape(q_tiles, block_q, nc)
+    tile_cd = jnp.min(cd_t, axis=1)  # (QT, Nc)
+    # Rank a tile's buckets by rank-weighted votes from its queries'
+    # OWN top-n_probe lists (weight 1/(rank+1): a query's primary
+    # bucket outweighs several mid-rank mentions), tie-broken by the
+    # tile-min centroid distance.  Pure min-distance ranking starves
+    # queries whose buckets are individually close but never
+    # tile-closest; unweighted voting drops primary buckets for
+    # popular mid-rank ones — both cost measurable recall on
+    # clustered corpora.
+    _, q_probe = jax.lax.top_k(-cd_sorted, n_probe)  # (Q, P) per query
+    rank_w = 1.0 / (jnp.arange(n_probe, dtype=jnp.float32) + 1.0)
+    # Rank-0 gets an overwhelming weight: a tile holds at most block_q
+    # distinct top-1 buckets, so with n_probe >= block_q EVERY query's
+    # primary bucket — where most of its neighbours live — is
+    # guaranteed a slot, whatever the rest of the tile votes.
+    rank_w = rank_w.at[0].set(float(n_probe * block_q))
+    # Scatter-add, not one_hot: the dense (Q, P, Nc) intermediate
+    # would be ~100 MB per call at roadmap scale (Nc ~ thousands).
+    votes_q = jnp.zeros((qn, nc), jnp.float32).at[
+        jnp.arange(qn)[:, None], q_probe].add(rank_w[None, :])  # (Q, Nc)
+    votes = jnp.concatenate(
+        [votes_q, jnp.zeros((pad, nc))], axis=0
+    ).reshape(q_tiles, block_q, nc).sum(axis=1)  # (QT, Nc)
+    finite_cd = jnp.where(jnp.isfinite(tile_cd), tile_cd, 0.0)
+    tiebreak = finite_cd / (jnp.max(finite_cd) + 1.0) * 1e-3  # < votes
+    _, tile_buckets = jax.lax.top_k(votes - tiebreak, n_probe)
+    window_starts = index.starts[tile_buckets]  # (QT, P) flat offsets
+    window_rows = index.bucket_sizes[tile_buckets]  # (QT, P) sizes
+    return order, inv, q_sorted, tile_buckets, window_starts, window_rows
+
+
+def _fused_stats(index: IVFIndex, stats, *, qn: int, k: int, block_q: int,
+                 block_c: int, seed_r: bool) -> FusedScanStats:
+    """FusedScanStats epilogue from raw kernel stats rows.
+
+    One place turns the (Q, 6) counters into the per-query ledger, shared
+    by ``search_ivf_fused`` and the continuous engine so a solo slot's
+    ledger is built by the same arithmetic the batch oracle uses (the stat
+    columns are integer-valued f32 — sums are exact, so the ledgers compare
+    with ``==``)."""
+    tr = current_tracer()
+    st = np.asarray(stats)
+    rows = max(float(st[:, 2].sum()), 1.0)
+    # Seeding streams the nearest bucket's int8 codes and k exact rows per
+    # query before the kernel launch — count those corpus bytes too.
+    d_pad = index.flat_rot.shape[1]
+    seed_bytes = (index.capacity * index.qbuckets.shape[2]
+                  + 4 * k * d_pad) if seed_r else 0
+    # DMA-granular accounting: the demand-paged kernel reports the int8
+    # tiles and fp32 slabs it actually shipped from HBM (fetch counters
+    # broadcast per query tile; fused_fetch_totals stride-samples them
+    # losslessly).  A non-paged pipeline would ship every slab of every
+    # scanned tile — that is the skip-rate denominator.
+    s1_tiles, s2_slabs = fused_fetch_totals(st, block_q)
+    block_d = index.scan_block_d
+    fp_itemsize = jnp.dtype(index.flat_rot.dtype).itemsize
+    s2_fetched_b, _, s2_skip, s2_total = stage2_fetch_report(
+        s1_tiles, s2_slabs, block_c=block_c, d_pad=d_pad, block_d=block_d,
+        fp_bytes=fp_itemsize)
+    tr.instant("ivf.stage1_dma", tiles=s1_tiles,
+               bytes=fetched_tile_bytes(s1_tiles, block_c=block_c,
+                                        dims=d_pad, bytes_per_dim=1,
+                                        id_bytes=ID_BYTES))
+    tr.instant("ivf.stage2", slabs=s2_slabs, bytes=float(s2_fetched_b))
+    fetched = fetched_tile_bytes(
+        s1_tiles, block_c=block_c, dims=d_pad, bytes_per_dim=1,
+        id_bytes=ID_BYTES) + s2_fetched_b
+    return FusedScanStats(
+        avg_fp_dims=float(st[:, 1].sum()) / rows,
+        avg_int8_dims=float(st[:, 0].sum()) / rows,
+        rows_per_query=rows / qn,
+        bytes_per_query=(float(st[:, 0].sum()) + 4.0 * float(st[:, 1].sum())
+                         ) / qn + seed_bytes,
+        passed_per_query=float(st[:, 3].sum()) / qn,
+        s1_tiles_fetched=s1_tiles,
+        s2_slabs_total=s2_total,
+        s2_slabs_fetched=s2_slabs,
+        s2_skip_rate=s2_skip,
+        fetched_bytes_per_query=fetched / qn + seed_bytes,
+    )
+
+
 def search_ivf_fused(
     index: IVFIndex,
     queries: jax.Array,
@@ -425,52 +541,10 @@ def search_ivf_fused(
     n_probe = min(n_probe, index.n_clusters)
 
     with tr.span("ivf.route", n_probe=n_probe):
-        cd = (
-            jnp.sum(q_rot * q_rot, axis=1)[:, None]
-            + jnp.sum(index.centroids * index.centroids, axis=1)[None, :]
-            - 2.0 * q_rot @ index.centroids.T
-        )
-        # Group queries into tiles of block_q by nearest centroid.
-        nearest = jnp.argmin(cd, axis=1)
-        order = jnp.argsort(nearest)
-        inv = jnp.argsort(order)
-        q_sorted = q_rot[order]
-        cd_sorted = cd[order]
-
+        (order, inv, q_sorted, tile_buckets, window_starts,
+         window_rows) = _route_tiles(index, q_rot, n_probe=n_probe,
+                                     block_q=block_q)
         q_tiles = (qn + block_q - 1) // block_q
-        pad = q_tiles * block_q - qn
-        nc = cd.shape[1]
-        cd_t = jnp.concatenate(
-            [cd_sorted, jnp.full((pad, nc), jnp.inf)], axis=0
-        ).reshape(q_tiles, block_q, nc)
-        tile_cd = jnp.min(cd_t, axis=1)  # (QT, Nc)
-        # Rank a tile's buckets by rank-weighted votes from its queries'
-        # OWN top-n_probe lists (weight 1/(rank+1): a query's primary
-        # bucket outweighs several mid-rank mentions), tie-broken by the
-        # tile-min centroid distance.  Pure min-distance ranking starves
-        # queries whose buckets are individually close but never
-        # tile-closest; unweighted voting drops primary buckets for
-        # popular mid-rank ones — both cost measurable recall on
-        # clustered corpora.
-        _, q_probe = jax.lax.top_k(-cd_sorted, n_probe)  # (Q, P) per query
-        rank_w = 1.0 / (jnp.arange(n_probe, dtype=jnp.float32) + 1.0)
-        # Rank-0 gets an overwhelming weight: a tile holds at most block_q
-        # distinct top-1 buckets, so with n_probe >= block_q EVERY query's
-        # primary bucket — where most of its neighbours live — is
-        # guaranteed a slot, whatever the rest of the tile votes.
-        rank_w = rank_w.at[0].set(float(n_probe * block_q))
-        # Scatter-add, not one_hot: the dense (Q, P, Nc) intermediate
-        # would be ~100 MB per call at roadmap scale (Nc ~ thousands).
-        votes_q = jnp.zeros((qn, nc), jnp.float32).at[
-            jnp.arange(qn)[:, None], q_probe].add(rank_w[None, :])  # (Q, Nc)
-        votes = jnp.concatenate(
-            [votes_q, jnp.zeros((pad, nc))], axis=0
-        ).reshape(q_tiles, block_q, nc).sum(axis=1)  # (QT, Nc)
-        finite_cd = jnp.where(jnp.isfinite(tile_cd), tile_cd, 0.0)
-        tiebreak = finite_cd / (jnp.max(finite_cd) + 1.0) * 1e-3  # < votes
-        _, tile_buckets = jax.lax.top_k(votes - tiebreak, n_probe)
-        window_starts = index.starts[tile_buckets]  # (QT, P) flat offsets
-        window_rows = index.bucket_sizes[tile_buckets]  # (QT, P) sizes
         tr.fence(window_rows)
 
     with tr.span("ivf.seed", seed_r=seed_r):
@@ -497,43 +571,6 @@ def search_ivf_fused(
         ))
     dists = jnp.sqrt(jnp.maximum(top_sq, 0.0))[inv]
     ids = top_ids[inv]
-    st = np.asarray(stats)
-    rows = max(float(st[:, 2].sum()), 1.0)
-    # Seeding streams the nearest bucket's int8 codes and k exact rows per
-    # query before the kernel launch — count those corpus bytes too.
-    d_pad = index.flat_rot.shape[1]
-    seed_bytes = (index.capacity * index.qbuckets.shape[2]
-                  + 4 * k * d_pad) if seed_r else 0
-    # DMA-granular accounting: the demand-paged kernel reports the int8
-    # tiles and fp32 slabs it actually shipped from HBM (fetch counters
-    # broadcast per query tile; fused_fetch_totals stride-samples them
-    # losslessly).  A non-paged pipeline would ship every slab of every
-    # scanned tile — that is the skip-rate denominator.
-    s1_tiles, s2_slabs = fused_fetch_totals(st, block_q)
-    block_d = index.scan_block_d
-    fp_itemsize = jnp.dtype(index.flat_rot.dtype).itemsize
-    s2_fetched_b, _, s2_skip, s2_total = stage2_fetch_report(
-        s1_tiles, s2_slabs, block_c=block_c, d_pad=d_pad, block_d=block_d,
-        fp_bytes=fp_itemsize)
-    tr.instant("ivf.stage1_dma", tiles=s1_tiles,
-               bytes=fetched_tile_bytes(s1_tiles, block_c=block_c,
-                                        dims=d_pad, bytes_per_dim=1,
-                                        id_bytes=ID_BYTES))
-    tr.instant("ivf.stage2", slabs=s2_slabs, bytes=float(s2_fetched_b))
-    fetched = fetched_tile_bytes(
-        s1_tiles, block_c=block_c, dims=d_pad, bytes_per_dim=1,
-        id_bytes=ID_BYTES) + s2_fetched_b
-    fused_stats = FusedScanStats(
-        avg_fp_dims=float(st[:, 1].sum()) / rows,
-        avg_int8_dims=float(st[:, 0].sum()) / rows,
-        rows_per_query=rows / qn,
-        bytes_per_query=(float(st[:, 0].sum()) + 4.0 * float(st[:, 1].sum())
-                         ) / qn + seed_bytes,
-        passed_per_query=float(st[:, 3].sum()) / qn,
-        s1_tiles_fetched=s1_tiles,
-        s2_slabs_total=s2_total,
-        s2_slabs_fetched=s2_slabs,
-        s2_skip_rate=s2_skip,
-        fetched_bytes_per_query=fetched / qn + seed_bytes,
-    )
+    fused_stats = _fused_stats(index, stats, qn=qn, k=k, block_q=block_q,
+                               block_c=block_c, seed_r=seed_r)
     return dists, ids, fused_stats

@@ -136,6 +136,8 @@ def _kernel(
     q_ref,  # (QT, D) f32 exact rotated queries
     qscales_ref,  # (QT, S) f32 per-query block scales
     rsq0_ref,  # (QT, 1) f32 seeded initial thresholds
+    top0_sq_ref,  # (QT, K) f32 seeded top-K window (inf = empty)
+    top0_ids_ref,  # (QT, K) i32 seeded top-K ids (-1 = empty)
     codes_hbm,  # (N_pad, D) int8 flat corpus codes — HBM-resident (ANY)
     rows_hbm,  # (N_pad, D) fp flat corpus rows — HBM-resident (ANY)
     ids_ref,  # (1, CT) i32 corpus row ids, -1 for tail padding
@@ -185,8 +187,11 @@ def _kernel(
 
     @pl.when(step == 0)
     def _init():
-        top_sq_s[...] = jnp.full_like(top_sq_s, jnp.inf)
-        top_ids_s[...] = jnp.full_like(top_ids_s, -1)
+        # The top-K window seeds from the caller (inf/-1 = empty): a
+        # chunked launch sequence resumes the window the previous chunk
+        # returned, keeping split probe plans bit-identical to one launch.
+        top_sq_s[...] = top0_sq_ref[...]
+        top_ids_s[...] = top0_ids_ref[...]
         rsq_s[...] = rsq0_ref[...]
         stats_s[...] = jnp.zeros_like(stats_s)
         slot_s[0, 0] = 0
@@ -336,6 +341,8 @@ def ivf_scan_kernel_call(
     q_rot: jax.Array,  # (Q, D) f32
     qscales: jax.Array,  # (Q, S) f32
     r0_sq: jax.Array,  # (Q,) f32
+    top0_sq: jax.Array,  # (Q, K) f32 seeded top-K window (inf = empty)
+    top0_ids: jax.Array,  # (Q, K) i32 seeded top-K ids (-1 = empty)
     flat_codes: jax.Array,  # (N_pad, D) int8 cluster-contiguous
     flat_rot: jax.Array,  # (N_pad, D) f32/bf16
     flat_ids: jax.Array,  # (N_pad,) i32, -1 tail padding
@@ -402,6 +409,8 @@ def ivf_scan_kernel_call(
             pl.BlockSpec((block_q, dim), lambda i, p, t, offs: (i, 0)),
             pl.BlockSpec((block_q, s_count), lambda i, p, t, offs: (i, 0)),
             pl.BlockSpec((block_q, 1), lambda i, p, t, offs: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, p, t, offs: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, p, t, offs: (i, 0)),
             # The candidate streams are NOT pipelined by BlockSpec: the
             # kernel pages them manually (int8 double-buffered, fp32 slabs
             # on demand), so an all-pruned tile never ships fp32 bytes.
@@ -453,6 +462,8 @@ def ivf_scan_kernel_call(
         q_rot.astype(jnp.float32),
         qscales.astype(jnp.float32),
         r0_sq.reshape(-1, 1).astype(jnp.float32),
+        top0_sq.astype(jnp.float32),
+        top0_ids.astype(jnp.int32),
         flat_codes,
         flat_rot,  # f32 or bf16 — stage 2 upcasts per block
         flat_ids.reshape(1, -1).astype(jnp.int32),

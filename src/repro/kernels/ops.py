@@ -45,7 +45,7 @@ __all__ = [
     "dco_screen_kernel", "quant_screen_kernel", "ivf_scan_kernel",
     "graph_scan_kernel", "ivf_cap_tiles", "build_window_offsets",
     "block_table", "on_tpu", "min_block_q", "fused_fetch_totals",
-    "graph_vis_words", "unpack_vis",
+    "graph_vis_words", "unpack_vis", "pow2_bucket", "pad_live_rows",
     "EstimatorSpec", "UnsupportedMethodError", "kernel_spec", "EPS_DISABLED",
 ]
 
@@ -116,6 +116,42 @@ def fused_fetch_totals(stats, block_q: int):
     st = np.asarray(stats)
     first = st[::block_q]
     return float(first[:, 5].sum()), float(first[:, 4].sum())
+
+
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= ``n`` (minimum 1) — the recompile-bounding
+    bucket grid.  Launch dimensions that vary per wave (live-set tile
+    counts, frontier step counts) round up to it so a serving run compiles
+    at most ``log2(max)`` shapes per dimension instead of one per value."""
+    if n < 1:
+        raise ValueError(f"pow2_bucket needs n >= 1, got {n}")
+    return 1 << (int(n) - 1).bit_length()
+
+
+def pad_live_rows(x, live_rows: int, bucket_rows: int, *, fill):
+    """Ragged live-set padding guard: pad the stacked live-slot rows of a
+    continuous-batch launch up to the pow2 bucket, failing fast on the two
+    silent-corruption hazards — a stack that disagrees with the declared
+    live count (stale slot rows would ride into the kernel as if live) and
+    a non-pow2 bucket (which defeats the recompile bound).  Pad rows carry
+    ``fill``, the same inert value the batch path pads with, so the kernel
+    prunes them at the first checkpoint."""
+    x = np.asarray(x)
+    if x.shape[0] != live_rows:
+        raise ValueError(
+            f"live-set stack has {x.shape[0]} rows, caller declared "
+            f"{live_rows} live — refusing to launch stale slot rows")
+    if bucket_rows < live_rows:
+        raise ValueError(
+            f"bucket of {bucket_rows} rows cannot hold {live_rows} live rows")
+    if bucket_rows & (bucket_rows - 1):
+        raise ValueError(
+            f"bucket_rows={bucket_rows} is not a power of two — the "
+            f"recompile bound needs pow2_bucket sizing")
+    if bucket_rows == live_rows:
+        return x
+    pad = np.full((bucket_rows - live_rows,) + x.shape[1:], fill, x.dtype)
+    return np.concatenate([x, pad], axis=0)
 
 
 def ivf_cap_tiles(max_bucket: int, block_c: int, *, starts_aligned: bool) -> int:
@@ -315,22 +351,23 @@ def quant_screen_kernel(
     )
 
 
-def _ivf_scan_call(tile_offs, qcodes, q, qscales, r0, flat_codes, flat_rot,
-                   flat_ids, bscales, eps, scale, k, block_q, block_c,
-                   block_d, cap_tiles, slack, interpret, use_ref):
+def _ivf_scan_call(tile_offs, qcodes, q, qscales, r0, top0_sq, top0_ids,
+                   flat_codes, flat_rot, flat_ids, bscales, eps, scale, k,
+                   block_q, block_c, block_d, cap_tiles, slack, interpret,
+                   use_ref):
     if use_ref:
         # The oracle replays the grid with host loops (concrete offsets),
         # so it runs eagerly — test/debug path only.
         return _ref.ivf_scan_ref(
-            tile_offs, qcodes, q, qscales, r0, flat_codes, flat_rot,
-            flat_ids, bscales, eps, scale, k=k, block_q=block_q,
-            block_c=block_c, block_d=block_d, cap_tiles=cap_tiles,
-            slack=slack,
+            tile_offs, qcodes, q, qscales, r0, top0_sq, top0_ids,
+            flat_codes, flat_rot, flat_ids, bscales, eps, scale, k=k,
+            block_q=block_q, block_c=block_c, block_d=block_d,
+            cap_tiles=cap_tiles, slack=slack,
         )
     return _ivf_scan.ivf_scan_kernel_call(
-        tile_offs, qcodes, q, qscales, r0, flat_codes, flat_rot, flat_ids,
-        bscales, eps, scale, k=k, block_q=block_q, block_c=block_c,
-        block_d=block_d, cap_tiles=cap_tiles, slack=slack,
+        tile_offs, qcodes, q, qscales, r0, top0_sq, top0_ids, flat_codes,
+        flat_rot, flat_ids, bscales, eps, scale, k=k, block_q=block_q,
+        block_c=block_c, block_d=block_d, cap_tiles=cap_tiles, slack=slack,
         interpret=interpret,
     )
 
@@ -345,6 +382,8 @@ def ivf_scan_kernel(
     flat_ids: jax.Array,  # (N_pad,) i32, -1 tail padding
     bscales: jax.Array,  # (S,) f32 corpus per-block scales
     r0_sq: jax.Array,  # (Q,) f32 seeded initial squared thresholds
+    top0_sq: jax.Array | None = None,  # (Q, K) f32 seeded top-K window
+    top0_ids: jax.Array | None = None,  # (Q, K) i32 seeded top-K ids
     *,
     k: int,
     max_bucket: int,
@@ -417,15 +456,25 @@ def ivf_scan_kernel(
     q = _pad_axis(q, 0, block_q, 0.0)
     qcodes, qscales = quantize_queries_block(q, block_d)
     r0 = _pad_axis(r0_sq.astype(jnp.float32), 0, block_q, 0.0)
+    # Optional top-K window seeds (inf/-1 = empty, the pre-seeded default):
+    # a chunked probe plan resumes the window the previous launch returned,
+    # staying bit-identical to the single-launch scan.  Pad rows seed empty
+    # like the r²=0 pad rows — they prune instantly either way.
+    if top0_sq is None:
+        t0_sq = jnp.full((q.shape[0], k), jnp.inf, jnp.float32)
+        t0_ids = jnp.full((q.shape[0], k), -1, jnp.int32)
+    else:
+        t0_sq = _pad_axis(top0_sq.astype(jnp.float32), 0, block_q, jnp.inf)
+        t0_ids = _pad_axis(top0_ids.astype(jnp.int32), 0, block_q, -1)
 
     tile_offs = build_window_offsets(
         window_starts, window_rows, block_c=block_c, cap_tiles=cap_tiles,
         n_pad=n_pad)
 
     top_sq, top_ids, stats = _ivf_scan_call(
-        tile_offs, qcodes, q, qscales, r0, flat_codes, flat_rot, flat_ids,
-        bscales, eps, scale, k, block_q, block_c, block_d, cap_tiles, slack,
-        interpret, use_ref,
+        tile_offs, qcodes, q, qscales, r0, t0_sq, t0_ids, flat_codes,
+        flat_rot, flat_ids, bscales, eps, scale, k, block_q, block_c,
+        block_d, cap_tiles, slack, interpret, use_ref,
     )
     return top_sq[:qn], top_ids[:qn], stats[:qn]
 

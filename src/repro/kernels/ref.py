@@ -129,6 +129,8 @@ def ivf_scan_ref(
     q_rot: jax.Array,  # (Q, D) f32
     qscales: jax.Array,  # (Q, S) f32
     r0_sq: jax.Array,  # (Q,) f32
+    top0_sq: jax.Array,  # (Q, K) f32 seeded top-K window (inf = empty)
+    top0_ids: jax.Array,  # (Q, K) i32 seeded top-K ids (-1 = empty)
     flat_codes: jax.Array,  # (N_pad, D) int8
     flat_rot: jax.Array,  # (N_pad, D) f32
     flat_ids: jax.Array,  # (N_pad,) i32
@@ -182,8 +184,8 @@ def ivf_scan_ref(
     trace = []
     for i in range(q_tiles):
         qs = slice(i * block_q, (i + 1) * block_q)
-        t_sq = jnp.full((block_q, k), jnp.inf)
-        t_ids = jnp.full((block_q, k), -1, jnp.int32)
+        t_sq = jnp.asarray(top0_sq[qs], jnp.float32)
+        t_ids = jnp.asarray(top0_ids[qs], jnp.int32)
         rsq = r0_sq[qs].reshape(-1, 1).astype(jnp.float32)
         st = jnp.zeros((block_q, 6), jnp.float32)
         last_off = None  # last issued offset — the kernel's reuse cursor

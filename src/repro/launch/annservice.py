@@ -17,10 +17,12 @@ bound-qualified candidates touches the fp corpus for exact refinement.
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -33,7 +35,9 @@ from repro.distributed.collectives import hierarchical_topk
 
 __all__ = ["build_search_step", "build_graph_engine",
            "build_sharded_graph_engine", "search_input_specs",
-           "autotune_refine_budget", "FUSED_BLOCK_C"]
+           "autotune_refine_budget", "FUSED_BLOCK_C",
+           "ContinuousGraphEngine", "ContinuousIVFEngine", "RetiredQuery",
+           "SLOPolicy", "parse_slo", "slo_effort", "slo_signal"]
 
 # Candidate-tile rows of the fused megakernel route; serve.py's fetch
 # report normalizes its per-wave figures with the same constant.
@@ -579,7 +583,10 @@ def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
             (q_tiles, num_waves, cap_tiles))
         flat_ids = jnp.arange(n_local, dtype=jnp.int32)
         top_sq, top_ids, stats = ivf_scan_kernel_call(
-            offs, qcodes, qf, qscales, r0, codes, corpus, flat_ids,
+            offs, qcodes, qf, qscales, r0,
+            jnp.full((q, k), jnp.inf, jnp.float32),
+            jnp.full((q, k), -1, jnp.int32),
+            codes, corpus, flat_ids,
             bscales, eps, scale, k=k, block_q=block_q, block_c=block_c,
             block_d=block_d, cap_tiles=cap_tiles,
             interpret=not on_tpu())
@@ -623,3 +630,639 @@ def build_search_step(svc: ServiceConfig, mesh, *, two_phase: bool = True,
         out_specs=(P(), P()),
         check_vma=False,
     )
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engines: mid-walk admission over the fused scans
+# ---------------------------------------------------------------------------
+
+
+def slo_signal(r_prev: float, r_new: float) -> float:
+    """Observed DCO threshold-tightening rate over one wave, in [0, 1].
+
+    0 means the wave-start r² did not move (a stalling walk); 1 means it
+    collapsed — or became finite from an unseeded ``inf``, the strongest
+    tightening a wave can report.  Pure host arithmetic on the wave-start
+    thresholds the driver already computes; the kernel never sees it."""
+    if not math.isfinite(r_prev):
+        return 1.0 if math.isfinite(r_new) else 0.0
+    if r_prev <= 0.0:
+        return 0.0
+    return float(min(max(1.0 - r_new / r_prev, 0.0), 1.0))
+
+
+def slo_effort(signal: float, lo: float, hi: float) -> float:
+    """Map a [0, 1] urgency signal onto an effort dial in [lo, hi].
+
+    Monotone nondecreasing in ``signal`` and clamped to the [lo, hi] band —
+    the two adaptation properties tests/test_continuous.py asserts.  With
+    ``lo == hi`` the dial is a constant, which is how an SLO policy
+    degenerates to the fixed-parameter engine bit-for-bit."""
+    if hi < lo:
+        raise ValueError(f"slo_effort needs hi >= lo, got lo={lo} hi={hi}")
+    s = min(max(float(signal), 0.0), 1.0)
+    return lo + (hi - lo) * s
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOPolicy:
+    """Per-query effort adaptation from the threshold-tightening rate.
+
+    ``lo``/``hi`` bound the host-side effort dial — the frontier ``expand``
+    of the graph walk, the probe allowance of the IVF scan.  A walk whose
+    threshold stalls (low :func:`slo_signal`) is pushed toward ``hi`` so it
+    converges inside its latency budget; a fast-tightening walk coasts at
+    ``lo``.  ``stall_waves`` (optional) retires a query early after that
+    many consecutive waves without any tightening — the ``serve.retire.
+    stall`` path.  Adaptation touches ONLY host dials, never the kernel's
+    screen threshold, so every returned distance is still exact; what it
+    trades away is the batch oracle's bit-identity (a query may walk a
+    narrower or wider frontier than the fixed engine).  ``slo=None`` (the
+    ``--slo off`` default) bypasses the policy entirely and stays
+    bit-identical to the fixed-parameter engine."""
+
+    lo: float
+    hi: float
+    stall_waves: int | None = None
+
+    def __post_init__(self):
+        if self.hi < self.lo:
+            raise ValueError(
+                f"SLOPolicy needs hi >= lo, got lo={self.lo} hi={self.hi}")
+        if self.stall_waves is not None and self.stall_waves < 1:
+            raise ValueError(
+                f"SLOPolicy stall_waves must be >= 1, got {self.stall_waves}")
+
+    def dial(self, tightening: float) -> float:
+        """Effort for one wave: monotone NONincreasing in the tightening
+        signal (stalling → more effort), bounded to [lo, hi]."""
+        return slo_effort(1.0 - tightening, self.lo, self.hi)
+
+
+def parse_slo(spec) -> SLOPolicy | None:
+    """Parse a ``--slo`` CLI spec: ``off``/``none``/empty → None,
+    ``LO:HI`` or ``LO:HI:STALL_WAVES`` → :class:`SLOPolicy`."""
+    if spec is None or isinstance(spec, SLOPolicy):
+        return spec
+    s = str(spec).strip().lower()
+    if s in ("", "off", "none"):
+        return None
+    parts = s.split(":")
+    if len(parts) not in (2, 3):
+        raise ValueError(
+            f"--slo spec {spec!r}: want LO:HI, LO:HI:STALL_WAVES, or 'off'")
+    stall = int(parts[2]) if len(parts) == 3 else None
+    return SLOPolicy(lo=float(parts[0]), hi=float(parts[1]),
+                     stall_waves=stall)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetiredQuery:
+    """One query leaving the continuous engine: its results, its ledger,
+    and why it retired (``frontier`` = converged, ``budget`` = wave budget
+    exhausted, ``stall`` = SLO stall cutoff)."""
+
+    handle: int
+    dists: np.ndarray  # (K,)
+    ids: np.ndarray  # (K,)
+    stats: object  # GraphScanStats | FusedScanStats, qn=1 ledger
+    waves: int
+    reason: str
+    degraded: bool
+
+
+class ContinuousGraphEngine:
+    """Mid-walk admission over the batched beam-scan megakernel.
+
+    Every live query occupies its OWN ``block_q`` query tile — the query in
+    row 0, pad rows exactly as the batch driver pads a one-query batch
+    (``_prep_wave_state(index, q[None], ...)``) — and each wave stacks the
+    live tiles into one launch, padded to a power-of-two tile count
+    (``pow2_bucket``) so compiled shapes stay logarithmic in the live-set
+    size.  The megakernel grid's query dimension is "parallel" and a tile
+    reads only its own blocks (``-1`` frontier steps fully predicated), so
+    the stacked launch is bit-identical, per tile, to launching each query
+    alone: for ANY admission schedule, retirement order, and bucket
+    compaction sequence, every query returns exactly the ids, distances,
+    and byte ledgers of ``search_graph_fused(index, q[None], ...)`` serving
+    it solo — the interleaving-invariance contract
+    tests/test_continuous.py fuzzes.
+
+    ``num_shards > 1`` runs the host-simulated sharded walk per wave:
+    per-shard slab launches with the wave-start threshold FROZEN
+    (``tighten=False``), windows merged via ``merge_shard_windows`` and
+    bitmaps OR'd — the ``search_graph_sharded`` schedule, whose solo
+    comparator is the ``num_shards=1, use_ref=True`` oracle.  Each wave
+    consults the chaos harness for dead shards: queries admitted after a
+    death start from the degraded state (fallback entry, tombstoned
+    bitmap — bit-identical to the degraded solo oracle); queries mid-walk
+    at the death get the dead ranges OR'd into their bitmaps and finish
+    degraded (their history straddles the transition, so no solo oracle
+    exists for them — they are flagged, not dropped).
+
+    ``slo`` (an :class:`SLOPolicy` or ``--slo`` spec) adapts each query's
+    frontier ``expand`` from its threshold-tightening rate and optionally
+    retires stalled walks early; ``None`` keeps the engine bit-identical
+    to the fixed-parameter batch oracle.
+    """
+
+    def __init__(self, index, *, k: int, ef: int = 48, expand: int = 2,
+                 block_q: int | None = None, seed_r: bool = False,
+                 decoupled: bool = True, route_mult: float = 1.0,
+                 max_waves: int = 64, num_shards: int = 1, slo=None,
+                 interpret: bool | None = None, use_ref: bool = False):
+        from repro.index.graph import shard_graph_nodes
+        from repro.kernels.ops import graph_vis_words, min_block_q, on_tpu
+
+        if not index.has_fused:
+            raise ValueError(
+                "continuous graph serving needs build_graph(..., "
+                "quant='int8')")
+        if not 1 <= k <= ef:
+            raise ValueError(f"need 1 <= k <= ef, got k={k} ef={ef}")
+        if block_q is None:
+            block_q = min_block_q(jnp.int8) if on_tpu() else 8
+        self.index = index
+        self.k = k
+        self.ef = ef
+        self.expand = expand
+        self.block_q = block_q
+        self.seed_r = seed_r
+        self.decoupled = decoupled
+        self.route_mult = route_mult
+        self.max_waves = max_waves
+        self.num_shards = num_shards
+        self.slo = parse_slo(slo)
+        self.interpret = interpret
+        self.use_ref = use_ref
+        self.thresh_col = (k - 1) if decoupled else (ef - 1)
+        n = index.corpus_rot.shape[0]
+        self._n = n
+        self._dim = n and index.corpus_rot.shape[1]
+        self._words = graph_vis_words(n)
+        self._ranges = shard_graph_nodes(n, num_shards)
+        a_block = index.adj_block
+        if num_shards == 1:
+            self._slabs = [(index.adj_rot, index.adj_codes, index.adj_ids)]
+        else:
+            self._slabs = [
+                (index.adj_rot[b * a_block: (b + c) * a_block],
+                 index.adj_codes[b * a_block: (b + c) * a_block],
+                 index.adj_ids[b * a_block: (b + c) * a_block])
+                for b, c in self._ranges
+            ]
+        self._slots: dict[int, dict] = {}
+        self._next = 0
+        self._tombs: tuple = ()
+        self._wave_idx = 0
+
+    # -- live-set management -------------------------------------------------
+
+    def live_count(self) -> int:
+        return len(self._slots)
+
+    def _sync_chaos(self) -> None:
+        """Refresh dead-shard tombstones from the chaos harness.  Newly
+        dead ranges are OR'd into every LIVE walk's bitmap (mid-walk
+        failover: the walk continues over the surviving corpus, flagged
+        degraded); admissions after this point start from the degraded
+        wave-0 state and stay bit-identical to the degraded solo oracle."""
+        from repro.index.graph import dead_shard_tombstones
+        from repro.kernels.ops import pack_vis_ranges
+        from repro.runtime.chaos import current_chaos
+
+        dead = current_chaos().dead_shards(self.num_shards)
+        tombs = dead_shard_tombstones(self._n, self.num_shards, dead) \
+            if dead else ()
+        if tombs == self._tombs:
+            return
+        fresh = tuple(t for t in tombs if t not in self._tombs)
+        self._tombs = tombs
+        if fresh:
+            bits = pack_vis_ranges(self._n, fresh)
+            for slot in self._slots.values():
+                slot["vis"] = slot["vis"] | bits[None, :]
+                slot["degraded"] = True
+
+    def admit(self, row: np.ndarray) -> int:
+        """Admit one query mid-walk; returns its handle.  The slot state is
+        freshly seeded from ``_prep_wave_state`` on the one-query batch —
+        a backfilled slot can never inherit a retired walk's beam window
+        (the stale-slot hazard tests/test_continuous.py regresses)."""
+        from repro.index.graph import _prep_wave_state
+        from repro.kernels.ops import pack_vis_ranges
+
+        self._sync_chaos()
+        row = np.asarray(row, np.float32)
+        (_inv, q_sorted, _qt, _qp, _qn, entry, top_sq, top_ids,
+         seed_vec) = _prep_wave_state(
+            self.index, jnp.asarray(row[None]), k=self.k, ef=self.ef,
+            block_q=self.block_q, seed_r=self.seed_r,
+            tombstones=self._tombs)
+        vis = np.zeros((1, self._words), np.int32)
+        if self._tombs:
+            vis |= pack_vis_ranges(self._n, self._tombs)[None, :]
+        h = self._next
+        self._next += 1
+        self._slots[h] = dict(
+            q=q_sorted, top_sq=top_sq, top_ids=top_ids, seed=seed_vec,
+            vis=vis, entry=entry, depth=0,
+            sem=np.zeros((4,), np.float64),
+            s1=np.zeros((self.num_shards,), np.float64),
+            s2=np.zeros((self.num_shards,), np.float64), exch=0.0,
+            degraded=bool(self._tombs), r_prev=math.inf, stall=0,
+            expand=self.expand)
+        return h
+
+    def shed(self, handle: int) -> None:
+        """Drop a live walk without retiring it (deadline/error sheds)."""
+        self._slots.pop(handle, None)
+
+    def _finish(self, handle: int, reason: str) -> RetiredQuery:
+        from repro.index.graph import _graph_sharded_stats, _graph_stats
+
+        slot = self._slots.pop(handle)
+        top_sq_f = slot["top_sq"][:1]  # the qn=1 crop of the batch epilogue
+        top_ids_f = slot["top_ids"][:1]
+        dists = np.sqrt(np.maximum(top_sq_f, 0.0))[0, : self.k]
+        ids = top_ids_f[0, : self.k].astype(np.int32)
+        if self.num_shards == 1:
+            stats = _graph_stats(
+                self.index, dim=self._dim, k=self.k, seed_r=self.seed_r,
+                qn=1, waves=slot["depth"], sem=slot["sem"],
+                s1_tiles=float(slot["s1"].sum()),
+                s2_slabs=float(slot["s2"].sum()))
+        else:
+            stats = _graph_sharded_stats(
+                self.index, dim=self._dim, k=self.k, seed_r=self.seed_r,
+                qn=1, waves=slot["depth"], sem=slot["sem"],
+                s1_tiles=slot["s1"], s2_slabs=slot["s2"],
+                exch_bytes=slot["exch"], num_shards=self.num_shards,
+                tombstones=self._tombs)
+        return RetiredQuery(handle=handle, dists=dists, ids=ids, stats=stats,
+                            waves=slot["depth"], reason=reason,
+                            degraded=slot["degraded"])
+
+    # -- the wave step -------------------------------------------------------
+
+    def step(self) -> list[RetiredQuery]:
+        """Run ONE frontier wave over the whole live set; returns the
+        queries that retired (converged frontier, wave budget, or SLO
+        stall).  Safe to call with an empty live set (returns [])."""
+        from repro.index.graph import merge_shard_windows, _select_wave
+        from repro.kernels.ops import (
+            graph_scan_kernel, pad_live_rows, pow2_bucket, unpack_vis,
+        )
+        from repro.quant.accounting import frontier_exchange_bytes
+        from repro.runtime.chaos import current_chaos
+
+        self._sync_chaos()
+        chaos = current_chaos()
+        chaos.on_wave(self._wave_idx)
+        self._wave_idx += 1
+        retired: list[RetiredQuery] = []
+        live: list[int] = []
+        picks: dict[int, tuple[list, np.ndarray]] = {}
+        for h in list(self._slots):
+            slot = self._slots[h]
+            if slot["depth"] >= self.max_waves:
+                retired.append(self._finish(h, "budget"))
+                continue
+            r0 = np.minimum(slot["seed"], slot["top_sq"][:, self.thresh_col])
+            if slot["depth"] == 0:
+                sel = [slot["entry"]]
+            else:
+                sel = _select_wave(
+                    slot["top_sq"], slot["top_ids"],
+                    unpack_vis(slot["vis"], self._n),
+                    r0 * self.route_mult, q_tiles=1, block_q=self.block_q,
+                    qn=1, expand=slot["expand"], ef=self.ef)[0]
+                if not sel:
+                    retired.append(self._finish(h, "frontier"))
+                    continue
+            picks[h] = (sel, r0)
+            live.append(h)
+        if not live:
+            return retired
+
+        bq = self.block_q
+        n_live = len(live)
+        bucket = pow2_bucket(n_live)
+        steps = pow2_bucket(max(len(picks[h][0]) for h in live))
+        offs = np.full((n_live, steps), -1, np.int32)
+        for t, h in enumerate(live):
+            offs[t, : len(picks[h][0])] = picks[h][0]
+        # Stack the live tiles and pad to the pow2 bucket with the exact
+        # inert values the batch driver pads one-query batches with.
+        q_cat = pad_live_rows(
+            np.concatenate([self._slots[h]["q"] for h in live]),
+            n_live * bq, bucket * bq, fill=0.0)
+        top_sq = pad_live_rows(
+            np.concatenate([self._slots[h]["top_sq"] for h in live]),
+            n_live * bq, bucket * bq, fill=np.inf)
+        top_ids = pad_live_rows(
+            np.concatenate([self._slots[h]["top_ids"] for h in live]),
+            n_live * bq, bucket * bq, fill=-1)
+        r0_cat = pad_live_rows(
+            np.concatenate([picks[h][1] for h in live]),
+            n_live * bq, bucket * bq, fill=0.0)
+        vis_cat = pad_live_rows(
+            np.concatenate([self._slots[h]["vis"] for h in live]),
+            n_live, bucket, fill=0)
+        offs = pad_live_rows(offs, n_live, bucket, fill=-1)
+
+        with current_tracer().span("continuous.wave", live=n_live,
+                                   bucket=bucket, steps=steps):
+            if self.num_shards == 1:
+                sq, ids_, st, vis_out = graph_scan_kernel(
+                    self.index.estimator, jnp.asarray(q_cat),
+                    jnp.asarray(offs), jnp.asarray(top_sq),
+                    jnp.asarray(top_ids), jnp.asarray(r0_cat),
+                    *self._slabs[0], self.index.gscales,
+                    jnp.asarray(vis_cat), vis_base=0, vis_nodes=self._n,
+                    ef=self.ef, thresh_col=self.thresh_col, block_q=bq,
+                    block_c=self.index.adj_block,
+                    block_d=self.index.scan_block_d, tighten=True,
+                    interpret=self.interpret, use_ref=self.use_ref)
+                t_sq = np.asarray(sq, np.float32)
+                t_ids = np.asarray(ids_, np.int32)
+                t_vis = np.asarray(vis_out, np.int32)
+                st_sh = np.asarray(st)[None]
+            else:
+                g_sq, g_ids, g_vis, g_st = [], [], [], []
+                for s, (b, c) in enumerate(self._ranges):
+                    own = (offs >= b) & (offs < b + c)
+                    offs_s = np.where(own, offs - b, -1).astype(np.int32)
+                    sq_s, id_s, st_s, vis_s = graph_scan_kernel(
+                        self.index.estimator, jnp.asarray(q_cat),
+                        jnp.asarray(offs_s), jnp.asarray(top_sq),
+                        jnp.asarray(top_ids), jnp.asarray(r0_cat),
+                        *self._slabs[s], self.index.gscales,
+                        jnp.asarray(vis_cat), vis_base=b, vis_nodes=self._n,
+                        ef=self.ef, thresh_col=self.thresh_col, block_q=bq,
+                        block_c=self.index.adj_block,
+                        block_d=self.index.scan_block_d, tighten=False,
+                        interpret=self.interpret, use_ref=self.use_ref)
+                    g_sq.append(jnp.asarray(sq_s))
+                    g_ids.append(jnp.asarray(id_s))
+                    g_vis.append(np.asarray(vis_s, np.int32))
+                    g_st.append(np.asarray(st_s))
+                m_sq, m_ids = merge_shard_windows(
+                    jnp.stack(g_sq), jnp.stack(g_ids), ef=self.ef)
+                t_sq = np.asarray(m_sq, np.float32)
+                t_ids = np.asarray(m_ids, np.int32)
+                t_vis = g_vis[0]
+                for v in g_vis[1:]:
+                    t_vis = t_vis | v
+                st_sh = np.stack(g_st)
+
+        stalled: list[int] = []
+        for t, h in enumerate(live):
+            slot = self._slots[h]
+            slot["top_sq"] = t_sq[t * bq: (t + 1) * bq]
+            slot["top_ids"] = t_ids[t * bq: (t + 1) * bq]
+            slot["vis"] = t_vis[t: t + 1]
+            for s in range(self.num_shards):
+                # Row 0 of the slot's tile is its only real query — the
+                # same qn=1 crop the solo oracle's epilogue sums over.
+                slot["sem"] += st_sh[s][t * bq, :4]
+                slot["s1"][s] += float(st_sh[s][t * bq, 5])
+                slot["s2"][s] += float(st_sh[s][t * bq, 4])
+            if self.num_shards > 1:
+                # The exchange ledger a SOLO run of this query would book
+                # this wave: its own frontier width sets the step count,
+                # not the stacked launch's max (the stacked step table is
+                # an execution artifact; -1 steps ship nothing).
+                slot["exch"] += frontier_exchange_bytes(
+                    num_shards=self.num_shards, queries=bq, ef=self.ef,
+                    vis_words=self._words, q_tiles=1,
+                    steps=pow2_bucket(len(picks[h][0])))
+            slot["depth"] += 1
+            r_new = float(np.minimum(slot["seed"],
+                                     slot["top_sq"][:, self.thresh_col])[0])
+            if self.slo is not None:
+                rho = slo_signal(slot["r_prev"], r_new)
+                slot["expand"] = max(1, int(round(self.slo.dial(rho))))
+                slot["stall"] = 0 if rho > 0.0 else slot["stall"] + 1
+                if (self.slo.stall_waves is not None
+                        and slot["stall"] >= self.slo.stall_waves):
+                    stalled.append(h)
+            slot["r_prev"] = r_new
+        for h in stalled:
+            retired.append(self._finish(h, "stall"))
+        return retired
+
+
+class ContinuousIVFEngine:
+    """Mid-walk admission over the fused IVF wave scan.
+
+    Each live query owns one ``block_q`` tile (query in row 0, pad rows
+    zero — the wrapper's own padding for a one-query batch) and a probe
+    plan computed at admission by the SAME tile router the batch path uses
+    (``index.ivf._route_tiles`` on the one-query batch).  Every engine
+    wave advances each live slot by ``probe_chunk`` probes of its plan in
+    one stacked launch: the slot's top-K window and threshold re-enter the
+    kernel through the seed inputs, and the in-kernel carry rule
+    ``r² ← min(r², top_sq[k-1])`` makes the chunked sequence bit-identical
+    to the batch oracle's single launch (exact resume; needs the aligned
+    CSR layout — ``128 % block_c == 0`` — which the builder guarantees).
+    A slot retires when its probe allowance is consumed.  Stats columns
+    are integer-valued f32, so summing chunk totals host-side reproduces
+    the single-launch counters exactly and the per-query
+    ``FusedScanStats`` ledger compares ``==`` against
+    ``search_ivf_fused(index, q[None], ...)``.
+
+    ``slo`` adapts the per-query probe allowance within [lo, hi] from the
+    tightening rate (and can retire stalled scans early); ``None`` keeps
+    the engine bit-identical to the fixed-``n_probe`` oracle.
+    """
+
+    def __init__(self, index, *, k: int, n_probe: int = 8,
+                 block_q: int | None = None, block_c: int = 128,
+                 probe_chunk: int = 2, seed_r: bool = True, slo=None,
+                 interpret: bool | None = None, use_ref: bool = False):
+        from repro.kernels.ops import min_block_q, on_tpu
+
+        if not index.has_fused:
+            raise ValueError(
+                "continuous IVF serving needs build_ivf(..., quant='int8')")
+        if 128 % block_c:
+            raise ValueError(
+                f"continuous IVF serving needs 128 % block_c == 0 (aligned "
+                f"CSR windows are what make the chunked probe carry exact), "
+                f"got block_c={block_c}")
+        if probe_chunk < 1:
+            raise ValueError(f"probe_chunk must be >= 1, got {probe_chunk}")
+        if block_q is None:
+            block_q = min_block_q(jnp.int8) if on_tpu() else 8
+        self.index = index
+        self.k = k
+        self.n_probe = min(n_probe, index.n_clusters)
+        self.block_q = block_q
+        self.block_c = block_c
+        self.probe_chunk = probe_chunk
+        self.seed_r = seed_r
+        self.slo = parse_slo(slo)
+        self.interpret = interpret
+        self.use_ref = use_ref
+        self._slots: dict[int, dict] = {}
+        self._next = 0
+        self._wave_idx = 0
+
+    def live_count(self) -> int:
+        return len(self._slots)
+
+    def admit(self, row: np.ndarray) -> int:
+        from repro.index.ivf import _quant_seed_rsq, _route_tiles
+
+        row = np.asarray(row, np.float32)
+        q_rot = self.index.estimator.rotate(jnp.asarray(row[None]))
+        (_o, _i, q_sorted, tile_buckets, window_starts,
+         window_rows) = _route_tiles(self.index, q_rot,
+                                     n_probe=self.n_probe,
+                                     block_q=self.block_q)
+        if self.seed_r:
+            r0 = float(_quant_seed_rsq(
+                self.index, q_sorted, tile_buckets[:, 0], self.k)[0])
+        else:
+            r0 = math.inf
+        h = self._next
+        self._next += 1
+        self._slots[h] = dict(
+            q=np.asarray(q_sorted, np.float32),
+            starts=np.asarray(window_starts, np.int32)[0],
+            rows=np.asarray(window_rows, np.int32)[0],
+            pos=0, r=r0,
+            top_sq=np.full((1, self.k), np.inf, np.float32),
+            top_ids=np.full((1, self.k), -1, np.int32),
+            sem=np.zeros((4,), np.float64), s1=0.0, s2=0.0,
+            n_eff=self.n_probe, launches=0, r_prev=math.inf, stall=0)
+        return h
+
+    def shed(self, handle: int) -> None:
+        self._slots.pop(handle, None)
+
+    def _finish(self, handle: int, reason: str) -> RetiredQuery:
+        from repro.index.ivf import _fused_stats
+
+        slot = self._slots.pop(handle)
+        dists = np.sqrt(np.maximum(slot["top_sq"][0], 0.0))
+        ids = slot["top_ids"][0].astype(np.int32)
+        # One synthesized qn=1 stats row re-enters the shared epilogue:
+        # cols 0-3 are the chunk-summed counters, cols 4-5 the fetch
+        # totals (block_q=1 makes the tile stride-sample the row itself).
+        st_row = np.asarray(
+            [[*slot["sem"], slot["s2"], slot["s1"]]], np.float32)
+        stats = _fused_stats(self.index, st_row, qn=1, k=self.k, block_q=1,
+                             block_c=self.block_c, seed_r=self.seed_r)
+        return RetiredQuery(handle=handle, dists=dists, ids=ids, stats=stats,
+                            waves=slot["launches"], reason=reason,
+                            degraded=False)
+
+    def step(self) -> list[RetiredQuery]:
+        """Advance every live slot by one probe chunk in one stacked
+        launch; returns the slots whose probe allowance is consumed."""
+        from repro.kernels.ops import (
+            ivf_scan_kernel, pad_live_rows, pow2_bucket,
+        )
+        from repro.runtime.chaos import current_chaos
+
+        current_chaos().on_wave(self._wave_idx)
+        self._wave_idx += 1
+        retired: list[RetiredQuery] = []
+        live: list[int] = []
+        for h in list(self._slots):
+            slot = self._slots[h]
+            if slot["pos"] >= slot["n_eff"]:
+                retired.append(self._finish(h, "frontier"))
+                continue
+            live.append(h)
+        if not live:
+            return retired
+
+        bq = self.block_q
+        chunk = self.probe_chunk
+        n_live = len(live)
+        bucket = pow2_bucket(n_live)
+        dim = self._slots[live[0]]["q"].shape[1]
+
+        def tile(slot):
+            q = np.zeros((bq, dim), np.float32)
+            q[0] = slot["q"][0]
+            return q
+
+        def window(slot, arr):
+            out = np.zeros((chunk,), np.int32)
+            span = arr[slot["pos"]: slot["pos"] + chunk]
+            out[: len(span)] = span
+            # Past-the-plan probes carry (start=0, rows=0): zero-row
+            # aligned windows span zero tiles, so the kernel ships nothing.
+            if arr is slot["rows"]:
+                out[len(span):] = 0
+            return out
+
+        q_cat = pad_live_rows(
+            np.concatenate([tile(self._slots[h]) for h in live]),
+            n_live * bq, bucket * bq, fill=0.0)
+        r0_cat = np.zeros((n_live * bq,), np.float32)
+        t0_sq = np.full((n_live * bq, self.k), np.inf, np.float32)
+        t0_ids = np.full((n_live * bq, self.k), -1, np.int32)
+        starts = np.zeros((n_live, chunk), np.int32)
+        rows = np.zeros((n_live, chunk), np.int32)
+        for t, h in enumerate(live):
+            slot = self._slots[h]
+            r0_cat[t * bq] = min(slot["r"], np.float32(np.inf)) \
+                if math.isfinite(slot["r"]) else np.inf
+            t0_sq[t * bq] = slot["top_sq"][0]
+            t0_ids[t * bq] = slot["top_ids"][0]
+            span = slot["starts"][slot["pos"]: slot["pos"] + chunk]
+            starts[t, : len(span)] = span
+            rows[t, : len(span)] = \
+                slot["rows"][slot["pos"]: slot["pos"] + chunk]
+        r0_cat = pad_live_rows(r0_cat, n_live * bq, bucket * bq, fill=0.0)
+        t0_sq = pad_live_rows(t0_sq, n_live * bq, bucket * bq, fill=np.inf)
+        t0_ids = pad_live_rows(t0_ids, n_live * bq, bucket * bq, fill=-1)
+        starts = pad_live_rows(starts, n_live, bucket, fill=0)
+        rows = pad_live_rows(rows, n_live, bucket, fill=0)
+
+        with current_tracer().span("continuous.wave", live=n_live,
+                                   bucket=bucket, chunk=chunk):
+            top_sq, top_ids, st = ivf_scan_kernel(
+                self.index.estimator, jnp.asarray(q_cat),
+                jnp.asarray(starts), jnp.asarray(rows), self.index.flat_rot,
+                self.index.flat_codes, self.index.flat_ids,
+                self.index.bscales, jnp.asarray(r0_cat),
+                jnp.asarray(t0_sq), jnp.asarray(t0_ids), k=self.k,
+                max_bucket=self.index.max_bucket, block_q=bq,
+                block_c=self.block_c, block_d=self.index.scan_block_d,
+                starts_aligned=True, interpret=self.interpret,
+                use_ref=self.use_ref)
+        top_sq = np.asarray(top_sq, np.float32)
+        top_ids = np.asarray(top_ids, np.int32)
+        st = np.asarray(st)
+
+        stalled: list[int] = []
+        for t, h in enumerate(live):
+            slot = self._slots[h]
+            slot["top_sq"] = top_sq[t * bq: t * bq + 1]
+            slot["top_ids"] = top_ids[t * bq: t * bq + 1]
+            slot["sem"] += st[t * bq, :4]
+            slot["s1"] += float(st[t * bq, 5])
+            slot["s2"] += float(st[t * bq, 4])
+            # The in-kernel carry rule, replayed host-side: the next
+            # chunk's r0 is exactly where the single launch would be.
+            slot["r"] = min(slot["r"], float(slot["top_sq"][0, self.k - 1]))
+            slot["pos"] += chunk
+            slot["launches"] += 1
+            if self.slo is not None:
+                rho = slo_signal(slot["r_prev"], slot["r"])
+                slot["n_eff"] = max(1, min(self.n_probe,
+                                           int(round(self.slo.dial(rho)))))
+                slot["stall"] = 0 if rho > 0.0 else slot["stall"] + 1
+                if (self.slo.stall_waves is not None
+                        and slot["stall"] >= self.slo.stall_waves):
+                    stalled.append(h)
+            slot["r_prev"] = slot["r"]
+        for h in stalled:
+            retired.append(self._finish(h, "stall"))
+        return retired

@@ -74,6 +74,29 @@ def main() -> None:
                          "mesh with cross-shard frontier exchange between "
                          "waves (bit-identical to the single-host walk; "
                          "the corpus node count must divide evenly)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching (--index graph): queries join "
+                         "the beam-walk wave step mid-flight instead of "
+                         "waiting for a full batch — per-query wave depth, "
+                         "pow2-bucketed live-set compaction, retirement as "
+                         "queries converge, admission from the request queue "
+                         "each wave.  --graph-shards N>1 runs the "
+                         "host-simulated sharded walk (per-wave slab "
+                         "launches + window merge, no device mesh).  Every "
+                         "retired query is bit-identical to a solo "
+                         "batch-path run (docs/SERVING.md §8)")
+    ap.add_argument("--max-live", type=int, default=0, metavar="SLOTS",
+                    help="live-walk slot cap of --continuous (admission "
+                         "stops while the live set is full); 0 = --batch")
+    ap.add_argument("--slo", default="off", metavar="LO:HI[:STALL]",
+                    help="SLO effort adaptation of --continuous: per-query "
+                         "frontier expand adapts within [LO, HI] from the "
+                         "observed threshold-tightening rate (a stalling "
+                         "walk gets MORE effort so it converges inside its "
+                         "budget); optional :STALL retires a walk after "
+                         "STALL consecutive no-tightening waves.  'off' "
+                         "(default) keeps the fixed-parameter engine — "
+                         "bit-identical to batch serving")
     ap.add_argument("--verify-graph-oracle", action="store_true",
                     help="before serving, assert the --index graph engine "
                          "returns bit-identical ids to the single-host "
@@ -168,6 +191,13 @@ def main() -> None:
         raise SystemExit("--mutate-rate serves a single replica "
                          "(--graph-shards 1): mutable growth slabs are not "
                          "corpus-sharded")
+    if args.continuous and args.index != "graph":
+        raise SystemExit("--continuous requires --index graph (mid-walk "
+                         "admission is a property of the wave-synchronous "
+                         "beam walk)")
+    if args.continuous and args.mutate_rate > 0:
+        raise SystemExit("--continuous and --mutate-rate are separate "
+                         "drills; run them in separate serves")
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
@@ -361,13 +391,18 @@ def main() -> None:
         def collect(done):
             t_done = time.perf_counter()
             for req in done:
-                ms = (t_done - req.enqueued_at) * 1e3
+                # completed_at is stamped by the scheduler at the serving
+                # instant — under continuous batching one drain completes
+                # requests across many waves, so collect-time would
+                # overstate every latency but the last one's.
+                t_req = req.completed_at or t_done
+                ms = (t_req - req.enqueued_at) * 1e3
                 lat.observe(ms)
                 lat_ms.append(ms)
                 # Served but late: the answer arrived past its budget (the
                 # request was already dispatched when the budget expired —
                 # shedding it mid-engine would waste the batch).
-                if req.deadline_at is not None and t_done > req.deadline_at:
+                if req.deadline_at is not None and t_req > req.deadline_at:
                     reg.counter("serve.deadline.missed").add(1)
 
         t0 = time.perf_counter()
@@ -752,6 +787,188 @@ def main() -> None:
 
         bq = min_block_q(jnp.int8) if on_tpu() else 8
         sharded = args.graph_shards > 1
+
+        if args.continuous:
+            # Continuous-batching route: the ContinuousGraphEngine walks
+            # every live query in its own block_q tile, admits new queries
+            # into free slots each wave, and retires converged walks — the
+            # ContinuousScheduler front end drives admission, deadlines,
+            # shedding, retries, and the closed admission ledger.
+            from repro.index.graph import (
+                dead_shard_tombstones, search_graph_fused,
+                search_graph_sharded)
+            from repro.launch.annservice import (
+                ContinuousGraphEngine, parse_slo)
+            from repro.runtime.scheduler import ContinuousScheduler
+
+            max_live = args.max_live or svc.query_batch
+            engine = ContinuousGraphEngine(
+                gidx, k=svc.k, ef=args.ef, expand=args.expand, block_q=bq,
+                num_shards=args.graph_shards, slo=parse_slo(args.slo))
+            reg.gauge("serve.continuous.max_live").set(float(max_live))
+
+            # Warm-up: one solo walk pays the first kernel compile outside
+            # every timed window (later live-set bucket sizes compile
+            # incrementally; pow2 bucketing keeps that set logarithmic).
+            t0w = time.perf_counter()
+            with current_tracer().span("serve.warmup"):
+                engine.admit(np.asarray(
+                    synthetic_queries(1, svc.dim, corpus, seed=999),
+                    np.float32)[0])
+                while engine.live_count():
+                    engine.step()
+            compile_ms = (time.perf_counter() - t0w) * 1e3
+            reg.gauge("serve.compile_ms").set(compile_ms)
+
+            def run_solo(vq):
+                """Serve each row of ``vq`` concurrently through a fresh
+                SLO-off engine (the oracle walks at fixed expand, so the
+                effort dial must not move underneath the comparison);
+                returns (dists, ids, retired) in row order."""
+                veng = ContinuousGraphEngine(
+                    gidx, k=svc.k, ef=args.ef, expand=args.expand,
+                    block_q=bq, num_shards=args.graph_shards, slo=None)
+                hmap = {veng.admit(vq[i]): i for i in range(len(vq))}
+                out = {}
+                while veng.live_count():
+                    for rq in veng.step():
+                        out[hmap[rq.handle]] = rq
+                return (np.stack([out[i].dists for i in range(len(vq))]),
+                        np.stack([out[i].ids for i in range(len(vq))]),
+                        [out[i] for i in range(len(vq))])
+
+            if args.verify_graph_oracle:
+                # The interleaving-invariance acceptance check, live: NV
+                # queries walking CONCURRENTLY through the engine must be
+                # bit-identical to each one served alone by the batch
+                # oracle (one-query batch = the solo walk).
+                nv = min(svc.query_batch, 8)
+                vq = np.asarray(
+                    synthetic_queries(nv, svc.dim, corpus, seed=77),
+                    np.float32)
+                dv, iv, _ = run_solo(vq)
+                oracle = [
+                    search_graph_sharded(
+                        gidx, jnp.asarray(vq[i: i + 1]),
+                        num_shards=args.graph_shards, k=svc.k, ef=args.ef,
+                        expand=args.expand, block_q=bq, use_ref=True)
+                    if sharded else
+                    search_graph_fused(
+                        gidx, jnp.asarray(vq[i: i + 1]), k=svc.k,
+                        ef=args.ef, expand=args.expand, block_q=bq,
+                        use_ref=True)
+                    for i in range(nv)]
+                io = np.concatenate([np.asarray(o[1]) for o in oracle])
+                do = np.concatenate([np.asarray(o[0]) for o in oracle])
+                if not np.array_equal(iv, io):
+                    raise SystemExit(
+                        "continuous serving ids diverge from the solo "
+                        "batch oracle")
+                if not np.allclose(dv, do, rtol=5e-5, atol=1e-5):
+                    raise SystemExit(
+                        "continuous serving distances diverge from the "
+                        "solo batch oracle")
+                print(f"verify: continuous engine (shards="
+                      f"{args.graph_shards}) bit-identical to the solo "
+                      f"batch oracle ({nv} interleaved queries)")
+
+            sched = ContinuousScheduler(
+                engine, max_live=max_live,
+                max_queue_rows=args.queue_watermark,
+                max_retries=args.retries,
+                retry_backoff_s=args.retry_backoff_ms / 1e3, registry=reg)
+            payloads = make_payloads(lambda q: np.asarray(q, np.float32))
+            reqs, gts, dt, lat_ms = drive(sched, payloads)
+            served, shed = serve_accounting(sched, reqs, gts)
+            recalls = request_recalls(served)
+            rec = float(np.mean(recalls)) if recalls else 0.0
+            total_q = sum(len(g) for _, g in served)
+            for st in sched.scan_stats:
+                if sharded:
+                    record_graph_sharded(reg, st, queries=1)
+                else:
+                    record_graph_scan(reg, st, queries=1)
+            s = sched.stats
+            occupancy = s["live_rows"] / max(s["waves"], 1)
+            mean_depth = (np.mean([st.waves for st in sched.scan_stats])
+                          if sched.scan_stats else 0.0)
+            fetched = (np.mean([st.fetched_bytes_per_query
+                                for st in sched.scan_stats])
+                       if sched.scan_stats else 0.0)
+            lat_note = latency_note(lat_ms)
+            deg_note, deg_report = degraded_split(served)
+
+            if args.verify_degraded_oracle:
+                # The mid-walk failover acceptance check: queries ADMITTED
+                # after a shard death (the live set was mid-walk when it
+                # hit) must be bit-identical to the surviving-corpus
+                # oracle — same contract as the batch route, but admission
+                # happens into a degraded RUNNING engine.
+                dead = current_chaos().dead_shards(args.graph_shards)
+                if not dead:
+                    print("verify-degraded: no dead shards at end of run; "
+                          "nothing to check")
+                else:
+                    tombs = dead_shard_tombstones(n, args.graph_shards,
+                                                  dead)
+                    nv = min(svc.query_batch, 8)
+                    vq = np.asarray(
+                        synthetic_queries(nv, svc.dim, corpus, seed=78),
+                        np.float32)
+                    dv, iv, rqs = run_solo(vq)
+                    if not all(r.degraded for r in rqs):
+                        raise SystemExit(
+                            "post-death admissions not flagged degraded")
+                    oracle = [search_graph_sharded(
+                        gidx, jnp.asarray(vq[i: i + 1]), num_shards=1,
+                        k=svc.k, ef=args.ef, expand=args.expand,
+                        block_q=bq, use_ref=True, tombstones=tombs)
+                        for i in range(nv)]
+                    io = np.concatenate([np.asarray(o[1]) for o in oracle])
+                    do = np.concatenate([np.asarray(o[0]) for o in oracle])
+                    if not np.array_equal(iv, io):
+                        raise SystemExit(
+                            "continuous degraded serving ids diverge from "
+                            "the surviving-corpus oracle")
+                    if not np.allclose(dv, do, rtol=5e-5, atol=1e-5):
+                        raise SystemExit(
+                            "continuous degraded serving distances diverge "
+                            "from the surviving-corpus oracle")
+                    print(f"verify-degraded: continuous admissions with "
+                          f"dead shards {sorted(dead)} bit-identical to "
+                          f"the surviving-corpus oracle ({nv} queries)")
+
+            print(f"method={args.method} index=graph mode=continuous "
+                  f"shards={args.graph_shards} corpus={n} "
+                  f"requests={len(served)}/{s['submitted']} rows={total_q} "
+                  f"ef={args.ef} expand={args.expand} max_live={max_live} "
+                  f"slo={args.slo} QPS={total_q/dt:.0f} "
+                  f"recall@{svc.k}={rec:.3f} compile_ms={compile_ms:.0f} "
+                  f"waves={s['waves']} occupancy={occupancy:.1f} "
+                  f"mean_depth={mean_depth:.1f} "
+                  f"admission(admitted={s['admitted']} "
+                  f"retired={s['retired']} shed={s['admission_shed']}) "
+                  f"retire(frontier={s['retire_frontier']} "
+                  f"budget={s['retire_budget']} "
+                  f"stall={s['retire_stall']}) "
+                  f"fetched_B_per_q={fetched:.0f}"
+                  f"{shed_note(sched)}{deg_note}{lat_note}")
+            report = {"qps": total_q / dt, "recall": rec,
+                      "compile_ms": compile_ms,
+                      "waves": float(s["waves"]),
+                      "occupancy": float(occupancy),
+                      "mean_depth": float(mean_depth),
+                      "fetched_bytes_per_query": float(fetched),
+                      "queries": total_q,
+                      "admitted": s["admitted"], "retired": s["retired"],
+                      "admission_shed": s["admission_shed"],
+                      "requests_submitted": s["submitted"],
+                      "requests_served": s["served"],
+                      "requests_shed": shed}
+            report.update(deg_report)
+            emit(report)
+            return
+
         if sharded:
             gmesh = make_mesh_compat((args.graph_shards,), ("shard",))
             engine = build_sharded_graph_engine(

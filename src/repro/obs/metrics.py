@@ -34,7 +34,7 @@ import re
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "merge_snapshots",
-    "LATENCY_BUCKETS_MS",
+    "LATENCY_BUCKETS_MS", "WAVE_DEPTH_BUCKETS",
     "record_fused_scan", "record_graph_scan", "record_graph_sharded",
     "record_fused_serve_totals", "record_mutations", "record_drift",
     "record_dco_method", "DCO_METHODS",
@@ -49,6 +49,11 @@ LATENCY_BUCKETS_MS = (
     0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0,
     1000.0, 2000.0, 5000.0, 10000.0, 30000.0, 60000.0,
 )
+
+# Wave-depth bucket bounds for ``serve.wave.depth`` (waves a query walked
+# before retiring under continuous batching): powers of two up to the
+# ``max_waves`` budget ceiling the graph engines default to.
+WAVE_DEPTH_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0)
 
 
 class Counter:

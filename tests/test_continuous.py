@@ -1,0 +1,529 @@
+"""Interleaving-invariance harness for the continuous-batching engines.
+
+The contract under test (ISSUE 10's tentpole): for ANY arrival schedule,
+retirement order, and pow2 live-set compaction, every query served by a
+``ContinuousGraphEngine`` / ``ContinuousIVFEngine`` produces top-K ids,
+distances, and fetch ledgers BIT-IDENTICAL to the same query served alone
+by the batch-synchronous oracle (``search_graph_fused`` /
+``search_ivf_fused`` on a one-row batch).  The kernels make this possible
+because a query's block_q tile never reads another tile's state — the
+harness makes it enforced.
+
+Deterministic seeded schedules run everywhere; the hypothesis properties
+widen the schedule space when the optional dependency is installed (see
+tests/_hypothesis_compat.py).
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.data.pipeline import synthetic_queries
+from repro.index.graph import (GraphScanStats, GraphShardedStats,
+                               dead_shard_tombstones, search_graph_fused,
+                               search_graph_sharded)
+from repro.index.ivf import search_ivf_fused
+from repro.launch.annservice import (ContinuousGraphEngine,
+                                     ContinuousIVFEngine, SLOPolicy,
+                                     parse_slo, slo_effort, slo_signal)
+
+K, EF, BQ = 5, 16, 8
+
+
+# ---------------------------------------------------------------------------
+# harness helpers
+
+
+def assert_stats_equal(got, want, *, label=""):
+    """Exact (bit-identical) ledger equality — the stats columns are
+    integer-valued f32 accumulators, so chunked/interleaved accounting must
+    reproduce the solo launch to the bit, not within a tolerance."""
+    assert type(got) is type(want), (label, type(got), type(want))
+    for field, g, w in zip(got._fields, got, want):
+        assert g == w, f"{label} stats.{field}: {g} != {w}"
+
+
+def run_schedule(engine, rows, schedule):
+    """Feed ``rows`` into ``engine`` per the arrival ``schedule`` (number
+    of admissions before each wave; leftovers admitted at the end), step
+    until drained, and return {row_index: RetiredQuery}."""
+    pending = list(range(len(rows)))
+    hmap, out = {}, {}
+    arrivals = list(schedule)
+    while pending or engine.live_count():
+        n_admit = arrivals.pop(0) if arrivals else len(pending)
+        for _ in range(min(n_admit, len(pending))):
+            i = pending.pop(0)
+            hmap[engine.admit(rows[i])] = i
+        if engine.live_count() == 0:
+            continue
+        for rq in engine.step():
+            out[hmap[rq.handle]] = rq
+    assert len(out) == len(rows)
+    return out
+
+
+def graph_oracle(gidx, row, **kw):
+    d, i, st_ = search_graph_fused(gidx, np.asarray(row)[None], k=K, ef=EF,
+                                   block_q=BQ, use_ref=True, **kw)
+    return np.asarray(d)[0], np.asarray(i)[0], st_
+
+
+@pytest.fixture(scope="module")
+def cont_queries(aniso_corpus):
+    return np.asarray(
+        synthetic_queries(10, 64, aniso_corpus, seed=7), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: interleaving invariance, graph route
+
+
+def check_graph_schedule(graph_idx, rows, schedule, **engine_kw):
+    _, gidx = graph_idx
+    eng = ContinuousGraphEngine(gidx, k=K, ef=EF, block_q=BQ, use_ref=True,
+                                **engine_kw)
+    out = run_schedule(eng, rows, schedule)
+    for i, rq in out.items():
+        d, ids, st_ = graph_oracle(gidx, rows[i])
+        assert np.array_equal(rq.ids, ids), f"query {i} ids diverge"
+        assert np.array_equal(rq.dists, d), f"query {i} dists diverge"
+        assert rq.reason == "frontier"
+        assert not rq.degraded
+        assert_stats_equal(rq.stats, st_, label=f"query {i}")
+
+
+def test_graph_interleaved_equals_solo_oracle(graph_idx, cont_queries):
+    """Staggered arrivals: every query joins mid-walk of the previous ones
+    yet retires with the solo oracle's exact results and ledgers."""
+    check_graph_schedule(graph_idx, cont_queries, [2, 1, 0, 3, 1, 2, 1])
+
+
+def test_graph_burst_then_trickle(graph_idx, cont_queries):
+    """Burst admission (live set straight to its pow2 bucket), then
+    single-query backfills as walks retire."""
+    check_graph_schedule(graph_idx, cont_queries,
+                         [6, 0, 0, 1, 1, 1, 1])
+
+
+def test_graph_random_schedules_seeded(graph_idx, cont_queries):
+    """Three seeded random schedules — the deterministic stand-in for the
+    hypothesis property on images without the optional dependency."""
+    for seed in (0, 1, 2):
+        rng = np.random.default_rng(seed)
+        sched = rng.integers(0, 4, size=8).tolist()
+        check_graph_schedule(graph_idx, cont_queries, sched)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=4), min_size=1,
+                max_size=12))
+def test_graph_interleaving_invariance_property(graph_idx, cont_queries,
+                                                schedule):
+    """For ANY arrival schedule the interleaved walk is bit-identical to
+    the solo oracle (the tentpole property, full schedule space)."""
+    check_graph_schedule(graph_idx, cont_queries[:6], schedule)
+
+
+def test_graph_retirement_order_independent(graph_idx, cont_queries):
+    """Retirement (and the bucket compaction it triggers) must not
+    perturb surviving walks: results are identical whether a query runs
+    with churn around it or in a steady full batch."""
+    check_graph_schedule(graph_idx, cont_queries, [1] * 10)
+    check_graph_schedule(graph_idx, cont_queries, [10])
+
+
+# ---------------------------------------------------------------------------
+# tentpole: interleaving invariance, IVF route
+
+
+def check_ivf_schedule(fused_idx, rows, schedule, *, probe_chunk,
+                       n_probe=6):
+    eng = ContinuousIVFEngine(fused_idx, k=K, n_probe=n_probe, block_q=BQ,
+                              probe_chunk=probe_chunk, use_ref=True)
+    out = run_schedule(eng, rows, schedule)
+    for i, rq in out.items():
+        d, ids, st_ = search_ivf_fused(
+            fused_idx, np.asarray(rows[i])[None], k=K, n_probe=n_probe,
+            block_q=BQ, use_ref=True)
+        assert np.array_equal(rq.ids, np.asarray(ids)[0]), \
+            f"query {i} ids diverge"
+        assert np.array_equal(rq.dists, np.asarray(d)[0]), \
+            f"query {i} dists diverge"
+        assert_stats_equal(rq.stats, st_, label=f"query {i}")
+
+
+def test_ivf_interleaved_equals_solo_oracle(fused_idx, cont_queries):
+    check_ivf_schedule(fused_idx, cont_queries, [2, 1, 0, 3, 1, 2, 1],
+                       probe_chunk=2)
+
+
+def test_ivf_probe_chunk_invariance(fused_idx, cont_queries):
+    """The chunked-probe walk carries r across chunks with the in-kernel
+    tightening rule, so ANY chunk size books the single-launch ledger."""
+    for chunk in (1, 2, 3, 6):
+        check_ivf_schedule(fused_idx, cont_queries[:5], [2, 1, 2],
+                           probe_chunk=chunk)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=3), min_size=1,
+                max_size=8),
+       st.integers(min_value=1, max_value=4))
+def test_ivf_interleaving_invariance_property(fused_idx, cont_queries,
+                                              schedule, chunk):
+    check_ivf_schedule(fused_idx, cont_queries[:5], schedule,
+                       probe_chunk=chunk)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: sharded walks and mid-walk failover
+
+
+def test_graph_sharded_continuous_equals_sharded_oracle(graph_idx,
+                                                        cont_queries):
+    """Host-sim sharded continuous serving reproduces the sharded solo
+    oracle exactly — including the per-shard fetch tuples and the
+    cross-shard exchange ledger (booked with the SOLO wave's frontier
+    sizes, not the stacked launch's)."""
+    _, gidx = graph_idx
+    eng = ContinuousGraphEngine(gidx, k=K, ef=EF, block_q=BQ,
+                                num_shards=2, use_ref=True)
+    out = run_schedule(eng, cont_queries[:6], [2, 1, 1, 2])
+    for i, rq in out.items():
+        d, ids, st_ = search_graph_sharded(
+            gidx, np.asarray(cont_queries[i])[None], num_shards=2, k=K,
+            ef=EF, block_q=BQ, use_ref=True)
+        assert np.array_equal(rq.ids, np.asarray(ids)[0])
+        assert np.array_equal(rq.dists, np.asarray(d)[0])
+        assert isinstance(rq.stats, GraphShardedStats)
+        assert_stats_equal(rq.stats, st_, label=f"query {i}")
+
+
+def test_graph_midwalk_shard_death_admits_degraded(graph_idx,
+                                                   cont_queries):
+    """Queries admitted AFTER a mid-walk shard death retire bit-identical
+    to the surviving-corpus (tombstoned) solo oracle, and every walk that
+    saw the death is flagged degraded."""
+    from repro.runtime.chaos import parse_chaos, use_chaos
+
+    _, gidx = graph_idx
+    with use_chaos(parse_chaos("shard_death:shard=1:after=2")):
+        from repro.runtime.chaos import current_chaos
+
+        eng = ContinuousGraphEngine(gidx, k=K, ef=EF, block_q=BQ,
+                                    num_shards=2, use_ref=True)
+        pre = [eng.admit(cont_queries[i]) for i in range(3)]
+        out = {}
+        hmap = {h: i for i, h in enumerate(pre)}
+        waves = 0
+        post_admitted = False
+        while eng.live_count() or not post_admitted:
+            current_chaos().on_engine_step()
+            if (current_chaos().dead_shards(2) and not post_admitted):
+                for j in range(3, 6):
+                    hmap[eng.admit(cont_queries[j])] = j
+                post_admitted = True
+            for rq in eng.step():
+                out[hmap[rq.handle]] = rq
+            waves += 1
+            assert waves < 200, "walks failed to converge under chaos"
+        dead = current_chaos().dead_shards(2)
+        assert dead == frozenset({1})
+        tombs = dead_shard_tombstones(eng._n, 2, dead)
+        for j in range(3, 6):
+            rq = out[j]
+            assert rq.degraded
+            d, ids, _ = search_graph_sharded(
+                gidx, np.asarray(cont_queries[j])[None], num_shards=1,
+                k=K, ef=EF, block_q=BQ, use_ref=True, tombstones=tombs)
+            assert np.array_equal(rq.ids, np.asarray(ids)[0]), \
+                f"post-death admit {j} diverges from tombstoned oracle"
+            assert np.array_equal(rq.dists, np.asarray(d)[0])
+        assert all(out[i].degraded for i in range(3)), \
+            "mid-walk queries that saw the death must be flagged"
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: pow2 compaction must not recompile on same-width backfill
+
+
+def test_backfill_does_not_recompile_and_reseeds(graph_idx, cont_queries):
+    """Two identical churny schedules through fresh engines: the second
+    pass must add ZERO jit-cache entries (pow2 bucketing means backfill
+    at a seen width relaunches a compiled kernel) and must reproduce the
+    first pass exactly (backfilled slots start freshly seeded, not with a
+    predecessor's window)."""
+    from repro.kernels.graph_scan import graph_scan_kernel_call
+
+    _, gidx = graph_idx
+    schedule = [2, 0, 1, 1]
+    rows = cont_queries[:4]
+
+    def run():
+        eng = ContinuousGraphEngine(gidx, k=K, ef=EF, block_q=BQ,
+                                    interpret=True, use_ref=False)
+        return run_schedule(eng, rows, schedule)
+
+    first = run()
+    cache0 = graph_scan_kernel_call._cache_size()
+    second = run()
+    assert graph_scan_kernel_call._cache_size() == cache0, \
+        "same-width backfill recompiled the wave kernel"
+    for i in range(len(rows)):
+        assert np.array_equal(first[i].ids, second[i].ids)
+        assert np.array_equal(first[i].dists, second[i].dists)
+        assert first[i].waves == second[i].waves
+        assert_stats_equal(first[i].stats, second[i].stats,
+                           label=f"rerun query {i}")
+
+
+def test_graph_compiled_kernel_matches_ref(graph_idx, cont_queries):
+    """One interpreted-kernel case: the continuous walk through the real
+    (interpreted) megakernel equals the pure-reference walk."""
+    _, gidx = graph_idx
+    eng = ContinuousGraphEngine(gidx, k=K, ef=EF, block_q=BQ,
+                                interpret=True, use_ref=False)
+    out = run_schedule(eng, cont_queries[:4], [2, 1, 1])
+    for i, rq in out.items():
+        d, ids, st_ = graph_oracle(gidx, cont_queries[i])
+        assert np.array_equal(rq.ids, ids)
+        assert np.allclose(rq.dists, d, rtol=5e-5, atol=1e-5)
+        assert rq.stats.waves == st_.waves
+
+
+def test_ivf_compiled_kernel_matches_ref(fused_idx, cont_queries):
+    eng = ContinuousIVFEngine(fused_idx, k=K, n_probe=6, block_q=BQ,
+                              probe_chunk=2, interpret=True, use_ref=False)
+    out = run_schedule(eng, cont_queries[:4], [2, 1, 1])
+    for i, rq in out.items():
+        d, ids, _ = search_ivf_fused(
+            fused_idx, np.asarray(cont_queries[i])[None], k=K, n_probe=6,
+            block_q=BQ, use_ref=True)
+        assert np.array_equal(rq.ids, np.asarray(ids)[0])
+        assert np.allclose(rq.dists, np.asarray(d)[0], rtol=5e-5,
+                           atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: closed admission ledger under churny arrivals
+
+
+def _ledger_asserts(sched):
+    s = sched.stats
+    assert s["submitted"] == s["served"] + s["shed_queue"] \
+        + s["shed_deadline"] + s["shed_error"], s
+    assert s["admitted"] == s["retired"] + s["admission_shed"], s
+    assert s["retire_frontier"] + s["retire_budget"] + s["retire_stall"] \
+        == s["retired"], s
+
+
+def make_sched(gidx, **kw):
+    from repro.runtime.scheduler import ContinuousScheduler
+
+    eng = ContinuousGraphEngine(gidx, k=K, ef=EF, block_q=BQ, use_ref=True)
+    return ContinuousScheduler(eng, **kw)
+
+
+def test_scheduler_ledger_closes_clean(graph_idx, cont_queries):
+    from repro.obs.metrics import MetricsRegistry
+
+    _, gidx = graph_idx
+    reg = MetricsRegistry()
+    sched = make_sched(gidx, max_live=4, registry=reg)
+    reqs = [sched.submit(cont_queries[i:i + 2]) for i in range(0, 10, 2)]
+    served = sched.drain()
+    assert len(served) == 5 and all(r.status == "served" for r in reqs)
+    _ledger_asserts(sched)
+    s = sched.stats
+    assert s["admitted"] == s["retired"] == 10
+    assert s["admission_shed"] == 0 and s["retired"] == 10
+    snap = reg.snapshot()
+    assert snap["serve.admission.admitted"]["value"] == 10
+    assert snap["serve.admission.retired"]["value"] == 10
+    assert snap["serve.wave.depth"]["count"] == 10
+    for req in reqs:
+        d, ids, _ = graph_oracle(gidx, req.queries[0])
+        assert np.array_equal(req.result[1][0], ids)
+
+
+def test_scheduler_ledger_closes_under_midwalk_sheds(graph_idx,
+                                                     cont_queries):
+    """A step_error with retries exhausted sheds every live request MID
+    WALK — their in-flight admissions must close the ledger as
+    admission_shed, and the grand total must still foot."""
+    from repro.runtime.chaos import parse_chaos, use_chaos
+
+    _, gidx = graph_idx
+    with use_chaos(parse_chaos("step_error:after=2:count=1")):
+        sched = make_sched(gidx, max_live=4, max_retries=0)
+        for i in range(0, 10, 2):
+            sched.submit(cont_queries[i:i + 2])
+        sched.drain()
+    _ledger_asserts(sched)
+    s = sched.stats
+    assert s["shed_error"] > 0, "drill never fired"
+    assert s["admission_shed"] > 0, "no walk was live at the error"
+    assert s["served"] + s["shed_error"] == 5
+
+
+def test_scheduler_ledger_closes_under_deadline_sheds(graph_idx,
+                                                      cont_queries):
+    _, gidx = graph_idx
+    sched = make_sched(gidx, max_live=2)
+    sched.submit(cont_queries[:2])
+    # Already-expired deadline: shed at admission time, never walks.
+    sched.submit(cont_queries[2:4], deadline_s=-1.0)
+    sched.drain()
+    _ledger_asserts(sched)
+    s = sched.stats
+    assert s["shed_deadline"] == 1 and s["served"] == 1
+    assert s["admitted"] == s["retired"] == 2
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=3), min_size=1,
+                max_size=5),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=0, max_value=6))
+def test_scheduler_ledger_property(graph_idx, cont_queries, sizes,
+                                   max_live, err_after):
+    """Closed ledger for ANY request mix, live-set cap, and drill timing:
+    submitted == served + Σ shed, and every admission is accounted."""
+    from repro.runtime.chaos import parse_chaos, use_chaos
+
+    _, gidx = graph_idx
+    spec = f"step_error:after={err_after}:count=1"
+    with use_chaos(parse_chaos(spec)):
+        sched = make_sched(gidx, max_live=max_live, max_retries=0)
+        at = 0
+        for sz in sizes:
+            sched.submit(cont_queries[at:at + sz])
+            at = (at + sz) % (len(cont_queries) - 3)
+        sched.drain()
+    _ledger_asserts(sched)
+
+
+def test_scheduler_retry_absorbs_step_error(graph_idx, cont_queries):
+    from repro.runtime.chaos import parse_chaos, use_chaos
+
+    _, gidx = graph_idx
+    with use_chaos(parse_chaos("step_error:after=1:count=1")):
+        sched = make_sched(gidx, max_live=4, max_retries=2,
+                           retry_backoff_s=0.0)
+        reqs = [sched.submit(cont_queries[i:i + 2])
+                for i in range(0, 6, 2)]
+        sched.drain()
+    assert sched.stats["retries"] >= 1
+    assert all(r.status == "served" for r in reqs)
+    _ledger_asserts(sched)
+    for req in reqs:
+        d, ids, _ = graph_oracle(gidx, req.queries[0])
+        assert np.array_equal(req.result[1][0], ids), \
+            "retry re-entered a different walk state"
+
+
+# ---------------------------------------------------------------------------
+# satellite 4: SLO-aware effort adaptation
+
+
+def test_slo_effort_monotone_and_bounded():
+    lo, hi = 1.0, 6.0
+    prev = None
+    for sig in np.linspace(0.0, 1.0, 21):
+        e = slo_effort(float(sig), lo, hi)
+        assert lo <= e <= hi
+        if prev is not None:
+            assert e >= prev - 1e-12, "effort must rise with urgency"
+        prev = e
+    assert slo_effort(0.0, lo, hi) == lo
+    assert slo_effort(1.0, lo, hi) == hi
+    # The policy dial inverts: STALLING (tightening → 0) means MORE effort.
+    pol = SLOPolicy(lo=lo, hi=hi)
+    assert pol.dial(0.0) == hi and pol.dial(1.0) == lo
+    assert pol.dial(0.2) >= pol.dial(0.8)
+    with pytest.raises(ValueError):
+        slo_effort(0.5, 4.0, 2.0)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=50, deadline=None)
+@given(st.floats(min_value=0.0, max_value=1.0),
+       st.floats(min_value=0.0, max_value=1.0),
+       st.floats(min_value=1.0, max_value=4.0),
+       st.floats(min_value=4.0, max_value=16.0))
+def test_slo_effort_property(a, b, lo, hi):
+    ea, eb = slo_effort(a, lo, hi), slo_effort(b, lo, hi)
+    assert lo <= ea <= hi and lo <= eb <= hi
+    if a <= b:
+        assert ea <= eb + 1e-9
+
+
+def test_slo_signal_edge_cases():
+    assert slo_signal(np.inf, 3.0) == 1.0
+    assert slo_signal(np.inf, np.inf) == 0.0
+    assert slo_signal(0.0, 0.0) == 0.0
+    assert slo_signal(4.0, 2.0) == 0.5
+    assert slo_signal(4.0, 4.0) == 0.0
+    assert slo_signal(4.0, 8.0) == 0.0  # clipped — never negative
+
+
+def test_parse_slo():
+    assert parse_slo("off") is None and parse_slo("") is None
+    assert parse_slo("none") is None
+    pol = parse_slo("1:4")
+    assert pol.lo == 1.0 and pol.hi == 4.0 and pol.stall_waves is None
+    pol = parse_slo("2:8:3")
+    assert pol.stall_waves == 3
+    with pytest.raises(ValueError):
+        parse_slo("4:1")
+
+
+def test_slo_pinned_dial_is_bit_identical(graph_idx, cont_queries):
+    """lo == hi == expand pins the dial: the SLO machinery runs but every
+    wave resolves to the static effort, so the walk (ids, dists, ledgers)
+    is bit-identical to slo=None — the `--slo off` contract."""
+    _, gidx = graph_idx
+    pinned = SLOPolicy(lo=2.0, hi=2.0)
+    sched = [2, 1, 0, 2, 1]
+    eng_a = ContinuousGraphEngine(gidx, k=K, ef=EF, block_q=BQ,
+                                  expand=2, slo=pinned, use_ref=True)
+    eng_b = ContinuousGraphEngine(gidx, k=K, ef=EF, block_q=BQ,
+                                  expand=2, slo=None, use_ref=True)
+    out_a = run_schedule(eng_a, cont_queries[:6], sched)
+    out_b = run_schedule(eng_b, cont_queries[:6], sched)
+    for i in range(6):
+        assert np.array_equal(out_a[i].ids, out_b[i].ids)
+        assert np.array_equal(out_a[i].dists, out_b[i].dists)
+        assert_stats_equal(out_a[i].stats, out_b[i].stats,
+                           label=f"slo-pinned query {i}")
+
+
+def test_slo_stall_retires_with_reason(graph_idx, cont_queries):
+    """stall_waves=1 retires a walk the first time the threshold fails to
+    tighten — the retire reason and ledger counter must say so."""
+    _, gidx = graph_idx
+    eng = ContinuousGraphEngine(
+        gidx, k=K, ef=EF, block_q=BQ,
+        slo=SLOPolicy(lo=1.0, hi=2.0, stall_waves=1), use_ref=True)
+    out = run_schedule(eng, cont_queries[:4], [4])
+    reasons = {rq.reason for rq in out.values()}
+    assert "stall" in reasons, f"no stall retirement observed: {reasons}"
+
+
+def test_ivf_slo_dials_probes(fused_idx, cont_queries):
+    """On the IVF route the dial caps effective probes: a pinned-low dial
+    must do no more probe launches than the undialed walk, and stay
+    well-formed (k results, sorted distances)."""
+    eng = ContinuousIVFEngine(fused_idx, k=K, n_probe=8, block_q=BQ,
+                              probe_chunk=1,
+                              slo=SLOPolicy(lo=2.0, hi=2.0), use_ref=True)
+    out = run_schedule(eng, cont_queries[:3], [3])
+    for rq in out.values():
+        assert rq.ids.shape == (K,)
+        assert np.all(np.diff(rq.dists) >= -1e-6)
+        assert rq.waves <= 3  # ceil(2 probes / chunk 1) + admission wave

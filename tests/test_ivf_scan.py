@@ -276,7 +276,9 @@ def test_demand_paged_elision_property(seed, n, d):
                                      cap_tiles=cap_tiles, n_pad=n_pad)
     *_, trace = ivf_scan_ref(
         tile_offs, qcodes, jnp.asarray(np.pad(q, ((0, 0), (0, d_pad - d)))),
-        qscales, r0, jnp.asarray(flat_codes), jnp.asarray(flat_rot),
+        qscales, r0, jnp.full((qn, k), jnp.inf),
+        jnp.full((qn, k), -1, jnp.int32),
+        jnp.asarray(flat_codes), jnp.asarray(flat_rot),
         jnp.asarray(flat_ids), bs, eps, scale, k=k, block_q=block_q,
         block_c=block_c, block_d=block_d, cap_tiles=cap_tiles,
         return_trace=True)
@@ -323,7 +325,8 @@ def test_fused_passed_parity_vs_dco_screen(fused_idx, aniso_corpus, queries):
     r0 = jnp.full((qn,), jnp.inf)
 
     *_, trace = ivf_scan_ref(
-        tile_offs, qcodes, q_rot, qscales, r0, idx.flat_codes, idx.flat_rot,
+        tile_offs, qcodes, q_rot, qscales, r0, jnp.full((qn, 10), jnp.inf),
+        jnp.full((qn, 10), -1, jnp.int32), idx.flat_codes, idx.flat_rot,
         idx.flat_ids, idx.bscales, eps, scale, k=10, block_q=block_q,
         block_c=block_c, block_d=block_d, cap_tiles=cap_tiles,
         return_trace=True)
